@@ -1,0 +1,37 @@
+"""Table II — predictor accuracy (MSE / MAPE) per model family x circuit.
+
+MAPE is reported only where the paper reports it (M_ED, M_L) — value
+predictors and static energy have near-zero-centered targets that
+over-amplify percentage error (paper §V).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bank, emit, save_json
+
+_MAPE_OK = {"M_ED", "M_L"}
+
+
+def run(full: bool = False):
+    rows = []
+    for circuit in ("crossbar", "lif"):
+        b = bank(circuit, full)
+        for pname, fams in b.results.items():
+            for fam, r in fams.items():
+                row = dict(circuit=circuit, predictor=pname, family=fam,
+                           test_mse=r.test_mse,
+                           test_mape=(r.test_mape if pname in _MAPE_OK
+                                      else None),
+                           selected=bool(b.selected[pname] is r.model))
+                rows.append(row)
+                mape = f"mape={r.test_mape:.2f}%" if pname in _MAPE_OK else ""
+                emit(f"table2/{circuit}/{pname}/{fam}", r.test_mse, mape)
+    save_json("table2_accuracy", rows)
+    # selected-model summary (the paper's bold entries)
+    sel = {f"{c}/{p}": fam for c in ("crossbar", "lif")
+           for p, fams in bank(c, full).results.items()
+           for fam, r in fams.items() if bank(c, full).selected[p] is r.model}
+    save_json("table2_selected", sel)
+    return rows

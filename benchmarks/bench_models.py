@@ -1,0 +1,28 @@
+"""Table I — total model training and testing times per family x circuit."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bank, emit, save_json
+
+
+def run(full: bool = False):
+    rows = []
+    for circuit in ("crossbar", "lif"):
+        b = bank(circuit, full)
+        # aggregate across the five predictors (the paper reports totals)
+        totals: dict[str, dict] = {}
+        for pname, fams in b.results.items():
+            for fam, r in fams.items():
+                t = totals.setdefault(fam, {"train_s": 0.0, "test_s": 0.0})
+                t["train_s"] += r.train_time
+                t["test_s"] += r.test_time
+        for fam, t in totals.items():
+            rows.append(dict(circuit=circuit, family=fam, **t))
+            emit(f"table1/{circuit}/{fam}/train", t["train_s"] * 1e6,
+                 f"test_s={t['test_s']:.4f}")
+    save_json("table1_model_times", rows)
+    return rows

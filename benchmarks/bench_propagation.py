@@ -1,0 +1,68 @@
+"""Table III + Fig 8 — behavioral error propagation on an N-neuron layer.
+
+LASANA-O: oracle (golden) state fed to every prediction.
+LASANA-P: predicted state fed back (the deployment mode).
+Also records per-timestep normalized MSE to verify error does not diverge.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, FULL_SCALE, bank, emit, save_json
+from repro.core.simulate import make_stimulus, run_golden, run_lasana
+
+
+def _metrics(golden, sim, spiking=True):
+    spikes_g = golden.outputs > 0.75
+    spikes_s = sim.outputs > 0.75
+    e1 = spikes_g  # dynamic events = golden spikes
+    out = {
+        "state_mse": float(np.mean((golden.states - sim.states) ** 2)),
+        "output_mse": float(np.mean((golden.outputs - sim.outputs) ** 2)),
+        "spike_acc": float(np.mean(spikes_g == spikes_s)),
+    }
+    if e1.any():
+        le = np.abs(sim.latency - golden.latency)[e1]
+        out["latency_mse"] = float(np.mean(
+            (sim.latency - golden.latency)[e1] ** 2))
+        out["latency_mape"] = float(np.mean(
+            le / np.maximum(golden.latency[e1], 1e-3)) * 100)
+        ed = (sim.energy - golden.energy)[e1] * 1e12
+        out["dyn_energy_mse_pJ2"] = float(np.mean(ed ** 2))
+        out["dyn_energy_mape"] = float(np.mean(
+            np.abs(ed) / np.maximum(golden.energy[e1] * 1e12, 1e-6)) * 100)
+    stat = ~e1
+    es = (sim.energy - golden.energy)[stat] * 1e12
+    out["stat_energy_mse_pJ2"] = float(np.mean(es ** 2))
+    return out
+
+
+def run(full: bool = False):
+    sc = FULL_SCALE if full else SCALE
+    n, t = sc["prop_neurons"], sc["prop_steps"]
+    b = bank("lif", full)
+    active, x, params = make_stimulus("lif", n, t, seed=42)
+    golden = run_golden("lif", active, x, params)
+    lasana_p = run_lasana(b, "lif", active, x, params)
+    lasana_o = run_lasana(b, "lif", active, x, params,
+                          oracle_states=golden.states)
+    rows = {
+        "n_neurons": n, "t_steps": t,
+        "LASANA-O": _metrics(golden, lasana_o),
+        "LASANA-P": _metrics(golden, lasana_p),
+    }
+    # Fig 8: per-timestep state MSE (normalized to the run mean)
+    mse_t = np.mean((golden.states - lasana_p.states) ** 2, axis=1)
+    rows["per_tick_state_mse"] = (mse_t / (mse_t.mean() + 1e-12)).tolist()
+    first = float(np.mean(mse_t[: t // 3]))
+    last = float(np.mean(mse_t[-t // 3:]))
+    rows["mse_drift_ratio_last_over_first"] = last / max(first, 1e-12)
+    save_json("table3_propagation", rows)
+    for mode in ("LASANA-O", "LASANA-P"):
+        m = rows[mode]
+        emit(f"table3/{mode}/state_mse", m["state_mse"],
+             f"spike_acc={m['spike_acc']:.4f}")
+    emit("fig8/drift_ratio", rows["mse_drift_ratio_last_over_first"],
+         "last_third/first_third per-tick state MSE")
+    return rows

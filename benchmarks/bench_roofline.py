@@ -1,0 +1,34 @@
+"""Roofline table — re-reads the dry-run JSON cache (launch/dryrun.py must
+have populated results/dryrun) and emits the per-cell roofline terms used by
+EXPERIMENTS §Roofline."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_json
+
+
+def run(full: bool = False, dryrun_dir: str = "results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        ro = r["roofline"]
+        rows.append(dict(
+            arch=r.get("arch", r.get("cell", "?")),
+            shape=r.get("shape", "-"), mesh=r.get("mesh", "-"),
+            compute_s=ro["compute_s"], memory_s=ro["memory_s"],
+            collective_s=ro["collective_s"], dominant=ro["dominant"],
+            useful_ratio=ro["useful_ratio"],
+            peak_gib=r.get("memory", {}).get("peak_live_bytes_per_device",
+                                             0) / 2 ** 30))
+        if r.get("mesh", "singlepod") == "singlepod":
+            emit(f"roofline/{rows[-1]['arch']}/{rows[-1]['shape']}",
+                 max(ro['compute_s'], ro['memory_s'], ro['collective_s']) * 1e6,
+                 f"dom={ro['dominant']} useful={ro['useful_ratio']:.3f}")
+    save_json("roofline_table", rows)
+    return rows

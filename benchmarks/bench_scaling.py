@@ -1,0 +1,54 @@
+"""Table IV — runtime scaling with layer size N.
+
+Columns mirror the paper: golden transient sim (the SPICE stand-in),
+behavioral (SV-RNM stand-in), behavioral + ML energy/latency annotation,
+standalone LASANA. Wall times exclude compilation (one warmup tick).
+
+Honesty note (EXPERIMENTS §Paper-validation): our golden integrator is a
+vectorized JAX program, orders of magnitude faster than a real SPICE solve,
+so absolute speedups are smaller than the paper's 4 orders of magnitude;
+the *scaling shape* (speedup grows with N, annotation overhead ~1%) is the
+reproducible claim.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import SCALE, FULL_SCALE, bank, emit, save_json
+from repro.core.simulate import (make_stimulus, run_behavioral, run_golden,
+                                 run_lasana)
+
+
+def _timed(fn, *args, **kw):
+    fn(*args, **kw)                       # warmup/compile
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def run(full: bool = False):
+    sc = FULL_SCALE if full else SCALE
+    b = bank("lif", full)
+    rows = []
+    for n in sc["scaling_ns"]:
+        active, x, params = make_stimulus("lif", n, sc["scaling_steps"],
+                                          seed=n)
+        g, t_gold = _timed(run_golden, "lif", active, x, params)
+        bh, t_beh = _timed(run_behavioral, "lif", active, x, params)
+        lz, t_las = _timed(run_lasana, b, "lif", active, x, params)
+        # annotation mode: behavioral states drive energy/latency predictors
+        an, t_ann = _timed(run_lasana, b, "lif", active, x, params,
+                           oracle_states=bh.states)
+        row = dict(n=n, golden_s=t_gold, behavioral_s=t_beh,
+                   annotation_extra_s=t_ann, lasana_s=t_las,
+                   speedup_vs_golden=t_gold / max(t_las, 1e-9),
+                   speedup_vs_behavioral=t_beh / max(t_las, 1e-9))
+        rows.append(row)
+        emit(f"table4/n{n}/lasana", t_las * 1e6,
+             f"golden_s={t_gold:.3f} speedup={row['speedup_vs_golden']:.1f}x")
+    save_json("table4_scaling", rows)
+    return rows

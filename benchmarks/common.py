@@ -1,0 +1,66 @@
+"""Shared benchmark plumbing: dataset/bank caching, CSV emission."""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/benchmarks")
+
+# default scale (CPU container); --full switches to paper scale
+SCALE = {
+    "crossbar_runs": 400, "lif_runs": 800, "n_steps": 125,
+    "gbdt_trees": 60, "gbdt_depth": 8, "mlp_epochs": 90,
+    "prop_neurons": 2000, "prop_steps": 100,
+    "scaling_ns": (10, 100, 1000, 5000, 20000),
+    "scaling_steps": 100,
+}
+
+FULL_SCALE = {
+    "crossbar_runs": 1000, "lif_runs": 2000, "n_steps": 125,
+    "gbdt_trees": 120, "gbdt_depth": 10, "mlp_epochs": 150,
+    "prop_neurons": 20000, "prop_steps": 100,
+    "scaling_ns": (10, 100, 1000, 5000, 20000, 200000),
+    "scaling_steps": 100,
+}
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def save_json(name: str, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(circuit: str, full: bool = False):
+    from repro.core.dataset import TestbenchConfig, build_dataset
+    sc = FULL_SCALE if full else SCALE
+    runs = sc["crossbar_runs"] if circuit == "crossbar" else sc["lif_runs"]
+    return build_dataset(circuit, TestbenchConfig(n_runs=runs,
+                                                  n_steps=sc["n_steps"]))
+
+
+@functools.lru_cache(maxsize=None)
+def bank(circuit: str, full: bool = False,
+         families: tuple = ("mean", "table", "linear", "gbdt", "mlp")):
+    """Trains all model families; caches per circuit."""
+    from repro.core.models import MODEL_FAMILIES, GBDTModel, MLPModel
+    from repro.core.predictors import PredictorBank
+    sc = FULL_SCALE if full else SCALE
+    # configure heavy families to the benchmark scale
+    MODEL_FAMILIES["gbdt"] = lambda: GBDTModel(n_trees=sc["gbdt_trees"],
+                                               max_depth=sc["gbdt_depth"])
+    MODEL_FAMILIES["mlp"] = lambda: MLPModel(max_epochs=sc["mlp_epochs"])
+    b = PredictorBank(circuit, families=families).fit(dataset(circuit, full))
+    from repro.core.models import GBDTModel as G, MLPModel as M
+    MODEL_FAMILIES["gbdt"] = G
+    MODEL_FAMILIES["mlp"] = M
+    return b

@@ -1,0 +1,48 @@
+"""Benchmark harness — one entry per paper table (+ the roofline report).
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]``
+
+Prints ``name,us_per_call,derived`` CSV lines and writes JSON records under
+results/benchmarks/.
+
+  table1   model training/testing times            (paper Table I)
+  table2   predictor accuracy MSE/MAPE             (paper Table II)
+  table3   error propagation LASANA-O vs -P + Fig8 (paper Table III)
+  table4   runtime scaling vs layer size           (paper Table IV)
+  roofline dry-run roofline terms                  (EXPERIMENTS §Roofline)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale datasets/models (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma list: table1,table2,table3,table4,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accuracy, bench_models, bench_propagation,
+                            bench_roofline, bench_scaling)
+    suites = {
+        "table1": bench_models.run,
+        "table2": bench_accuracy.run,
+        "table3": bench_propagation.run,
+        "table4": bench_scaling.run,
+        "roofline": bench_roofline.run,
+    }
+    only = [s for s in args.only.split(",") if s] or list(suites)
+    print("name,us_per_call,derived")
+    for name in only:
+        t0 = time.time()
+        suites[name](full=args.full)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Architecture exploration: every assigned LM architecture mapped onto
+32x32 analog crossbar macros with LASANA energy/latency annotation
+(the paper's purpose — §I "rapid exploration and co-design" — applied to
+modern LM workloads; see DESIGN.md §2.3).
+
+    PYTHONPATH=src python examples/explore_accelerator.py [--reduced]
+"""
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.core.dataset import TestbenchConfig, build_dataset
+from repro.core.explore import explore_arch
+from repro.core.predictors import PredictorBank
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="use reduced configs (fast)")
+    ap.add_argument("--bank-runs", type=int, default=300)
+    args = ap.parse_args()
+
+    print("== training crossbar surrogates ==")
+    ds = build_dataset("crossbar", TestbenchConfig(n_runs=args.bank_runs,
+                                                   n_steps=100))
+    bank = PredictorBank("crossbar", families=("linear", "gbdt")).fit(ds)
+
+    print("== mapping architectures onto analog CiM macros ==\n")
+    get = reduced_config if args.reduced else get_config
+    for arch in ARCH_IDS:
+        rep = explore_arch(get(arch), bank)
+        print("  " + rep.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: the whole LASANA flow in two minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. golden-simulate a randomized LIF testbench (the SPICE stand-in)
+2. extract E1/E2/E3 events, train the five surrogate predictors
+3. replay a fresh 1,000-neuron layer through Algorithm 1
+4. compare LASANA vs golden: spike accuracy, energy error, runtime
+"""
+
+import numpy as np
+
+from repro.core.dataset import TestbenchConfig, build_dataset
+from repro.core.predictors import PredictorBank
+from repro.core.simulate import make_stimulus, run_golden, run_lasana
+
+
+def main():
+    print("== 1/4: dataset generation (golden transient sim) ==")
+    ds = build_dataset("lif", TestbenchConfig(n_runs=300, n_steps=100))
+    print(f"   events: {ds.counts()}  ({ds.gen_seconds:.1f}s)")
+
+    print("== 2/4: training surrogate predictors ==")
+    bank = PredictorBank("lif", families=("linear", "mlp")).fit(ds, verbose=True)
+
+    print("== 3/4: Algorithm 1 over a 1,000-neuron layer, 100 ticks ==")
+    active, x, params = make_stimulus("lif", 1000, 100, seed=123)
+    golden = run_golden("lif", active, x, params)
+    surro = run_lasana(bank, "lif", active, x, params)
+
+    print("== 4/4: LASANA vs golden ==")
+    acc = float(np.mean((golden.outputs > 0.75) == (surro.outputs > 0.75)))
+    e_err = abs(surro.energy.sum() - golden.energy.sum()) / golden.energy.sum()
+    print(f"   spike accuracy : {acc:.2%}")
+    print(f"   total-energy err: {e_err:.2%}")
+    print(f"   wall: golden {golden.wall_seconds:.2f}s vs "
+          f"LASANA {surro.wall_seconds:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end LM training driver: a ~100M-parameter dense model trained for
+a few hundred steps on the synthetic corpus through the full production
+stack (mesh/rules, microbatched train step, prefetching pipeline, async
+checkpoints, watchdog, auto-resume).
+
+    PYTHONPATH=src python examples/train_lm_100m.py --steps 300
+
+On this CPU container a 100M model runs ~5 s/step; pass --tiny for a
+25M model at ~1 s/step. On a real pod the same driver shards over
+whatever mesh the launcher finds.
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import parse_args, train
+
+MODEL_100M = dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                  d_ff=2048, vocab=32768)
+MODEL_25M = dict(n_layers=8, d_model=384, n_heads=6, n_kv_heads=2,
+                 d_ff=1024, vocab=16384)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="results/ckpt_100m")
+    args = ap.parse_args()
+
+    # register a custom config under the starcoder2 family
+    from repro.configs.base import AttentionKind, Family, ModelConfig
+    import repro.configs as cfgs
+    dims = MODEL_25M if args.tiny else MODEL_100M
+    cfg = ModelConfig(name="lm-100m", family=Family.DENSE,
+                      attention=AttentionKind.GQA, rope_theta=1e4, **dims)
+    print(f"model: {cfg.describe()}")
+
+    import repro.launch.train as T
+    orig = T.reduced_config
+    T.reduced_config = lambda _arch: cfg
+    try:
+        targs = parse_args([
+            "--arch", "starcoder2-3b", "--reduced",
+            "--steps", str(args.steps), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--microbatches", "2",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+            "--log-every", "10", "--warmup", "30", "--lr", "6e-4"])
+        out = train(targs)
+        first = sum(out["losses"][:10]) / max(len(out["losses"][:10]), 1)
+        last = sum(out["losses"][-10:]) / max(len(out["losses"][-10:]), 1)
+        print(f"loss: first-10 avg {first:.3f} -> last-10 avg {last:.3f}")
+    finally:
+        T.reduced_config = orig
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# LASANA: event-level ML surrogate modeling of analog sub-blocks
+# (the paper's primary contribution), implemented as a composable JAX module.
+
+from repro.core.circuits import CIRCUITS, CrossbarRow, LIFNeuron, get_circuit
+
+__all__ = ["CIRCUITS", "CrossbarRow", "LIFNeuron", "get_circuit"]

@@ -1,0 +1,245 @@
+"""Golden transient circuit models — the SPICE stand-in (see DESIGN.md §1).
+
+Each circuit is a dataclass of physical constants exposing:
+
+  - ``n_inputs`` / ``n_params``: feature dimensions for the surrogate models
+  - ``init_state(n)``: initial internal state
+  - ``derivs(state, v_in, params)``: continuous dynamics (sub-step integrator)
+  - ``step(state, v_in, params)``: integrate ONE digital clock period with
+    ``n_substeps`` exponential-Euler sub-steps under ``lax.scan``; returns the
+    new state plus per-period observables (output, energy integral, latency
+    markers) — everything the event processor needs.
+
+Both models are calibrated so headline magnitudes land where the paper's do:
+crossbar latency clusters near 0.45 ns with fJ-scale dynamic energy;
+the LIF neuron fires on ~ns latency with pJ-scale dynamic energy and
+state/output in [0, 1.5] V.
+
+``step`` is pure JAX: ``vmap`` over circuit instances and ``shard_map`` over
+the mesh turn this into the "SPICE farm" used for dataset generation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarRow:
+    """One n-input differential PCM crossbar row driving a TIA (cf. [3]).
+
+    inputs  x[i] in [-0.8, 0.8] V
+    params  w[i] in {-1, 0, 1} (n weights + 1 bias row)
+    state   none (combinational + output pole); state feature is 0
+    output  V_out in [-2, 2] V
+    """
+
+    n_inputs: int = 32
+    clock_ns: float = 4.0            # 250 MHz digital clock
+    n_substeps: int = 64
+    g_unit: float = 12e-6            # PCM on-conductance per pair (S)
+    g_leak: float = 1e-6             # parasitic leak per column (S)
+    r_f: float = 40e3                # TIA feedback (ohm)
+    v_sat: float = 2.0               # output saturation (V)
+    c_load: float = 500e-15          # load capacitance (F)
+    tau_base_ns: float = 0.15        # output pole (ns); t90 ~ 2.3*tau
+    v_bias: float = 0.8              # bias row drive voltage
+    vdd: float = 1.2                 # supply for the TIA stage
+
+    @property
+    def n_params(self) -> int:
+        return self.n_inputs + 1
+
+    @property
+    def input_lo(self):
+        return -0.8
+
+    @property
+    def input_hi(self):
+        return 0.8
+
+    def sample_params(self, key, n):
+        return jax.random.randint(
+            key, (n, self.n_params), -1, 2).astype(jnp.float32)
+
+    def sample_inputs(self, key, shape):
+        """Mixture testbench: 70% uniform analog levels, 30% full-swing
+        "digital" patterns ({-0.8, 0, 0.8}) — covers both the generic analog
+        regime and the binary/ternary DAC patterns accelerators actually
+        drive (paper §IV-A1 tailors input ranges per application)."""
+        ku, kb, km, kd = jax.random.split(key, 4)
+        uni = jax.random.uniform(ku, (*shape, self.n_inputs), jnp.float32,
+                                 self.input_lo, self.input_hi)
+        lvl = jax.random.randint(kd, (*shape, self.n_inputs), -1, 2)
+        dig = lvl.astype(jnp.float32) * self.input_hi
+        is_dig = jax.random.bernoulli(km, 0.3, (*shape, 1))
+        return jnp.where(is_dig, dig, uni)
+
+    def init_state(self, n: int):
+        return jnp.zeros((n, 1), jnp.float32)   # V_out is the only memory
+
+    def _target(self, v_in, params):
+        w = params[..., : self.n_inputs]
+        bias = params[..., self.n_inputs]
+        i_sig = self.g_unit * (jnp.sum(w * v_in, axis=-1) + bias * self.v_bias)
+        v_lin = -self.r_f * i_sig
+        # weight-dependent pole: heavier rows are slower (more BL capacitance)
+        load = jnp.mean(jnp.abs(w), axis=-1)
+        tau = self.tau_base_ns * (1.0 + 0.5 * load)
+        return self.v_sat * jnp.tanh(v_lin / self.v_sat), tau
+
+    def step(self, state, v_in, params):
+        """One clock period. state: (N,1); v_in: (N,n_in); params: (N,n_p)."""
+        v_out0 = state[..., 0]
+        v_tgt, tau = self._target(v_in, params)
+        dt = self.clock_ns / self.n_substeps
+
+        w = params[..., : self.n_inputs]
+        # resistive power: signal path + parasitic leak (W)
+        g_row = jnp.abs(w) * self.g_unit + self.g_leak
+        p_res = jnp.sum(jnp.square(v_in) * g_row, axis=-1)
+
+        def sub(carry, i):
+            v, energy, t90 = carry
+            a = jnp.exp(-dt / tau)
+            v_new = v_tgt + (v - v_tgt) * a
+            # capacitor charging power + resistive
+            p_cap = self.c_load * jnp.abs(v_new - v) / (dt * 1e-9) * jnp.abs(v_new)
+            energy = energy + (p_cap + p_res) * dt * 1e-9
+            # 90%% settling marker (first sub-step within 10%% of target)
+            settled = jnp.abs(v_new - v_tgt) <= 0.1 * jnp.abs(v_tgt - v_out0) + 1e-6
+            t_now = (i + 1) * dt
+            t90 = jnp.where((t90 < 0) & settled, t_now, t90)
+            return (v_new, energy, t90), None
+
+        init = (v_out0, jnp.zeros_like(v_out0), -jnp.ones_like(v_out0))
+        (v_end, energy, t90), _ = jax.lax.scan(
+            sub, init, jnp.arange(self.n_substeps))
+        t90 = jnp.where(t90 < 0, self.clock_ns, t90)
+        obs = {
+            "output": v_end,
+            "energy": energy,                 # joules over the period
+            "latency": t90,                   # ns to 90% settle
+            "spiked": jnp.abs(v_end - v_out0) > 0.02,
+        }
+        return v_end[..., None], obs
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFNeuron:
+    """Adaptive leaky-integrate-and-fire neuron (cf. Indiveri [16]).
+
+    inputs  x in [0, 1.5] V spike amplitude, n_spk in [0,5] spikes/period,
+            w in [-1, 1] synapse weight -> drive = w * x * n_spk
+    params  (V_leak, V_th, V_adap, V_refrac) in [0.5, 0.8] V
+    state   (V_mem, I_adap, t_refrac) — V_mem is the exposed state feature
+    output  pulse amplitude in {0, 1.5} V (V_dd spike)
+    """
+
+    n_inputs: int = 3                # (w, x_amplitude, n_spikes)
+    clock_ns: float = 5.0            # 200 MHz digital clock
+    n_substeps: int = 64
+    vdd: float = 1.5
+    c_mem: float = 250e-15           # membrane cap (F)
+    g_syn: float = 260e-6            # synapse transconductance (S)
+    i_leak0: float = 5e-6            # leak scale (A)
+    ut: float = 0.13                 # leak-knob slope (V)
+    c_spike: float = 900e-15         # switched cap per spike (F)
+    g_static: float = 0.8e-6         # static bias path (S)
+
+    @property
+    def n_params(self) -> int:
+        return 4
+
+    def sample_params(self, key, n):
+        return jax.random.uniform(key, (n, 4), jnp.float32, 0.5, 0.8)
+
+    def sample_inputs(self, key, shape):
+        """Mixture testbench: 70% independent (w, x, n) draws + 30%
+        aggregated-drive patterns (x=V_dd, n=5, signed w) — the operating
+        point SNN layers present after summing presynaptic spikes through
+        a weight row (simulate.drive_to_circuit_inputs)."""
+        kw, kx, kn, km, kd = jax.random.split(key, 5)
+        w = jax.random.uniform(kw, shape, jnp.float32, -1.0, 1.0)
+        x = jax.random.uniform(kx, shape, jnp.float32, 0.0, 1.5)
+        n = jax.random.randint(kn, shape, 0, 6).astype(jnp.float32)
+        uni = jnp.stack([w, x, n], axis=-1)
+        w_agg = jax.random.uniform(kd, shape, jnp.float32, -1.0, 1.0)
+        agg = jnp.stack([w_agg, jnp.full(shape, 1.5), jnp.full(shape, 5.0)],
+                        axis=-1)
+        is_agg = jax.random.bernoulli(km, 0.3, (*shape, 1))
+        return jnp.where(is_agg, agg, uni)
+
+    def init_state(self, n: int):
+        return jnp.zeros((n, 3), jnp.float32)    # (V_mem, I_adap, t_ref)
+
+    def _thresh(self, params, i_adap):
+        # V_th knob maps to an effective threshold plus adaptation raise
+        v_th = 0.55 + 0.9 * (params[..., 1] - 0.5)          # 0.55..0.82 V... scaled below
+        v_adapt_gain = 1.0 + 2.0 * (params[..., 2] - 0.5)
+        return 0.9 * v_th / 0.55 * 0.55 + v_adapt_gain * i_adap * 0.25
+
+    def step(self, state, v_in, params):
+        """One clock period. state: (N,3); v_in: (N,3); params: (N,4)."""
+        v0, adap0, ref0 = state[..., 0], state[..., 1], state[..., 2]
+        w, x, n_spk = v_in[..., 0], v_in[..., 1], v_in[..., 2]
+        dt = self.clock_ns / self.n_substeps
+
+        i_in = self.g_syn * w * x * n_spk / 5.0              # amps, signed
+        v_leak, v_th_knob, v_adap, v_ref = (params[..., 0], params[..., 1],
+                                            params[..., 2], params[..., 3])
+        leak_rate = (self.i_leak0 / self.c_mem) * jnp.exp(
+            (v_leak - 0.5) / self.ut) * 1e-9                  # 1/ns scale
+        tau_ref_ns = 2.0 + 10.0 * (v_ref - 0.5)               # 2..5 ns
+        thresh = 0.8 + 1.0 * (v_th_knob - 0.5)                # 0.8..1.1 V
+        adap_gain = 0.15 * (1.0 + 2.0 * (v_adap - 0.5))
+
+        def sub(carry, i):
+            v, adap, ref, out, energy, t_spk = carry
+            in_ref = ref > 0.0
+            dv = (i_in / self.c_mem) * 1e-9 * dt              # V per sub-step
+            decay = jnp.exp(-leak_rate * dt)
+            v_new = jnp.where(in_ref, 0.0, (v + dv) * decay)
+            v_new = jnp.clip(v_new, 0.0, self.vdd)
+            eff_th = thresh + adap * 1.0
+            fire = (v_new >= eff_th) & (~in_ref)
+            # spike: reset, enter refractory, bump adaptation
+            v_new = jnp.where(fire, 0.0, v_new)
+            ref_new = jnp.where(fire, tau_ref_ns, jnp.maximum(ref - dt, 0.0))
+            adap_new = adap * jnp.exp(-dt / 8.0) + jnp.where(fire, adap_gain, 0.0)
+            out_new = jnp.where(fire, self.vdd, out)
+            t_now = (i + 1) * dt
+            t_spk = jnp.where(fire & (t_spk < 0), t_now, t_spk)
+            # energy: static bias + integration + spike switching
+            p_static = self.g_static * jnp.square(v_leak + v_new * 0.3)
+            e_sub = p_static * dt * 1e-9
+            e_sub = e_sub + jnp.abs(i_in) * jnp.abs(v_new) * dt * 1e-9 * 0.5
+            e_spk = jnp.where(fire, self.c_spike * self.vdd ** 2, 0.0)
+            return (v_new, adap_new, ref_new, out_new, energy + e_sub + e_spk,
+                    t_spk), None
+
+        zeros = jnp.zeros_like(v0)
+        init = (v0, adap0, ref0, zeros, zeros, -jnp.ones_like(v0))
+        (v_end, adap_end, ref_end, out, energy, t_spk), _ = jax.lax.scan(
+            sub, init, jnp.arange(self.n_substeps))
+        spiked = t_spk > 0
+        obs = {
+            "output": out,                        # 0 or V_dd pulse
+            "energy": energy,
+            "latency": jnp.where(spiked, t_spk, self.clock_ns),
+            "spiked": spiked,
+        }
+        return jnp.stack([v_end, adap_end, ref_end], axis=-1), obs
+
+
+CIRCUITS = {"crossbar": CrossbarRow(), "lif": LIFNeuron()}
+
+
+def get_circuit(name: str):
+    if isinstance(name, str):
+        return CIRCUITS[name]
+    return name

@@ -1,0 +1,142 @@
+"""Automated dataset generation (paper §IV-A): randomized testbenches ->
+golden transient simulation -> event processing -> circuit dataset.
+
+The "SPICE farm" is a ``vmap`` over runs of the golden integrator under
+``jit`` (and ``shard_map`` over the mesh at scale); testbench generation
+mirrors the paper: each timestep is active w.p. alpha (fresh random inputs)
+or static (inputs hold / no spikes), circuit parameters are sampled uniformly
+per run and stay fixed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.circuits import CrossbarRow, LIFNeuron, get_circuit
+from repro.core.events import EventSet, Trace, extract_events, split_runwise
+
+
+@dataclasses.dataclass(frozen=True)
+class TestbenchConfig:
+    n_runs: int = 1000
+    n_steps: int = 125              # 500 ns at 250 MHz
+    alpha: float = 0.8              # P(timestep is active)
+    seed: int = 0
+
+
+def generate_testbench(circuit, cfg: TestbenchConfig):
+    """Random inputs + params for all runs. Returns (active, inputs, params)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    k_act, k_in, k_p = jax.random.split(key, 3)
+    active = jax.random.bernoulli(k_act, cfg.alpha,
+                                  (cfg.n_runs, cfg.n_steps))
+    active = active.at[:, 0].set(True)            # first step always drives
+    fresh = circuit.sample_inputs(k_in, (cfg.n_runs, cfg.n_steps))
+    params = circuit.sample_params(k_p, cfg.n_runs)
+
+    is_lif = isinstance(circuit, LIFNeuron)
+
+    def hold_scan(prev, xs):
+        a, x = xs
+        if is_lif:
+            cur = jnp.where(a[..., None], x, jnp.zeros_like(x))  # no spikes when idle
+            return prev, cur
+        cur = jnp.where(a[..., None], x, prev)                   # hold voltages
+        return cur, cur
+
+    _, inputs = jax.lax.scan(
+        hold_scan, fresh[:, 0],
+        (jnp.moveaxis(active, 1, 0), jnp.moveaxis(fresh, 1, 0)))
+    inputs = jnp.moveaxis(inputs, 0, 1)            # (R, T, n_in)
+    return active, inputs, params
+
+
+def simulate_golden(circuit, active, inputs, params):
+    """Golden transient sim of all runs. Returns host-side Trace."""
+    circuit = get_circuit(circuit)
+    n_runs = inputs.shape[0]
+
+    def run_one(state0, xs_run, p_run):
+        def step(state, x_t):
+            new_state, obs = circuit.step(state[None], x_t[None], p_run[None])
+            return new_state[0], (new_state[0], obs)
+        return jax.lax.scan(step, state0, xs_run)
+
+    @jax.jit
+    def run_all(active, inputs, params):
+        state0 = circuit.init_state(n_runs)
+
+        def step(state, xs):
+            x_t = xs
+            new_state, obs = circuit.step(state, x_t, params)
+            return new_state, (obs, new_state)
+
+        final, (obs, states) = jax.lax.scan(
+            step, state0, jnp.moveaxis(inputs, 1, 0))
+        return obs, states
+
+    obs, states = run_all(active, inputs, params)
+    # exposed state: first state channel; boundary arrays include t=0
+    st = np.asarray(states[..., 0])                     # (T, R)
+    st = np.concatenate([np.zeros((1, n_runs), np.float32), st], axis=0).T
+    out = np.asarray(obs["output"])                     # (T, R)
+    out = np.concatenate([np.zeros((1, n_runs), np.float32), out], axis=0).T
+    energy = np.asarray(obs["energy"]).T                # (R, T)
+    latency = np.asarray(obs["latency"]).T
+    spiked = np.asarray(obs["spiked"]).T
+
+    if isinstance(circuit, LIFNeuron):
+        out_changed = spiked
+    else:
+        out_changed = np.abs(out[:, 1:] - out[:, :-1]) > 0.02
+
+    return Trace(
+        active=np.asarray(active),
+        inputs=np.asarray(inputs),
+        state=st.astype(np.float32),
+        output=out.astype(np.float32),
+        energy=energy.astype(np.float64),
+        latency=latency.astype(np.float32),
+        out_changed=np.asarray(out_changed, bool),
+        params=np.asarray(params, np.float32),
+        clock_ns=circuit.clock_ns,
+        idle_x_is_zero=isinstance(circuit, LIFNeuron),
+    )
+
+
+@dataclasses.dataclass
+class CircuitDataset:
+    circuit_name: str
+    train: EventSet
+    test: EventSet
+    val: EventSet
+    gen_seconds: float
+    n_runs: int
+
+    def counts(self) -> dict:
+        from repro.core.events import EventKind
+        full = EventSet.concat([self.train, self.test, self.val])
+        return {k.name: int(np.sum(full.kind == int(k))) for k in EventKind}
+
+
+def build_dataset(circuit_name: str, cfg: TestbenchConfig | None = None,
+                  circuit=None) -> CircuitDataset:
+    """End-to-end §IV-A flow: testbench -> golden sim -> events -> split."""
+    circuit = get_circuit(circuit or circuit_name)
+    if cfg is None:
+        cfg = TestbenchConfig(
+            n_runs=1000 if circuit_name == "crossbar" else 2000)
+    t0 = time.time()
+    active, inputs, params = generate_testbench(circuit, cfg)
+    trace = simulate_golden(circuit, active, inputs, params)
+    events = extract_events(trace)
+    train, test, val = split_runwise(events, cfg.n_runs, seed=cfg.seed)
+    return CircuitDataset(circuit_name=circuit_name, train=train, test=test,
+                          val=val, gen_seconds=time.time() - t0,
+                          n_runs=cfg.n_runs)

@@ -1,0 +1,73 @@
+"""Multi-pod distributed LASANA simulation.
+
+Circuits are embarrassingly parallel: Algorithm 1 has no cross-circuit
+communication, so the (N, ...) state/stimulus arrays shard over EVERY mesh
+axis flattened (pod x data x model = 512 ways). ``shard_map`` makes the
+locality explicit — the per-shard body is exactly ``lasana_step`` on N/512
+circuits — and diagnostics (total energy, spike counts) are the only psums.
+
+This module also provides the LASANA dry-run used in EXPERIMENTS §Dry-run:
+lowering one simulation tick for 2^20..2^27 circuits on the production mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.wrapper import LasanaState, lasana_step
+
+
+def circuit_spec(mesh: Mesh) -> P:
+    return P(tuple(mesh.axis_names))      # shard circuits over all axes
+
+
+def make_distributed_step(bank, mesh: Mesh, *, clock_ns: float,
+                          spiking: bool = False):
+    """(state, changed, x, t) -> (state, e_total, spikes_total) shard-mapped."""
+    cspec = circuit_spec(mesh)
+    state_spec = LasanaState(v=cspec, o=cspec, t_last=cspec, params=cspec)
+
+    def body(state, changed, x, t):
+        new_state, e, l, o = lasana_step(bank, state, changed, x, t[0],
+                                         clock_ns, spiking=spiking)
+        e_tot = jax.lax.psum(jnp.sum(e), tuple(mesh.axis_names))
+        n_out = jax.lax.psum(jnp.sum((o > 0.75).astype(jnp.float32)),
+                             tuple(mesh.axis_names))
+        return new_state, e_tot, n_out
+
+    sm = shard_map(body, mesh=mesh,
+                   in_specs=(state_spec, cspec, cspec, P()),
+                   out_specs=(state_spec, P(), P()))
+    return jax.jit(sm)
+
+
+def abstract_sim_inputs(n_circuits: int, n_in: int, n_params: int):
+    f32 = jnp.float32
+    state = LasanaState(
+        v=jax.ShapeDtypeStruct((n_circuits,), f32),
+        o=jax.ShapeDtypeStruct((n_circuits,), f32),
+        t_last=jax.ShapeDtypeStruct((n_circuits,), f32),
+        params=jax.ShapeDtypeStruct((n_circuits, n_params), f32),
+    )
+    changed = jax.ShapeDtypeStruct((n_circuits,), jnp.bool_)
+    x = jax.ShapeDtypeStruct((n_circuits, n_in), f32)
+    t = jax.ShapeDtypeStruct((1,), f32)
+    return state, changed, x, t
+
+
+def lower_distributed_step(bank, mesh: Mesh, n_circuits: int, n_in: int,
+                           n_params: int, *, clock_ns: float,
+                           spiking: bool = False):
+    """Lower one sharded simulation tick from ShapeDtypeStructs (dry-run)."""
+    step = make_distributed_step(bank, mesh, clock_ns=clock_ns,
+                                 spiking=spiking)
+    args = abstract_sim_inputs(n_circuits, n_in, n_params)
+    with mesh:
+        return step.lower(*args)

@@ -1,0 +1,152 @@
+"""Architecture exploration: map LM-zoo architectures onto analog crossbar
+macros and annotate energy/latency with LASANA surrogates (DESIGN.md §2.3).
+
+Only *weight-stationary* matmuls map to crossbars (QKVO/FFN/expert/embed
+projections); activation-activation products (attention scores, SSD scans,
+RG-LRU recurrences) and routers stay digital. Each weight matrix is tiled
+into (rows/32 x cols/32) differential-pair macros; one token's forward pass
+fires one MVM event per tile, whose energy/latency come from the trained
+``M_ED``/``M_L`` crossbar surrogates averaged over the input distribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Family, ModelConfig
+from repro.core.circuits import CrossbarRow
+from repro.core.predictors import PredictorBank, build_features
+from repro.models import params as prm
+from repro.models.model import Model
+
+TILE = 32
+
+# analog-unmappable params (gather tables / recurrent gates): see DESIGN.md
+_DIGITAL_KEYS = ("embedding", "router", "a_log", "dt_bias", "d_skip", "lam",
+                 "conv_w", "conv_b", "norm", "ln", "q_norm", "kv_norm",
+                 "b_a", "b_i", "kpos")
+
+
+@dataclasses.dataclass
+class TileReport:
+    arch: str
+    n_matrices: int
+    n_tiles: int
+    analog_params: int
+    total_params: int
+    analog_flop_fraction: float
+    energy_per_token_j: float
+    latency_critical_ns: float
+    tile_energy_j: float
+    tiles_by_component: dict
+
+    def summary(self) -> str:
+        return (f"{self.arch}: {self.n_tiles:,} 32x32 tiles over "
+                f"{self.n_matrices} matrices | analog FLOP fraction "
+                f"{self.analog_flop_fraction:.2%} | "
+                f"{self.energy_per_token_j * 1e9:.3f} nJ/token | "
+                f"critical path {self.latency_critical_ns:.2f} ns/layer-stage")
+
+
+def _is_analog(path: str, spec) -> bool:
+    if any(k in path for k in _DIGITAL_KEYS):
+        return False
+    return len(spec.shape) >= 2
+
+
+def _matrix_dims(spec) -> tuple[int, int, int]:
+    """(count, rows, cols): stacked layer dims multiply the count."""
+    shape = spec.shape
+    count = 1
+    if spec.logical and spec.logical[0] == "layers":
+        count = shape[0]
+        shape = shape[1:]
+    if spec.logical and len(spec.logical) and "experts" in (spec.logical[0],):
+        pass
+    rows = shape[0]
+    cols = int(np.prod(shape[1:]))
+    return count, rows, cols
+
+
+def tile_energy_latency(bank: PredictorBank, *, seed=0, n_samples=2048):
+    """Mean per-MVM-event energy (J) / latency (ns) of one 32x32 macro."""
+    circ = CrossbarRow()
+    key = jax.random.PRNGKey(seed)
+    kx, kp, ko = jax.random.split(key, 3)
+    x = circ.sample_inputs(kx, (n_samples,))
+    p = circ.sample_params(kp, n_samples)
+    o_prev = jax.random.uniform(ko, (n_samples,), jnp.float32, -2, 2)
+    v = jnp.zeros((n_samples,))
+    tau = jnp.full((n_samples,), circ.clock_ns)
+    base = jnp.concatenate([x, v[:, None], tau[:, None], p], axis=1)
+    o_new = bank.predict("M_O", base)
+    feats = jnp.concatenate([base, o_prev[:, None], o_new[:, None]], axis=1)
+    e = float(jnp.mean(bank.predict("M_ED", feats)))
+    lat = float(jnp.mean(bank.predict("M_L", feats)))
+    return e, lat
+
+
+def explore_arch(cfg: ModelConfig, bank: PredictorBank) -> TileReport:
+    model = Model(cfg)
+    specs = model.param_specs()
+    flat = jax.tree.leaves_with_path(specs)
+    e_tile, l_tile = tile_energy_latency(bank)
+
+    n_tiles = 0
+    n_matrices = 0
+    analog_params = 0
+    total_params = 0
+    energy_token = 0.0
+    by_comp: dict[str, int] = {}
+    for path, spec in flat:
+        pstr = jax.tree_util.keystr(path)
+        count_elems = int(np.prod(spec.shape))
+        total_params += count_elems
+        if not _is_analog(pstr, spec):
+            continue
+        count, rows, cols = _matrix_dims(spec)
+        tiles = count * (-(-rows // TILE)) * (-(-cols // TILE))
+        n_tiles += tiles
+        n_matrices += count
+        analog_params += count_elems
+        comp = pstr.split("'")[1] if "'" in pstr else pstr
+        by_comp[comp] = by_comp.get(comp, 0) + tiles
+        # every token fires each tile once per forward pass; MoE scales by
+        # the active-expert fraction
+        util = 1.0
+        if cfg.moe is not None and "moe" in pstr and "shared" not in pstr \
+                and "router" not in pstr:
+            util = (cfg.moe.top_k) / cfg.moe.n_experts
+        energy_token += tiles * e_tile * util
+
+    # digital-FLOP share: attention scores (seq-dependent) + unmapped params.
+    # At S=4096: score flops/token = 4*S*H*Dh per layer.
+    s_ref = 4096
+    if cfg.attention.value != "none":
+        score = 4 * s_ref * cfg.n_heads * cfg.head_dim * cfg.n_layers
+    else:
+        score = 0
+    analog_flops = 2 * analog_params
+    if cfg.moe is not None:
+        act = cfg.active_param_count()
+        analog_flops = int(analog_flops * act / max(cfg.param_count(), 1))
+    digital_flops = 2 * (total_params - analog_params) + score
+    frac = analog_flops / max(analog_flops + digital_flops, 1)
+
+    return TileReport(
+        arch=cfg.name,
+        n_matrices=n_matrices,
+        n_tiles=n_tiles,
+        analog_params=analog_params,
+        total_params=total_params,
+        analog_flop_fraction=frac,
+        energy_per_token_j=energy_token,
+        latency_critical_ns=l_tile,
+        tile_energy_j=e_tile,
+        tiles_by_component=by_comp,
+    )

@@ -1,0 +1,103 @@
+"""Predictor-bank persistence.
+
+A trained ``PredictorBank`` is LASANA's deployable artifact (the paper ships
+C++ inference models; we ship the selected models' arrays). Format: one
+``.npz`` per bank with a JSON manifest — loadable without retraining, e.g.
+on the serving fleet that annotates a digital simulator.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+
+import numpy as np
+
+from repro.core.models import (GBDTModel, LinearModel, MLPModel, MeanModel,
+                               Standardizer, TableModel)
+from repro.core.predictors import PredictorBank
+
+
+def _dump_model(m) -> dict:
+    """-> (meta dict, arrays dict) folded together with 'arrays' keys."""
+    if isinstance(m, MeanModel):
+        return {"family": "mean", "mu": m.mu}
+    if isinstance(m, LinearModel):
+        return {"family": "linear",
+                "arrays": {"w": m.w, "mu": m.sx.mu, "sd": m.sx.sd}}
+    if isinstance(m, TableModel):
+        return {"family": "table",
+                "arrays": {"tx": m.tx, "ty": m.ty, "mu": m.sx.mu,
+                           "sd": m.sx.sd}}
+    if isinstance(m, GBDTModel):
+        return {"family": "gbdt", "base": m.base, "max_depth": m.max_depth,
+                "arrays": {"feat": m.feat, "thr": m.thr, "leaf": m.leaf,
+                           "edges": m.edges}}
+    if isinstance(m, MLPModel):
+        arrays = {}
+        for i, lyr in enumerate(m.params):
+            arrays[f"w{i}"] = np.asarray(lyr["w"])
+            arrays[f"b{i}"] = np.asarray(lyr["b"])
+        arrays.update({"x_mu": m.sx.mu, "x_sd": m.sx.sd,
+                       "y_mu": m.sy.mu, "y_sd": m.sy.sd})
+        return {"family": "mlp", "n_layers": len(m.params), "arrays": arrays}
+    raise TypeError(type(m))
+
+
+def _load_model(meta: dict, arrays: dict):
+    fam = meta["family"]
+    if fam == "mean":
+        m = MeanModel()
+        m.mu = float(meta["mu"])
+        return m
+    if fam == "linear":
+        m = LinearModel()
+        m.w = arrays["w"]
+        m.sx = Standardizer(arrays["mu"], arrays["sd"])
+        return m
+    if fam == "table":
+        m = TableModel()
+        m.tx, m.ty = arrays["tx"], arrays["ty"]
+        m.sx = Standardizer(arrays["mu"], arrays["sd"])
+        return m
+    if fam == "gbdt":
+        m = GBDTModel(max_depth=int(meta["max_depth"]))
+        m.base = float(meta["base"])
+        m.feat, m.thr, m.leaf = arrays["feat"], arrays["thr"], arrays["leaf"]
+        m.edges = arrays["edges"]
+        return m
+    if fam == "mlp":
+        m = MLPModel()
+        m.params = [{"w": arrays[f"w{i}"], "b": arrays[f"b{i}"]}
+                    for i in range(int(meta["n_layers"]))]
+        m.sx = Standardizer(arrays["x_mu"], arrays["x_sd"])
+        m.sy = Standardizer(arrays["y_mu"], arrays["y_sd"])
+        return m
+    raise ValueError(fam)
+
+
+def save_bank(bank: PredictorBank, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    manifest = {"circuit": bank.circuit_name, "predictors": {}}
+    arrays: dict[str, np.ndarray] = {}
+    for pname, model in bank.selected.items():
+        meta = _dump_model(model)
+        arrs = meta.pop("arrays", {})
+        manifest["predictors"][pname] = meta
+        for k, v in arrs.items():
+            arrays[f"{pname}/{k}"] = np.asarray(v)
+    arrays["__manifest__"] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8)
+    np.savez_compressed(path, **arrays)
+
+
+def load_bank(path: str) -> PredictorBank:
+    with np.load(path) as z:
+        manifest = json.loads(bytes(z["__manifest__"].tobytes()).decode())
+        bank = PredictorBank(manifest["circuit"], families=())
+        for pname, meta in manifest["predictors"].items():
+            arrays = {k.split("/", 1)[1]: z[k] for k in z.files
+                      if k.startswith(pname + "/")}
+            bank.selected[pname] = _load_model(meta, arrays)
+    return bank

@@ -1,0 +1,276 @@
+"""Event-driven simulation of circuit banks and spiking networks.
+
+Three simulation backends over identical stimuli (the paper's comparison
+set):
+
+  golden      — sub-step ODE integration (the SPICE stand-in; slow, exact)
+  behavioral  — SV-RNM-style ideal discrete update (fast, no energy/latency)
+  lasana      — Algorithm 1 over the trained PredictorBank; standalone
+                surrogate or annotation mode (energy/latency on top of the
+                behavioral state), LASANA-P (predicted state feedback) or
+                LASANA-O (oracle state from golden, for Table III)
+
+All are (T, N)-vectorized and jit-compiled; the LASANA path is the one that
+shard_maps to the production mesh (core/distributed.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.circuits import LIFNeuron, get_circuit
+from repro.core.wrapper import LasanaState, init_state, lasana_step
+
+
+@dataclasses.dataclass
+class LayerRun:
+    """Per-tick record of one simulated bank of N circuits."""
+
+    outputs: np.ndarray    # (T, N)
+    states: np.ndarray     # (T, N)
+    energy: np.ndarray     # (T, N) joules
+    latency: np.ndarray    # (T, N) ns (0 when no output event)
+    wall_seconds: float
+
+
+def make_stimulus(circuit, n: int, t_steps: int, *, alpha=0.8, seed=0):
+    """Random per-tick stimulus: (active (T,N), x (T,N,n_in), params (N,p))."""
+    circuit = get_circuit(circuit)
+    key = jax.random.PRNGKey(seed)
+    ka, kx, kp = jax.random.split(key, 3)
+    active = jax.random.bernoulli(ka, alpha, (t_steps, n))
+    active = active.at[0].set(True)
+    x = circuit.sample_inputs(kx, (t_steps, n))
+    if not isinstance(circuit, LIFNeuron):
+        # voltages hold between active ticks
+        def hold(prev, ax):
+            a, xi = ax
+            cur = jnp.where(a[:, None], xi, prev)
+            return cur, cur
+        _, x = jax.lax.scan(hold, x[0], (active, x))
+    else:
+        x = jnp.where(active[..., None], x, 0.0)
+    params = circuit.sample_params(kp, n)
+    return active, x, params
+
+
+# --- golden -------------------------------------------------------------------
+
+def run_golden(circuit, active, x, params) -> LayerRun:
+    circuit = get_circuit(circuit)
+    n = params.shape[0]
+
+    @jax.jit
+    def sim(active, x, params):
+        def step(state, xs):
+            x_t = xs
+            new_state, obs = circuit.step(state, x_t, params)
+            return new_state, (obs["output"], new_state[..., 0],
+                               obs["energy"], obs["latency"], obs["spiked"])
+        _, out = jax.lax.scan(step, circuit.init_state(n), x)
+        return out
+
+    t0 = time.time()
+    outputs, states, energy, latency, spiked = jax.block_until_ready(
+        sim(active, x, params))
+    wall = time.time() - t0
+    lat = np.where(np.asarray(spiked), np.asarray(latency), 0.0)
+    return LayerRun(outputs=np.asarray(outputs), states=np.asarray(states),
+                    energy=np.asarray(energy), latency=lat,
+                    wall_seconds=wall)
+
+
+# --- behavioral (SV-RNM stand-in) ------------------------------------------------
+
+def run_behavioral(circuit, active, x, params) -> LayerRun:
+    """Ideal discrete update; no energy/latency (requires ML annotation)."""
+    circuit = get_circuit(circuit)
+    n = params.shape[0]
+    is_lif = isinstance(circuit, LIFNeuron)
+
+    @jax.jit
+    def sim(active, x, params):
+        if is_lif:
+            thresh = 0.8 + 1.0 * (params[:, 1] - 0.5)
+            leak = jnp.exp(-(5e-6 / circuit.c_mem) * jnp.exp(
+                (params[:, 0] - 0.5) / circuit.ut) * 1e-9 * circuit.clock_ns)
+
+            def step(v, xs):
+                a, xi = xs
+                drive = (circuit.g_syn * xi[:, 0] * xi[:, 1] * xi[:, 2] / 5.0
+                         / circuit.c_mem * circuit.clock_ns * 1e-9)
+                v_new = (v + jnp.where(a, drive, 0.0)) * leak
+                fire = v_new >= thresh
+                v_new = jnp.where(fire, 0.0, jnp.clip(v_new, 0.0, circuit.vdd))
+                out = jnp.where(fire, circuit.vdd, 0.0)
+                return v_new, (out, v_new)
+        else:
+            def step(v, xs):
+                a, xi = xs
+                tgt, _ = circuit._target(xi, params)
+                return tgt, (tgt, tgt)
+
+        _, (outs, states) = jax.lax.scan(step, jnp.zeros((n,)), (active, x))
+        return outs, states
+
+    t0 = time.time()
+    outs, states = jax.block_until_ready(sim(active, x, params))
+    wall = time.time() - t0
+    z = np.zeros_like(np.asarray(outs))
+    return LayerRun(outputs=np.asarray(outs), states=np.asarray(states),
+                    energy=z, latency=z, wall_seconds=wall)
+
+
+# --- LASANA -----------------------------------------------------------------------
+
+def run_lasana(bank, circuit, active, x, params, *,
+               oracle_states: Optional[np.ndarray] = None,
+               annotate_outputs: Optional[np.ndarray] = None) -> LayerRun:
+    """Algorithm 1 over T ticks.
+
+    oracle_states    — LASANA-O (Table III): feed golden state as v' each tick
+    annotate_outputs — annotation mode: behavioral model supplies outputs &
+                       states, LASANA only adds energy/latency estimates
+    """
+    circuit = get_circuit(circuit)
+    n = params.shape[0]
+    spiking = isinstance(circuit, LIFNeuron)
+    clock = circuit.clock_ns
+    t_steps = active.shape[0]
+    times = (jnp.arange(t_steps, dtype=jnp.float32) + 1.0) * clock
+
+    oracle = None
+    if oracle_states is not None:
+        # state BEFORE tick t = golden state at boundary t (prepend 0)
+        oracle = jnp.asarray(
+            np.concatenate([np.zeros((1, n), np.float32),
+                            oracle_states[:-1]], axis=0))
+
+    @jax.jit
+    def sim(active, x, params, oracle):
+        state0 = init_state(n, params)
+
+        def step(state, xs):
+            if oracle is None:
+                a, xi, t = xs
+            else:
+                a, xi, t, v_oracle = xs
+                state = state._replace(v=v_oracle)
+            new_state, e, l, o = lasana_step(bank, state, a, xi, t, clock,
+                                             spiking=spiking)
+            return new_state, (o, new_state.v, e, l)
+
+        xs = (active, x, times) if oracle is None else (active, x, times, oracle)
+        _, out = jax.lax.scan(step, state0, xs)
+        return out
+
+    t0 = time.time()
+    outs, states, energy, latency = jax.block_until_ready(
+        sim(active, x, params, oracle))
+    wall = time.time() - t0
+    return LayerRun(outputs=np.asarray(outs), states=np.asarray(states),
+                    energy=np.asarray(energy), latency=np.asarray(latency),
+                    wall_seconds=wall)
+
+
+# --- SNN network (layers of LIF banks wired by weight matrices) --------------------
+
+def drive_to_circuit_inputs(drive):
+    """Aggregate synaptic drive -> (w, x, n) circuit inputs (see DESIGN.md)."""
+    w = jnp.clip(drive, -1.0, 1.0)
+    x = jnp.full_like(drive, 1.5)
+    n = jnp.full_like(drive, 5.0)
+    return jnp.stack([w, x, n], axis=-1)
+
+
+def run_snn_lasana(bank, weights: list, spike_seq, params_per_layer, *,
+                   clock_ns=5.0):
+    """Feed-forward SNN: spike_seq (T, B, n_in) -> per-layer LASANA banks.
+
+    weights[i]: (n_in_i, n_out_i). Neurons are flattened (B * n_out_i) per
+    layer. Returns (spike counts per output neuron (B, n_cls), total energy).
+    """
+    t_steps, b, _ = spike_seq.shape
+    n_layers = len(weights)
+
+    def _tile_params(p, n_out):
+        p = jnp.asarray(p)
+        if p.ndim == 1:                      # one knob set for the layer
+            return jnp.broadcast_to(p[None], (b * n_out, p.shape[0]))
+        return jnp.tile(p, (b, 1))           # per-neuron knobs
+
+    states = [init_state(b * w.shape[1],
+                         _tile_params(params_per_layer[i], w.shape[1]))
+              for i, w in enumerate(weights)]
+
+    @jax.jit
+    def sim(spike_seq, states):
+        def step(carry, xs):
+            states = carry
+            spikes, t = xs                               # (B, n_in)
+            energy = 0.0
+            new_states = []
+            s = spikes
+            for i, w in enumerate(weights):
+                drive = (s @ w) / 1.5                    # spike amp 1.5 -> unit
+                xin = drive_to_circuit_inputs(drive).reshape(-1, 3)
+                changed = jnp.ones((xin.shape[0],), bool)
+                ns, e, l, o = lasana_step(bank, states[i], changed, xin, t,
+                                          clock_ns, spiking=True)
+                new_states.append(ns)
+                s = o.reshape(b, w.shape[1])
+                energy = energy + jnp.sum(e)
+            return new_states, (s, energy)
+
+        times = (jnp.arange(t_steps, dtype=jnp.float32) + 1.0) * clock_ns
+        states, (out_spikes, energy) = jax.lax.scan(step, states,
+                                                    (spike_seq, times))
+        counts = jnp.sum(out_spikes > 0.75, axis=0)      # (B, n_cls)
+        return counts, jnp.sum(energy)
+
+    return sim(spike_seq, states)
+
+
+def run_snn_golden(circuit, weights: list, spike_seq, params_per_layer):
+    """Same network through the golden integrator (the SPICE reference)."""
+    circuit = get_circuit(circuit)
+    t_steps, b, _ = spike_seq.shape
+
+    def _tile_params(p, n_out):
+        p = jnp.asarray(p)
+        if p.ndim == 1:
+            return jnp.broadcast_to(p[None], (b * n_out, p.shape[0]))
+        return jnp.tile(p, (b, 1))
+
+    @jax.jit
+    def sim(spike_seq):
+        states = [circuit.init_state(b * w.shape[1]) for w in weights]
+        params = [_tile_params(params_per_layer[i], w.shape[1])
+                  for i, w in enumerate(weights)]
+
+        def step(carry, spikes):
+            states = carry
+            energy = 0.0
+            s = spikes
+            new_states = []
+            for i, w in enumerate(weights):
+                drive = (s @ w) / 1.5
+                xin = drive_to_circuit_inputs(drive).reshape(-1, 3)
+                ns, obs = circuit.step(states[i], xin, params[i])
+                new_states.append(ns)
+                s = jnp.where(obs["spiked"], circuit.vdd, 0.0).reshape(
+                    b, w.shape[1])
+                energy = energy + jnp.sum(obs["energy"])
+            return new_states, (s, energy)
+
+        states, (out_spikes, energy) = jax.lax.scan(step, states, spike_seq)
+        counts = jnp.sum(out_spikes > 0.75, axis=0)
+        return counts, jnp.sum(energy)
+
+    return sim(spike_seq)

@@ -1,0 +1,170 @@
+"""Algorithm 1 — the ML inference wrapper, vectorized for TPUs.
+
+The paper's wrapper walks a *set* S of circuits whose input changed at tick
+t; TPUs want fixed shapes, so S becomes a boolean mask and both the
+idle-catch-up path (lines 3-9) and the active path (lines 10-22) are
+evaluated for all N circuits with ``where``-selection (lines 23-29).
+Semantics are identical — verified against a per-circuit reference loop in
+tests/test_wrapper.py — and the two systems optimizations fall out for free:
+
+  * batching across the system: the whole tick is ONE batched inference per
+    predictor (the (N, F) feature matrices below);
+  * idle-period merging: stale circuits are caught up with a single E2 event
+    of length t - t' - T rather than per-tick updates (line 5).
+
+``lasana_step`` is pure and jit/shard_map-friendly: circuits shard over the
+flattened mesh with zero cross-circuit communication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LasanaState(NamedTuple):
+    """Per-circuit simulator state (all (N,) or (N, k))."""
+
+    v: jax.Array          # latest predicted state v'
+    o: jax.Array          # latest output
+    t_last: jax.Array     # latest update time t'
+    params: jax.Array     # (N, n_p) fixed circuit parameters
+
+
+def init_state(n: int, params) -> LasanaState:
+    return LasanaState(
+        v=jnp.zeros((n,), jnp.float32),
+        o=jnp.zeros((n,), jnp.float32),
+        t_last=jnp.zeros((n,), jnp.float32),
+        params=params,
+    )
+
+
+def _features(x, v, tau, params, o_prev=None, o_new=None):
+    cols = [x, v[:, None], tau[:, None], params]
+    if o_prev is not None:
+        cols.append(o_prev[:, None])
+    if o_new is not None:
+        cols.append(o_new[:, None])     # chained M_O prediction (§IV-B ext.)
+    return jnp.concatenate(cols, axis=1)
+
+
+def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
+                out_eps: float = 0.02, spiking: bool = False):
+    """One digital tick for N circuits (Algorithm 1).
+
+    bank     PredictorBank (selected models embedded as jit-able predictors)
+    state    LasanaState
+    changed  (N,) bool — set S as a mask
+    x        (N, n_in) inputs applied at t (rows of X)
+    t        scalar time (ns)
+    returns  (new_state, e (N,), l (N,), o (N,))
+    """
+    n = state.v.shape[0]
+    zeros_x = jnp.zeros_like(x)
+
+    # --- lines 3-9: catch up stale circuits with one merged idle event
+    stale = changed & (state.t_last < t - clock_ns)
+    tau_idle = jnp.maximum(t - state.t_last - clock_ns, 0.0)
+    feats_idle = _features(zeros_x, state.v, tau_idle, state.params)
+    v_hat = bank.predict("M_V", feats_idle)
+    e_s_idle = bank.predict("M_ES", feats_idle)
+    v_cur = jnp.where(stale, v_hat, state.v)
+    e = jnp.where(stale, e_s_idle, 0.0)
+
+    # --- lines 10-22: run all predictors on the active batch.
+    # M_O runs first so its prediction can chain into the transition-aware
+    # energy/latency predictors (beyond-paper; see predictors.py).
+    tau_act = jnp.full((n,), clock_ns, jnp.float32)
+    feats = _features(x, v_cur, tau_act, state.params)
+    o_hat = bank.predict("M_O", feats)
+    v_new = bank.predict("M_V", feats)
+
+    # --- lines 23-29: select dynamic vs static by output behaviour
+    if spiking:
+        out_changed = o_hat > 0.5 * 1.5          # spike fired this tick
+        o_resolved = jnp.where(out_changed, 1.5, 0.0)
+    else:
+        out_changed = jnp.abs(o_hat - state.o) > out_eps
+        o_resolved = o_hat
+    # chain the event-RESOLVED output (matches the E1 training distribution,
+    # where spiking outputs are exactly V_dd) into the transition predictors
+    feats_tr = _features(x, v_cur, tau_act, state.params, o_prev=state.o,
+                         o_new=o_resolved)
+    e_d = bank.predict("M_ED", feats_tr)
+    e_s = bank.predict("M_ES", feats)
+    lat = bank.predict("M_L", feats_tr)
+    e_evt = jnp.where(out_changed, e_d, e_s)
+    l_evt = jnp.where(out_changed, lat, 0.0)
+    e = e + jnp.where(changed, e_evt, 0.0)
+    l = jnp.where(changed, l_evt, 0.0)
+    if spiking:
+        o_out = jnp.where(changed, jnp.where(out_changed, 1.5, 0.0), state.o)
+    else:
+        o_out = jnp.where(changed, o_hat, state.o)
+
+    new_state = LasanaState(
+        v=jnp.where(changed, v_new, v_cur),
+        o=o_out,
+        t_last=jnp.where(changed, t, state.t_last),   # line 30
+        params=state.params,
+    )
+    return new_state, e, l, o_out
+
+
+def lasana_step_reference(bank, state: LasanaState, changed, x, t, clock_ns,
+                          *, out_eps: float = 0.02, spiking: bool = False):
+    """Literal per-circuit transcription of Algorithm 1 (numpy, for tests)."""
+    import numpy as np
+
+    n = state.v.shape[0]
+    v = np.asarray(state.v).copy()
+    o = np.asarray(state.o).copy()
+    t_last = np.asarray(state.t_last).copy()
+    params = np.asarray(state.params)
+    x = np.asarray(x)
+    e = np.zeros(n)
+    l = np.zeros(n)
+    changed = np.asarray(changed)
+
+    for i in range(n):
+        if not changed[i]:
+            continue
+        if t_last[i] < t - clock_ns:                      # lines 4-6
+            tau = t - t_last[i] - clock_ns
+            fi = np.concatenate([np.zeros_like(x[i]), [v[i]], [tau], params[i]])
+            v[i] = float(bank.predict_np("M_V", fi[None])[0])
+            e[i] += float(bank.predict_np("M_ES", fi[None])[0])
+        f = np.concatenate([x[i], [v[i]], [clock_ns], params[i]])
+        o_hat = float(bank.predict_np("M_O", f[None])[0])
+        v_new = float(bank.predict_np("M_V", f[None])[0])
+        if spiking:
+            changed_out = o_hat > 0.75
+            o_res = 1.5 if changed_out else 0.0
+        else:
+            changed_out = abs(o_hat - o[i]) > out_eps
+            o_res = o_hat
+        fp = np.concatenate([x[i], [v[i]], [clock_ns], params[i], [o[i]],
+                             [o_res]])
+        e_d = float(bank.predict_np("M_ED", fp[None])[0])
+        e_s = float(bank.predict_np("M_ES", f[None])[0])
+        lat = float(bank.predict_np("M_L", fp[None])[0])
+        if changed_out:                                    # lines 24-27
+            e[i] += e_d
+            l[i] = lat
+        else:
+            e[i] += e_s
+        v[i] = v_new
+        if spiking:
+            o[i] = 1.5 if changed_out else 0.0
+        else:
+            o[i] = o_hat
+        t_last[i] = t
+    new_state = LasanaState(v=jnp.asarray(v, jnp.float32),
+                            o=jnp.asarray(o, jnp.float32),
+                            t_last=jnp.asarray(t_last, jnp.float32),
+                            params=state.params)
+    return new_state, e, l, np.asarray(new_state.o)

@@ -1,0 +1,50 @@
+"""Step-time watchdog: straggler and hang detection.
+
+EWMA of step walltimes; a step exceeding ``threshold x ewma`` flags a
+straggler (on a real cluster this triggers the controller to profile /
+cordon the slow host; here it logs and counts). A hard ``hang_timeout``
+arms a timer per step — if a step never completes, the registered callback
+fires (the launcher uses it to abort + restart from the last checkpoint).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+
+class StepWatchdog:
+    def __init__(self, *, ewma_alpha: float = 0.2, threshold: float = 3.0,
+                 hang_timeout: float = 600.0,
+                 on_hang: Optional[Callable[[], None]] = None):
+        self.ewma: Optional[float] = None
+        self.alpha = ewma_alpha
+        self.threshold = threshold
+        self.hang_timeout = hang_timeout
+        self.on_hang = on_hang
+        self.stragglers = 0
+        self.events: list[dict] = []
+        self._timer: Optional[threading.Timer] = None
+        self._t0: Optional[float] = None
+
+    def step_begin(self):
+        self._t0 = time.time()
+        if self.on_hang is not None:
+            self._timer = threading.Timer(self.hang_timeout, self.on_hang)
+            self._timer.daemon = True
+            self._timer.start()
+
+    def step_end(self, step: int) -> dict:
+        dt = time.time() - self._t0
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        slow = self.ewma is not None and dt > self.threshold * self.ewma
+        if slow:
+            self.stragglers += 1
+            self.events.append({"step": step, "seconds": dt,
+                                "ewma": self.ewma})
+        self.ewma = dt if self.ewma is None else (
+            self.alpha * dt + (1 - self.alpha) * self.ewma)
+        return {"step_seconds": dt, "straggler": slow, "ewma": self.ewma}

@@ -1,0 +1,3 @@
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

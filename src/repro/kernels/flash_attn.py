@@ -1,0 +1,73 @@
+"""Causal flash-attention forward kernel (LM-zoo fast path).
+
+Online-softmax over KV blocks with the (bq, d) query tile, running max/sum
+and (bq, d) accumulator held in VMEM/registers; logits never touch HBM.
+This is the kernel that collapses the dry-run's dominant memory term (the
+fp32 (S, T) logit traffic of the XLA path — see EXPERIMENTS §Perf).
+
+Layout: q, k, v are (B*H, S, D); grid is (BH, S/bq); the inner KV loop is a
+``fori_loop`` bounded by the causal frontier of each query block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _make_kernel(bq: int, bk: int, s: int, d: int, scale: float):
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        qi = pl.program_id(1)
+        q = q_ref[...].astype(jnp.float32) * scale          # (bq, d)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+        def body(j, carry):
+            acc, m_run, l_run = carry
+            k = k_ref[pl.dslice(j * bk, bk), :]
+            v = v_ref[pl.dslice(j * bk, bk), :]
+            logits = q @ k.astype(jnp.float32).T            # (bq, bk)
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            logits = jnp.where(k_pos <= q_pos, logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=1))
+            p = jnp.exp(logits - m_new[:, None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=1)
+            acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+            return acc, m_new, l_new
+
+        n_kv = (qi + 1) * bq // bk                          # causal frontier
+        acc0 = jnp.zeros((bq, d), jnp.float32)
+        m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((bq,), jnp.float32)
+        acc, m, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+        o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+    return kernel
+
+
+def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q,k,v: (BH, S, D) -> (BH, S, D), causal. S % block_q == 0 required."""
+    bh, s, d = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0 and bq % bk == 0, (s, bq, bk)
+    scale = 1.0 / (d ** 0.5)
+    kernel = _make_kernel(bq, bk, s, d, scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

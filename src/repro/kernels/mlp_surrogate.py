@@ -1,0 +1,59 @@
+"""Fused 3-layer MLP surrogate inference kernel (LASANA's inference hot spot).
+
+One ``pallas_call`` evaluates an entire predictor over a block of circuits:
+the (F,H1),(H1,H2),(H2,1) weight matrices live in VMEM for the whole grid
+(they are a few hundred KB), activations never round-trip HBM, and both
+ReLU layers fuse into the matmul epilogues. Block sizes are MXU-aligned
+(inputs padded to multiples of 128 by ops.py).
+
+This replaces the paper's five scikit-learn ``predict`` calls + Python
+batching: on TPU, one kernel launch per predictor per tick, grid over
+N/block circuits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h1 = jnp.maximum(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...], 0.0)
+    h2 = jnp.maximum(
+        jnp.dot(h1, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...], 0.0)
+    out = jnp.dot(h2, w3_ref[...], preferred_element_type=jnp.float32) \
+        + b3_ref[...]
+    o_ref[...] = out
+
+
+def mlp_surrogate(x, w1, b1, w2, b2, w3, b3, *, block_n: int = 256,
+                  interpret: bool = True):
+    """x: (N, F) -> (N, 1). All dims should be 128-aligned on real TPUs."""
+    n, f = x.shape
+    h1 = w1.shape[1]
+    h2 = w2.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h1), lambda i: (0, 0)),
+            pl.BlockSpec((h1,), lambda i: (0,)),
+            pl.BlockSpec((h1, h2), lambda i: (0, 0)),
+            pl.BlockSpec((h2,), lambda i: (0,)),
+            pl.BlockSpec((h2, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2, w3, b3)

@@ -1,0 +1,101 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; interpret mode
+executes kernel bodies in Python for correctness validation). On real TPUs
+set ``REPRO_PALLAS_INTERPRET=0`` / pass interpret=False and the same
+BlockSpecs compile to Mosaic.
+
+Wrappers handle padding to hardware-aligned shapes so callers stay
+shape-agnostic: MLP feature dims pad to 128, circuit counts pad to the
+block size.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import crossbar_mvm as _xbar
+from repro.kernels import flash_attn as _fa
+from repro.kernels import lif_scan as _lif
+from repro.kernels import mlp_surrogate as _mlp
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def mlp_surrogate(x, w1, b1, w2, b2, w3, b3, *, block_n: int = 256,
+                  interpret: bool | None = None):
+    """(N, F) -> (N,) fused MLP inference; pads N to block and F/H to 128."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n, f = x.shape
+    n_pad = _ceil_to(n, block_n)
+    f_pad = _ceil_to(f, 128)
+    h1_pad = _ceil_to(w1.shape[1], 128)
+    h2_pad = _ceil_to(w2.shape[1], 128)
+    xp = _pad_to(_pad_to(x, n_pad, 0), f_pad, 1)
+    w1p = _pad_to(_pad_to(w1, f_pad, 0), h1_pad, 1)
+    b1p = _pad_to(b1, h1_pad, 0)
+    w2p = _pad_to(_pad_to(w2, h1_pad, 0), h2_pad, 1)
+    b2p = _pad_to(b2, h2_pad, 0)
+    w3p = _pad_to(w3, h2_pad, 0)
+    out = _mlp.mlp_surrogate(xp, w1p, b1p, w2p, b2p, w3p, b3,
+                             block_n=block_n, interpret=interpret)
+    return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def crossbar_target(v, w, *, block_n: int = 256, interpret: bool | None = None):
+    """(N, n_in), (N, n_in+1) -> (v_tgt (N,), tau (N,))."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n = v.shape[0]
+    n_pad = _ceil_to(n, block_n)
+    tgt, tau = _xbar.crossbar_target(_pad_to(v, n_pad, 0),
+                                     _pad_to(w, n_pad, 0),
+                                     block_n=block_n, interpret=interpret)
+    return tgt[:n], tau[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lif_step(state, x, params, *, block_n: int = 256,
+             interpret: bool | None = None):
+    """One golden LIF clock period for N neurons (kernelized SPICE farm)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n = state.shape[0]
+    n_pad = _ceil_to(n, block_n)
+    new_state, obs = _lif.lif_step(
+        _pad_to(state, n_pad, 0), _pad_to(x, n_pad, 0),
+        _pad_to(params, n_pad, 0), block_n=block_n, interpret=interpret)
+    return new_state[:n], {k: v[:n] for k, v in obs.items()}
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Causal attention (B, H, S, D) -> (B, H, S, D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, h, s, d = q.shape
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    out = _fa.flash_attention(qf, kf, vf, block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out.reshape(b, h, s, d)

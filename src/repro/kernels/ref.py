@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.circuits import CrossbarRow, LIFNeuron
+
+
+def mlp_surrogate_ref(x, w1, b1, w2, b2, w3, b3):
+    h1 = jnp.maximum(x.astype(jnp.float32) @ w1 + b1, 0.0)
+    h2 = jnp.maximum(h1 @ w2 + b2, 0.0)
+    return h2 @ w3 + b3
+
+
+def crossbar_target_ref(v, w, *, g_unit=12e-6, r_f=40e3, v_sat=2.0,
+                        v_bias=0.8, tau_base=0.15):
+    circ = CrossbarRow(g_unit=g_unit, r_f=r_f, v_sat=v_sat, v_bias=v_bias,
+                       tau_base_ns=tau_base, n_inputs=v.shape[1])
+    return circ._target(v, w)
+
+
+def lif_step_ref(state, x, params, *, circ: LIFNeuron | None = None):
+    circ = circ or LIFNeuron()
+    return circ.step(state, x, params)
+
+
+def flash_attention_ref(q, k, v):
+    """Causal softmax attention, fp32 accumulation. q,k,v: (BH, S, D)."""
+    s = q.shape[1]
+    d = q.shape[2]
+    logits = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)

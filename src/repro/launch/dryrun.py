@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell from
+ShapeDtypeStructs — no allocation — and record memory/cost/collective
+analysis for the roofline.
+
+MUST be run as its own process (the two lines above must execute before any
+jax import anywhere); ``python -m repro.launch.dryrun --arch X --shape Y
+[--multi-pod]`` does one cell and writes results/dryrun/<cell>.json.
+``--all`` iterates every applicable cell (skipping cached JSONs).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
+from repro.configs.shapes import skip_reason
+from repro.launch import hlo_cost
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh, mesh_info
+from repro.models.model import Model
+from repro.optim import AdamW, AdamWConfig
+from repro.sharding import train_rules
+from repro.train import step as step_mod
+
+
+def _opt_for(cfg) -> AdamW:
+    # >=100B-param models: bf16 optimizer state (HBM ceiling; see EXPERIMENTS).
+    import jax.numpy as jnp
+    big = cfg.param_count() > 100e9
+    return AdamW(AdamWConfig(state_dtype=jnp.bfloat16 if big else jnp.float32))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               rule_opts: dict | None = None):
+    """Build the jitted step for one cell and lower it. Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mb_override = os.environ.get("REPRO_MICROBATCHES")
+    if mb_override and shape.kind == "train":
+        import dataclasses as _dc
+        shape = _dc.replace(shape, num_microbatches=int(mb_override))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = train_rules(mesh, **(rule_opts or {}))
+    model = Model(cfg, mesh=mesh, rules=rules)
+    n_dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n_dp *= mesh.devices.shape[mesh.axis_names.index(ax)]
+
+    with mesh:
+        if shape.kind == "train":
+            opt = _opt_for(cfg)
+            jitted = step_mod.jit_train_step(model, opt, mesh, rules, shape,
+                                             n_moe_groups=n_dp)
+            state = step_mod.abstract_train_state(model, opt)
+            inputs = model.input_specs(shape)
+            lowered = jitted.lower(state, inputs)
+        elif shape.kind == "prefill":
+            jitted = step_mod.jit_prefill(model, mesh, rules, shape)
+            inputs = model.input_specs(shape)
+            lowered = jitted.lower(model.abstract_params(), inputs)
+        else:  # decode
+            jitted = step_mod.jit_decode_step(model, mesh, rules, shape)
+            cache = model.cache_specs(shape.global_batch, shape.seq_len)
+            tokens = model.input_specs(shape)["tokens"]
+            lowered = jitted.lower(model.abstract_params(), cache, tokens)
+    return lowered, {"mesh": mesh_info(mesh), "cfg": cfg, "shape": shape}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             force: bool = False, rule_opts: dict | None = None,
+             tag: str = "") -> dict:
+    mesh_tag = ("multipod" if multi_pod else "singlepod") + tag
+    cell = f"{arch}__{shape_name}__{mesh_tag}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape_name)
+    rec = {"cell": cell, "arch": arch, "shape": shape_name,
+           "mesh": mesh_tag, "status": "skip", "skip_reason": reason}
+    if reason is not None:
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                   rule_opts=rule_opts)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # Loop-aware cost model: XLA's cost_analysis counts while bodies once,
+        # so scanned layers/microbatches/chunks would be undercounted (see
+        # launch/hlo_cost.py; parity-validated on loop-free programs).
+        totals = hlo_cost.analyze(hlo)
+        n_dev = meta["mesh"]["n_devices"]
+        shape = meta["shape"]
+        mf = rf.model_flops(cfg, shape)
+        roof = rf.roofline(
+            {"flops": totals.flops, "bytes accessed": totals.bytes},
+            rf.CollectiveStats(counts=totals.collective_counts,
+                               operand_bytes={}, wire_bytes=totals.wire_bytes),
+            model_flops_total=mf, n_devices=n_dev)
+        print(compiled.memory_analysis())     # proves it fits
+        print({"flops": totals.flops, "bytes": totals.bytes,
+               "wire": totals.wire_bytes})
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "n_devices": n_dev,
+            "memory": {
+                "argument_bytes_per_device": mem.argument_size_in_bytes,
+                "output_bytes_per_device": mem.output_size_in_bytes,
+                "temp_bytes_per_device": mem.temp_size_in_bytes,
+                "alias_bytes_per_device": mem.alias_size_in_bytes,
+                "peak_live_bytes_per_device": (
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+            },
+            "cost": {
+                "flops_per_device": totals.flops,
+                "bytes_per_device": totals.bytes,
+                "transcendentals_per_device": totals.transcendentals,
+                "xla_flops_uncorrected": float(cost.get("flops", 0.0)),
+                "xla_bytes_uncorrected": float(cost.get("bytes accessed", 0.0)),
+            },
+            "collectives": {
+                "counts": totals.collective_counts,
+                "wire_bytes_per_device": totals.wire_bytes,
+            },
+            "roofline": roof.as_dict(),
+            "model_flops_total": mf,
+        })
+    except Exception as e:  # record the failure; the sweep continues
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[dryrun] {cell} FAILED: {e}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    dur = time.time() - t0
+    print(f"[dryrun] {cell}: {rec['status']} in {dur:.1f}s")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--rule-opt", action="append", default=[],
+                    help="sharding-rule switches for perf iterations, e.g. "
+                         "kv_seq_sharding / seq_parallel_attn / qk_dim_fallback")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    args = ap.parse_args()
+    rule_opts = {k: True for k in args.rule_opt}
+
+    if args.all:
+        for mp in (False, True):
+            for arch in ARCH_IDS:
+                cfg = get_config(arch)
+                for shape_name in applicable_shapes(cfg):
+                    run_cell(arch, shape_name, multi_pod=mp, out_dir=args.out,
+                             force=args.force)
+        return
+    if not args.arch or not args.shape:
+        ap.error("need --arch and --shape (or --all)")
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+             out_dir=args.out, force=args.force, rule_opts=rule_opts,
+             tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""LASANA-at-scale dry-run: lower + compile one Algorithm-1 simulation tick
+for N circuits shard_mapped over the full production mesh, and derive its
+roofline terms — the paper's §V-D scaling study taken to pod scale.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_lasana [--n 1048576]
+                                                        [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core.dataset import TestbenchConfig, build_dataset
+from repro.core.distributed import lower_distributed_step
+from repro.core.predictors import PredictorBank
+from repro.launch import hlo_cost
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh, mesh_info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2 ** 20)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--families", default="mlp",
+                    help="comma list of model families for the bank")
+    ap.add_argument("--bank-runs", type=int, default=200)
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    print(f"[lasana-dryrun] training bank ({args.families}) ...")
+    ds = build_dataset("lif", TestbenchConfig(n_runs=args.bank_runs,
+                                              n_steps=80))
+    bank = PredictorBank(
+        "lif", families=tuple(args.families.split(","))).fit(ds)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n_dev = mesh_info(mesh)["n_devices"]
+    print(f"[lasana-dryrun] lowering one tick: {args.n:,} circuits on "
+          f"{n_dev} devices ...")
+    t0 = time.time()
+    lowered = lower_distributed_step(bank, mesh, args.n, 3, 4, clock_ns=5.0,
+                                     spiking=True)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    totals = hlo_cost.analyze(compiled.as_text())
+    # "useful" flops: 5 predictor MLPs x (F*H1 + H1*H2 + H2) MACs per circuit
+    mlp_flops = 2 * (41 * 100 + 100 * 50 + 50)
+    useful = 7 * mlp_flops * args.n            # 7 predictor invocations/tick
+    roof = rf.roofline(
+        {"flops": totals.flops, "bytes accessed": totals.bytes},
+        rf.CollectiveStats(counts=totals.collective_counts, operand_bytes={},
+                           wire_bytes=totals.wire_bytes),
+        model_flops_total=useful, n_devices=n_dev)
+    rec = {
+        "cell": f"lasana-lif-sim__n{args.n}__"
+                + ("multipod" if args.multi_pod else "singlepod"),
+        "status": "ok",
+        "n_circuits": args.n,
+        "n_devices": n_dev,
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+        },
+        "cost": {"flops_per_device": totals.flops,
+                 "bytes_per_device": totals.bytes},
+        "collectives": {"counts": totals.collective_counts,
+                        "wire_bytes_per_device": totals.wire_bytes},
+        "roofline": roof.as_dict(),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, rec["cell"] + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[lasana-dryrun] ok in {t_compile:.1f}s -> {path}")
+    print(f"  per-device: flops {totals.flops:.3e}  bytes {totals.bytes:.3e}"
+          f"  wire {totals.wire_bytes:.3e}")
+    print(f"  terms: compute {roof.compute_s * 1e6:.1f}us  memory "
+          f"{roof.memory_s * 1e6:.1f}us  collective "
+          f"{roof.collective_s * 1e6:.3f}us  dominant={roof.dominant}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state. The dry-run forces 512
+host devices via XLA_FLAGS *before* importing jax; tests and benches see the
+real single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single-pod or 2x16x16 multi-pod production mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """General mesh helper used by tests/examples (auto axis types)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(*, model: int = 1) -> Mesh:
+    """Best-effort mesh over whatever devices exist (CPU tests, small runs)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    data = n // model
+    devs = np.array(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def mesh_info(mesh: Mesh) -> dict:
+    return {
+        "shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_devices": int(np.prod(mesh.devices.shape)),
+        "axis_names": list(mesh.axis_names),
+    }

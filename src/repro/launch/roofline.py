@@ -1,0 +1,174 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all **per device** (the
+partitioned HLO module this backend emits is already per-device, verified
+against hand-computed shard sizes):
+
+    compute    = HLO_FLOPs            / PEAK_FLOPS
+    memory     = HLO_bytes_accessed   / HBM_BW
+    collective = bytes_on_wire        / ICI_BW
+
+``bytes_on_wire`` comes from parsing the partitioned HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op contributes its ring-algorithm wire traffic (derived from the op's
+output shape and replica-group size — see _WIRE_FACTORS).
+
+Hardware model (TPU v5e-like, constants per the assignment):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (single-link conservative)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Ring-algorithm bytes each device puts on the wire, as a multiple of the
+# op's per-device OUTPUT bytes (n = replica-group size):
+#   all-gather:       out*(n-1)/n           (~1x output)
+#   all-reduce:       2*out*(n-1)/n         (~2x: reduce-scatter + all-gather)
+#   reduce-scatter:   input*(n-1)/n = out*(n-1)  (input = out*n)
+#   all-to-all:       out*(n-1)/n
+#   collective-permute: out
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_RE_LIST = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_output_bytes(line: str) -> int:
+    """Sum the bytes of the op's output shape(s) (handles tuple outputs)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    # output shapes appear before the op name
+    opname_idx = min((rhs.find(c) for c in _COLLECTIVES if c in rhs),
+                     default=-1)
+    head = rhs[:opname_idx] if opname_idx > 0 else rhs
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUP_RE_LIST.search(line)
+    if m:
+        first = m.group(1).split("}", 1)[0].split("{")[-1]
+        return max(len([t for t in first.split(",") if t.strip() != ""]), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    operand_bytes: dict       # per kind, per-device operand bytes
+    wire_bytes: float         # per-device ring-traffic bytes
+
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVES}
+    operand = {k: 0.0 for k in _COLLECTIVES}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        kind = next((k for k in _COLLECTIVES
+                     if f" {k}(" in s or f"{k}(" in s.split(" = ", 1)[1][:64]
+                     or f"{k}-start(" in s), None)
+        if kind is None:
+            continue
+        # skip the -done halves of async pairs (avoid double counting)
+        if f"{kind}-done" in s:
+            continue
+        out_b = _line_output_bytes(s)
+        if out_b <= 0:
+            continue
+        n = _group_size(s)
+        counts[kind] += 1
+        if kind == "all-gather":
+            operand[kind] += out_b / n
+            wire += out_b * (n - 1) / n
+        elif kind == "all-reduce":
+            operand[kind] += out_b
+            wire += 2 * out_b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            operand[kind] += out_b * n
+            wire += out_b * (n - 1)
+        elif kind == "all-to-all":
+            operand[kind] += out_b
+            wire += out_b * (n - 1) / n
+        else:  # collective-permute
+            operand[kind] += out_b
+            wire += out_b
+    return CollectiveStats(counts=counts, operand_bytes=operand, wire_bytes=wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per-device
+    hbm_bytes: float          # per-device
+    wire_bytes: float         # per-device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_device: float
+    useful_ratio: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(cost_analysis: dict, colls: CollectiveStats, *,
+             model_flops_total: float, n_devices: int) -> Roofline:
+    flops = float(cost_analysis.get("flops", 0.0))
+    hbm = float(cost_analysis.get("bytes accessed", 0.0))
+    wire = colls.wire_bytes
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_n = wire / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_total / n_devices
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+        compute_s=t_c, memory_s=t_m, collective_s=t_n, dominant=dom,
+        model_flops_per_device=mf,
+        useful_ratio=(mf / flops) if flops else 0.0,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode), N = active params."""
+    n = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token per seq

@@ -1,0 +1,131 @@
+"""Production training driver.
+
+``python -m repro.launch.train --arch starcoder2-3b --reduced --steps 50``
+
+Wires together: config registry -> model -> mesh/rules -> jit train step ->
+synthetic data pipeline (prefetched) -> AdamW -> checkpoint manager (async,
+auto-resume) -> watchdog -> elastic restart on failure. The same driver runs
+the reduced configs on this CPU container and the full configs on a real
+pod (the only difference is the mesh the launcher finds).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced_config
+from repro.configs.shapes import ShapeConfig
+from repro.data.lm_data import Prefetcher, SyntheticCorpus, make_train_batch
+from repro.ft.elastic import plan_mesh, resume_state
+from repro.ft.watchdog import StepWatchdog
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.optim import AdamW, AdamWConfig
+from repro.train import step as step_mod
+
+
+def build(args):
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    plan = plan_mesh(model_size=args.model_parallel)
+    model = Model(cfg, mesh=plan.mesh, rules=plan.rules)
+    opt = AdamW(AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
+                            total_steps=args.steps,
+                            compress_grads=args.compress_grads))
+    shape = ShapeConfig("cli", args.seq, args.batch, "train",
+                        num_microbatches=args.microbatches)
+    jitted = step_mod.jit_train_step(model, opt, plan.mesh, plan.rules, shape,
+                                     n_moe_groups=plan.data_size)
+    return cfg, plan, model, opt, shape, jitted
+
+
+def train(args) -> dict:
+    cfg, plan, model, opt, shape, jitted = build(args)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=args.keep)
+    corpus = SyntheticCorpus(cfg.vocab, seed=args.seed)
+
+    abstract = step_mod.abstract_train_state(model, opt)
+    start_step = 0
+    resumed = resume_state(
+        ckpt, abstract, plan,
+        lambda mesh, rules: step_mod.train_state_shardings(model, opt, mesh,
+                                                           rules))
+    if resumed is not None:
+        start_step, state = resumed
+        print(f"[train] resumed from step {start_step} on "
+              f"{plan.n_devices} devices")
+    else:
+        with plan.mesh:
+            state = step_mod.init_train_state(model, opt,
+                                              jax.random.PRNGKey(args.seed))
+
+    def make_batch(step):
+        return make_train_batch(corpus, step, global_batch=shape.global_batch,
+                                seq=shape.seq_len,
+                                num_microbatches=shape.num_microbatches)
+
+    prefetch = Prefetcher(make_batch, depth=2, start_step=start_step)
+    watchdog = StepWatchdog(hang_timeout=args.hang_timeout)
+    losses = []
+    try:
+        with plan.mesh:
+            for step in range(start_step, args.steps):
+                _, batch = prefetch.next()
+                if args.fail_at_step is not None and step == args.fail_at_step:
+                    raise RuntimeError("injected failure (test)")
+                watchdog.step_begin()
+                state, metrics = jitted(state, batch)
+                loss = float(metrics["loss"])
+                wd = watchdog.step_end(step)
+                losses.append(loss)
+                if step % args.log_every == 0:
+                    print(f"[train] step {step} loss {loss:.4f} "
+                          f"({wd['step_seconds']:.2f}s)")
+                if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+                    ckpt.save(step + 1, state, blocking=False,
+                              metadata={"loss": loss, "arch": cfg.name})
+    finally:
+        prefetch.close()
+        ckpt.wait()
+    return {"losses": losses, "stragglers": watchdog.stragglers,
+            "final_step": args.steps}
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--hang-timeout", type=float, default=1800.0)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--fail-at-step", type=int, default=None)
+    return ap.parse_args(argv)
+
+
+def main():
+    args = parse_args()
+    out = train(args)
+    print(f"[train] done: final loss {out['losses'][-1]:.4f}, "
+          f"{out['stragglers']} straggler events")
+
+
+if __name__ == "__main__":
+    main()

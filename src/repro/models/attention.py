@@ -1,0 +1,299 @@
+"""Attention mixers: GQA (covers MHA/MQA), sliding-window local attention,
+MLA (DeepSeek multi-head latent attention), and encoder cross-attention.
+
+Memory discipline: training/prefill attention is *chunked over query blocks*
+(lax.scan with a rematted body), so peak logits memory is
+(B, block_q, T) rather than (B, S, T) — the pure-XLA flash-attention
+pattern. A Pallas flash kernel (kernels/flash_attn.py) is the TPU fast path;
+this module is the portable XLA path the dry-run lowers.
+
+Two execution modes share one parameterization:
+
+- ``full``  : training / prefill over a whole sequence (causal or bidir)
+- ``decode``: one new token against a cache; GQA caches (k, v); MLA caches
+  the *latent* (c_kv, k_rope) and uses the absorbed-matmul formulation, so
+  decode FLOPs/bytes scale with kv_lora_rank instead of H*Dh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionKind, ModelConfig
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_spec
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+DEFAULT_Q_CHUNK = 512
+
+
+# --- parameter specs ----------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.attention == AttentionKind.MLA and not cross:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "wq_a": ParamSpec((d, m.q_lora_rank), ("embed", None)),
+            "q_norm": rmsnorm_spec(m.q_lora_rank),
+            "wq_b": ParamSpec((m.q_lora_rank, h, qk), (None, "heads", None)),
+            "wkv_a": ParamSpec((d, m.kv_lora_rank), ("embed", None)),
+            "kv_norm": rmsnorm_spec(m.kv_lora_rank),
+            "wk_rope": ParamSpec((d, m.qk_rope_head_dim), ("embed", None)),
+            "wk_b": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                              (None, "heads", None)),
+            "wv_b": ParamSpec((m.kv_lora_rank, h, m.v_head_dim),
+                              (None, "heads", None)),
+            "wo": ParamSpec((h, m.v_head_dim, d), ("heads", None, "embed")),
+        }
+    # "qk_dim" falls back to the model axis when the head count does not
+    # divide it (e.g. 24 heads on a 16-way TP axis): the contraction over a
+    # sharded head_dim yields partial sums + one all-reduce, which beats
+    # replicating the whole attention computation across TP.
+    return {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "qk_dim")),
+        "wk": ParamSpec((d, kvh, dh), ("embed", "kv_heads", "qk_dim")),
+        "wv": ParamSpec((d, kvh, dh), ("embed", "kv_heads", "qk_dim")),
+        "wo": ParamSpec((h, dh, d), ("heads", "qk_dim", "embed")),
+    }
+
+
+# --- masking -------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+    """(..., S_q, S_k) additive fp32 bias from position comparisons."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        ok = ok & (dk <= dq)
+    if window:
+        ok = ok & (dq - dk < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _pick_chunk(s: int, want: int) -> int:
+    """Largest divisor of s that is <= want (shapes here are powers of two)."""
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return max(c, 1)
+
+
+# --- chunked softmax-attention core ---------------------------------------------
+
+def _chunked_attn(q, k, v, q_pos, k_pos, scale, *, causal: bool, window: int,
+                  q_chunk: int = DEFAULT_Q_CHUNK, constrain=None):
+    """q:(B,S,KVH,G,D) k:(B,T,KVH,D) v:(B,T,KVH,Dv) -> (B,S,KVH,G,Dv).
+
+    Scans over query chunks with a rematted body: peak logits memory is
+    (B,KVH,G,c,T) for one chunk c, and the backward pass recomputes each
+    chunk's logits instead of storing them (flash-attention memory shape).
+    """
+    b, s, kvh, g, d = q.shape
+    c = _pick_chunk(s, q_chunk)
+    n = s // c
+    qc = q.reshape(b, n, c, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    pc = jnp.broadcast_to(q_pos, (b, s)).reshape(b, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        q_blk, p_blk = xs                                    # (B,c,KVH,G,D), (B,c)
+        if constrain is not None:
+            # sequence-parallel attention: shard the query chunk over the
+            # model axis (each TP shard scores c/tp queries vs the full K/V)
+            # — the TP strategy for head counts that don't divide the axis.
+            q_blk = constrain(q_blk, ("batch", "attn_q_seq", None, None, None))
+        logits = jnp.einsum("bckgd,btkd->bkgct", q_blk, k).astype(jnp.float32)
+        logits = logits * scale
+        bias = _mask_bias(p_blk, k_pos, causal=causal, window=window)  # (B,c,T)
+        logits = logits + bias[:, None, None]
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgct,btkd->bckgd", w, v)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, 0, (qc, pc))                # (n,B,c,KVH,G,Dv)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kvh, g, v.shape[-1])
+
+
+# --- GQA / local ----------------------------------------------------------------
+
+def gqa_full(params, x, positions, cfg: ModelConfig, *, causal=True,
+             window: int = 0, kv_x=None, kv_positions=None, return_kv=False,
+             constrain=None):
+    """Training/prefill attention. kv_x!=None -> cross attention (no rope)."""
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kvh
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", src, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, params["wv"])
+    if kv_x is None and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions if kv_positions is None else kv_positions,
+                       cfg.rope_theta)
+    qg = q.reshape(*q.shape[:2], kvh, g, dh)
+    if kv_x is None:
+        kpos = positions if kv_positions is None else kv_positions
+        do_causal, do_window = causal, window
+    else:
+        kpos = jnp.arange(src.shape[1], dtype=jnp.int32)[None, :]
+        do_causal, do_window = False, 0
+    out = _chunked_attn(qg, k, v, positions, kpos,
+                        1.0 / jnp.sqrt(float(dh)), causal=do_causal,
+                        window=do_window, constrain=constrain)
+    out = out.reshape(*x.shape[:2], h, dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(params, x, cache: dict, pos, cfg: ModelConfig, *, window: int = 0):
+    """One-token decode against a ring-buffer cache.
+
+    cache: {'k','v': (B,Tbuf,KVH,Dh), 'kpos': (Tbuf,) absolute positions
+    (-1 = empty)}. ``pos`` is the absolute position of the new token. For
+    windowed (local) attention Tbuf == window, so 500k-context decode costs
+    O(window) — the point of the sub-quadratic archs.
+    """
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kvh
+    tbuf = cache["k"].shape[1]
+    write = jnp.mod(pos, tbuf)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])      # S == 1
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.rope_theta > 0:
+        p = jnp.broadcast_to(pos[None, None], x.shape[:2])
+        q = apply_rope(q, p, cfg.rope_theta)
+        k_new = apply_rope(k_new, p, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), write, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), write, axis=1)
+    kpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpos"], pos[None].astype(jnp.int32), write, axis=0)
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window:
+        valid = valid & (kpos > pos - window)
+    logits = jnp.einsum("bskgd,btkd->bkgst",
+                        q.reshape(*q.shape[:2], kvh, g, dh), k)
+    logits = logits.astype(jnp.float32) / jnp.sqrt(float(dh))
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(*x.shape[:2], h, dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k, "v": v, "kpos": kpos}
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_seq: int, n_layers: int,
+                   dtype=jnp.bfloat16) -> dict:
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.window:
+        max_seq = min(max_seq, cfg.window)        # ring buffer bound (local attn)
+    shape = (n_layers, batch, max_seq, kvh, dh)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+        "kpos": jax.ShapeDtypeStruct((n_layers, max_seq), jnp.int32),
+    }
+
+
+# --- MLA ------------------------------------------------------------------------
+
+def _mla_qkv(params, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["wq_a"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    c_kv = rmsnorm(params["kv_norm"], jnp.einsum("bsd,dr->bsr", x, params["wkv_a"]),
+                   cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["wk_rope"])[..., None, :]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_full(params, x, positions, cfg: ModelConfig, *, causal=True,
+             q_chunk: int = DEFAULT_Q_CHUNK, return_kv=False):
+    """Expanded MLA for train/prefill, chunked over query blocks."""
+    m = cfg.mla
+    h = cfg.n_heads
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, params["wk_b"])
+    v = jnp.einsum("btr,rhk->bthk", c_kv, params["wv_b"])
+    scale = 1.0 / jnp.sqrt(float(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    c = _pick_chunk(s, q_chunk)
+    n = s // c
+    qn = q_nope.reshape(b, n, c, h, -1).transpose(1, 0, 2, 3, 4)
+    qr = q_rope.reshape(b, n, c, h, -1).transpose(1, 0, 2, 3, 4)
+    pc = jnp.broadcast_to(positions, (b, s)).reshape(b, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        qn_b, qr_b, p_b = xs
+        logits = (
+            jnp.einsum("bchk,bthk->bhct", qn_b, k_nope)
+            + jnp.einsum("bchk,btk->bhct", qr_b, k_rope)
+        ).astype(jnp.float32) * scale
+        bias = _mask_bias(p_b, positions, causal=causal, window=0)
+        logits = logits + bias[:, None]
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhct,bthk->bchk", w, v)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, 0, (qn, qr, pc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, m.v_head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if return_kv:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(params, x, cache: dict, pos, cfg: ModelConfig):
+    """Absorbed-matmul MLA decode against the latent cache.
+
+    cache: {'c_kv': (B,T,r_kv), 'k_rope': (B,T,r_rope)}; ``pos`` is the
+    absolute position of the new token. W_uk is absorbed into the query,
+    W_uv into the output — per-step cost scales with r_kv (512) not
+    H*Dh (16384) [DeepSeek-V2 §2.1.2].
+    """
+    m = cfg.mla
+    p = jnp.broadcast_to(pos[None, None], x.shape[:2])
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, x, p, cfg)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    # absorb: q_lat[h] = q_nope[h] @ W_uk[h]^T  -> score against latent directly
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+    scale = 1.0 / jnp.sqrt(float(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    logits = (
+        jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+        + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    t = c_kv.shape[1]
+    valid = jnp.arange(t, dtype=jnp.int32) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", w, c_kv)
+    out = jnp.einsum("bshr,rhk->bshk", ctx_lat, params["wv_b"])
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_seq: int, n_layers: int,
+                   dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jax.ShapeDtypeStruct((n_layers, batch, max_seq, m.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((n_layers, batch, max_seq, m.qk_rope_head_dim), dtype),
+    }

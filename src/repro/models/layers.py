@@ -1,0 +1,105 @@
+"""Shared layer primitives: norms, rope, embeddings, dense MLPs.
+
+All forwards are pure functions (params, x) -> y; activations compute in the
+config dtype with fp32 softmax/norm statistics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+
+
+# --- norms -------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(w, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+# --- rotary embeddings ---------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return inv  # (dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotated pairwise; positions: (..., S)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                              # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# --- embedding -----------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    # Table is vocab-sharded only: a second (fsdp) dim on the gather table
+    # trips XLA SPMD's "involuntary full rematerialization" fallback.
+    specs = {"embedding": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", None),
+                                    init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return specs
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embedding"].T
+    else:
+        w = params["lm_head"]
+    return jnp.einsum("...d,dv->...v", x, w).astype(jnp.float32)
+
+
+# --- dense MLP -----------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    specs = {
+        "up": ParamSpec((d, f), ("embed", "mlp")),
+        "down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_gated:
+        specs["gate"] = ParamSpec((d, f), ("embed", "mlp"))
+    return specs
+
+
+def mlp(params, x, cfg: ModelConfig):
+    up = jnp.einsum("...d,df->...f", x, params["up"])
+    if cfg.mlp_gated:
+        gate = jnp.einsum("...d,df->...f", x, params["gate"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["down"])

@@ -1,0 +1,383 @@
+"""Unified model API over the architecture zoo.
+
+``Model`` exposes:
+  - ``param_specs()``        pytree of ParamSpec (abstract — no allocation)
+  - ``init(key)``            materialized params
+  - ``loss(params, batch)``  next-token CE (+ MoE aux, + MTP) for train_step
+  - ``prefill(params, batch)``  full-sequence forward -> (last logits, cache)
+  - ``decode(params, cache, tokens)``  one-token serve step
+  - ``cache_specs(batch, max_seq)``    decode-cache ShapeDtypeStructs
+  - ``input_specs(shape)``   dry-run ShapeDtypeStruct inputs per shape suite
+
+Homogeneous stacks run under ``lax.scan`` with a rematted body (O(1) HLO in
+depth); the Griffin interleave is unrolled (3 distinct layer kinds).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionKind, Family, ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import params as prm
+from repro.models import transformer as tfm
+from repro.models.layers import (embed, embed_specs, rmsnorm, rmsnorm_spec,
+                                 sinusoidal_positions, unembed)
+from repro.models.params import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class StackDef:
+    name: str
+    kinds: tuple[str, ...]
+    scan: bool
+
+    @property
+    def homogeneous_kind(self) -> str:
+        assert self.scan
+        return self.kinds[0]
+
+
+def _stacks_for(cfg: ModelConfig) -> tuple[StackDef, ...]:
+    if cfg.family == Family.SSM:
+        return (StackDef("layers", ("mamba2",) * cfg.n_layers, True),)
+    if cfg.family == Family.HYBRID:
+        pat = cfg.hybrid.pattern
+        kinds = tuple(pat[i % len(pat)] for i in range(cfg.n_layers))
+        return (StackDef("layers", kinds, False),)
+    if cfg.family == Family.AUDIO:
+        return (StackDef("decoder", ("dec_cross",) * cfg.n_layers, True),)
+    if cfg.moe is not None:
+        fd = cfg.moe.first_dense
+        stacks = []
+        if fd:
+            stacks.append(StackDef("dense_layers", ("attn_dense",) * fd, True))
+        stacks.append(StackDef("moe_layers", ("attn_moe",) * (cfg.n_layers - fd), True))
+        return tuple(stacks)
+    return (StackDef("layers", ("attn_dense",) * cfg.n_layers, True),)
+
+
+def _remat(f, policy: str):
+    if policy == "none":
+        return f
+    if policy == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, mesh=None, rules=None):
+        self.cfg = cfg
+        self.stacks = _stacks_for(cfg)
+        self.mesh = mesh
+        self.rules = rules
+
+    def _constrain(self, x, logical: tuple):
+        """Activation sharding constraint at stack boundaries (no-op off-mesh).
+
+        Explicit constraints keep the batch dim dp-sharded through gathers/
+        reshapes where GSPMD propagation gives up (it falls back to full
+        replication on the embedding gather otherwise).
+        """
+        if self.mesh is None or self.rules is None:
+            return x
+        sh = self.rules.sharding(self.mesh, logical, x.shape)
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    # --- parameters --------------------------------------------------------
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs: dict[str, Any] = {"embed": embed_specs(cfg)}
+        for st in self.stacks:
+            if st.scan:
+                one = tfm.layer_specs(cfg, st.homogeneous_kind)
+                specs[st.name] = prm.map_stacked(one, len(st.kinds))
+            else:
+                specs[st.name] = [tfm.layer_specs(cfg, k) for k in st.kinds]
+        specs["final_norm"] = rmsnorm_spec(cfg.d_model)
+        if cfg.encdec is not None:
+            enc_one = tfm.layer_specs(cfg, "enc")
+            specs["encoder"] = prm.map_stacked(enc_one, cfg.encdec.n_encoder_layers)
+            specs["enc_norm"] = rmsnorm_spec(cfg.d_model)
+        if cfg.mtp_depth:
+            kind = "attn_moe" if cfg.moe is not None else "attn_dense"
+            specs["mtp"] = {
+                "proj": ParamSpec((2 * cfg.d_model, cfg.d_model), ("embed", None)),
+                "norm_h": rmsnorm_spec(cfg.d_model),
+                "norm_e": rmsnorm_spec(cfg.d_model),
+                "layer": tfm.layer_specs(cfg, kind),
+                "final_norm": rmsnorm_spec(cfg.d_model),
+            }
+        return specs
+
+    def init(self, key) -> Any:
+        return prm.materialize(key, self.param_specs())
+
+    def abstract_params(self):
+        return prm.abstract(self.param_specs())
+
+    # --- embedding / frontends ----------------------------------------------
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens).astype(jnp.bfloat16)
+        if cfg.family == Family.VLM and "patches" in batch:
+            n = batch["patches"].shape[1]
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x[:, n:]], axis=1)
+        return self._constrain(x, ("batch", "seq", None))
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        pe = sinusoidal_positions(frames.shape[1], cfg.d_model)
+        x = (frames.astype(jnp.float32) + pe).astype(jnp.bfloat16)
+        positions = jnp.broadcast_to(jnp.arange(frames.shape[1], dtype=jnp.int32),
+                                     frames.shape[:2])
+
+        def body(carry, layer_params):
+            y, _ = tfm.layer_apply(layer_params, carry, positions, cfg, "enc",
+                                   causal=False)
+            return self._constrain(y, ("batch", "seq", None)), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg.remat_policy), x, params["encoder"])
+        return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # --- full-sequence forward ------------------------------------------------
+
+    def forward(self, params, batch, *, n_moe_groups: int = 1):
+        """-> (hidden (B,S,d) post-final-norm, aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.rope_theta <= 0 and cfg.family == Family.AUDIO:
+            pe = sinusoidal_positions(s, cfg.d_model)
+            x = (x.astype(jnp.float32) + pe).astype(x.dtype)
+        enc_out = None
+        if cfg.encdec is not None:
+            enc_out = self._encode(params, batch["frames"])
+        aux_total = jnp.zeros((), jnp.float32)
+        for st in self.stacks:
+            if st.scan:
+                kind = st.homogeneous_kind
+
+                def body(carry, layer_params, _kind=kind):
+                    xc, aux = carry
+                    y, a = tfm.layer_apply(layer_params, xc, positions, cfg,
+                                           _kind, enc_out=enc_out,
+                                           n_moe_groups=n_moe_groups,
+                                           constrain=self._constrain
+                                           if self.mesh is not None else None)
+                    y = self._constrain(y, ("batch", "seq", None))
+                    return (y, aux + a), None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    _remat(body, cfg.remat_policy), (x, aux_total),
+                    params[st.name])
+            else:
+                for i, kind in enumerate(st.kinds):
+                    def body(xc, _p=params[st.name][i], _k=kind):
+                        y, a = tfm.layer_apply(_p, xc, positions, cfg, _k,
+                                               enc_out=enc_out,
+                                               n_moe_groups=n_moe_groups)
+                        return y, a
+                    x, a = _remat(body, cfg.remat_policy)(x)
+                    x = self._constrain(x, ("batch", "seq", None))
+                    aux_total = aux_total + a
+        h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return h, aux_total
+
+    # --- training loss ----------------------------------------------------------
+
+    @staticmethod
+    def _ce(logits, labels):
+        """fp32 CE with -1 = masked. -> (sum_loss, n_valid)."""
+        valid = labels >= 0
+        lab = jnp.where(valid, labels, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * valid
+        return jnp.sum(nll), jnp.sum(valid.astype(jnp.float32))
+
+    def loss(self, params, batch, *, n_moe_groups: int = 1):
+        cfg = self.cfg
+        h, aux = self.forward(params, batch, n_moe_groups=n_moe_groups)
+        logits = self._constrain(unembed(params["embed"], h, cfg),
+                                 ("batch", "seq", "vocab"))
+        total, n = self._ce(logits, batch["labels"])
+        loss = total / jnp.maximum(n, 1.0)
+        metrics = {"ce": loss, "aux": aux, "tokens": n}
+        if cfg.mtp_depth:
+            mtp = params["mtp"]
+            tokens = batch["tokens"]
+            e_next = embed(params["embed"], tokens[:, 1:]).astype(h.dtype)
+            x_mtp = jnp.concatenate(
+                [rmsnorm(mtp["norm_h"], h[:, :-1], cfg.norm_eps),
+                 rmsnorm(mtp["norm_e"], e_next, cfg.norm_eps)], axis=-1)
+            x_mtp = jnp.einsum("bsk,kd->bsd", x_mtp, mtp["proj"])
+            pos = jnp.broadcast_to(jnp.arange(x_mtp.shape[1], dtype=jnp.int32),
+                                   x_mtp.shape[:2])
+            kind = "attn_moe" if cfg.moe is not None else "attn_dense"
+            y, _ = tfm.layer_apply(mtp["layer"], x_mtp, pos, cfg, kind,
+                                   n_moe_groups=n_moe_groups)
+            h_mtp = rmsnorm(mtp["final_norm"], y, cfg.norm_eps)
+            logits_mtp = unembed(params["embed"], h_mtp, cfg)
+            t2, n2 = self._ce(logits_mtp, batch["labels"][:, 1:])
+            mtp_loss = t2 / jnp.maximum(n2, 1.0)
+            metrics["mtp_ce"] = mtp_loss
+            loss = loss + 0.3 * mtp_loss
+        loss = loss + aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # --- serving ------------------------------------------------------------------
+
+    def cache_specs(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        caches: dict[str, Any] = {}
+        for st in self.stacks:
+            if st.scan:
+                one = tfm.layer_cache_spec(cfg, st.homogeneous_kind, batch,
+                                           max_seq, dtype)
+                caches[st.name] = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((len(st.kinds), *s.shape), s.dtype),
+                    one)
+            else:
+                caches[st.name] = [tfm.layer_cache_spec(cfg, k, batch, max_seq, dtype)
+                                   for k in st.kinds]
+        return {"stacks": caches, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_logical(self):
+        cfg = self.cfg
+        out: dict[str, Any] = {}
+        for st in self.stacks:
+            if st.scan:
+                one = tfm.cache_logical(st.homogeneous_kind, cfg)
+                out[st.name] = jax.tree.map(
+                    lambda spec: ("layers", *spec), one,
+                    is_leaf=lambda v: isinstance(v, tuple))
+            else:
+                out[st.name] = [tfm.cache_logical(k, cfg) for k in st.kinds]
+        return {"stacks": out, "pos": ()}
+
+    def prefill(self, params, batch, *, max_seq: int, cache_dtype=jnp.bfloat16):
+        """Full-sequence forward that also builds the decode cache."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.rope_theta <= 0 and cfg.family == Family.AUDIO:
+            pe = sinusoidal_positions(s, cfg.d_model)
+            x = (x.astype(jnp.float32) + pe).astype(x.dtype)
+        enc_out = None
+        if cfg.encdec is not None:
+            enc_out = self._encode(params, batch["frames"])
+        caches: dict[str, Any] = {}
+        for st in self.stacks:
+            if st.scan:
+                kind = st.homogeneous_kind
+
+                def body(xc, layer_params, _kind=kind):
+                    y, c = tfm.layer_prefill(layer_params, xc, positions, cfg,
+                                             _kind, max_seq=max_seq,
+                                             enc_out=enc_out,
+                                             cache_dtype=cache_dtype)
+                    return self._constrain(y, ("batch", "seq", None)), c
+
+                x, caches[st.name] = jax.lax.scan(
+                    _remat(body, cfg.remat_policy), x, params[st.name])
+            else:
+                lst = []
+                for i, kind in enumerate(st.kinds):
+                    x, c = tfm.layer_prefill(params[st.name][i], x, positions,
+                                             cfg, kind, max_seq=max_seq,
+                                             enc_out=enc_out,
+                                             cache_dtype=cache_dtype)
+                    lst.append(c)
+                caches[st.name] = lst
+        h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], h[:, -1:], cfg)
+        return logits, {"stacks": caches, "pos": jnp.asarray(s, jnp.int32)}
+
+    def decode(self, params, cache, tokens):
+        """One-token step. tokens: (B,1) -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = embed(params["embed"], tokens).astype(jnp.bfloat16)
+        if cfg.rope_theta <= 0 and cfg.family == Family.AUDIO:
+            pe = jax.lax.dynamic_slice_in_dim(
+                sinusoidal_positions(65536, cfg.d_model), pos, 1, axis=0)
+            x = (x.astype(jnp.float32) + pe[None]).astype(x.dtype)
+        new_caches: dict[str, Any] = {}
+        for st in self.stacks:
+            if st.scan:
+                kind = st.homogeneous_kind
+
+                def body(xc, xs, _kind=kind):
+                    layer_params, layer_cache = xs
+                    y, c = tfm.layer_decode(layer_params, xc, layer_cache, pos,
+                                            cfg, _kind)
+                    return self._constrain(y, ("batch", "seq", None)), c
+
+                x, new_caches[st.name] = jax.lax.scan(
+                    body, x, (params[st.name], cache["stacks"][st.name]))
+            else:
+                lst = []
+                for i, kind in enumerate(st.kinds):
+                    x, c = tfm.layer_decode(params[st.name][i], x,
+                                            cache["stacks"][st.name][i], pos,
+                                            cfg, kind)
+                    lst.append(c)
+                new_caches[st.name] = lst
+        h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        return logits, {"stacks": new_caches, "pos": pos + 1}
+
+    # --- dry-run input specs ---------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+        Train cells with grad accumulation are microbatch-major: every leaf
+        is (M, B/M, ...) with the second dim dp-sharded.
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        m = shape.num_microbatches if shape.kind == "train" else 1
+        lead = (m, b // m) if m > 1 else (b,)
+        specs = {"tokens": jax.ShapeDtypeStruct((*lead, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((*lead, s), jnp.int32)
+        if cfg.encdec is not None:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (*lead, cfg.encdec.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == Family.VLM and cfg.n_frontend_tokens:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (*lead, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+
+    def input_logical(self, shape: ShapeConfig) -> dict:
+        m = shape.num_microbatches if shape.kind == "train" else 1
+        lead = (None, "batch") if m > 1 else ("batch",)
+        out = {"tokens": (*lead, None)}
+        if shape.kind == "train":
+            out["labels"] = (*lead, None)
+        if shape.kind != "decode":
+            if self.cfg.encdec is not None:
+                out["frames"] = (*lead, None, None)
+            if self.cfg.family == Family.VLM and self.cfg.n_frontend_tokens:
+                out["patches"] = (*lead, None, None)
+        return out
+
+
+def make_model(cfg: ModelConfig, mesh=None, rules=None) -> Model:
+    return Model(cfg, mesh=mesh, rules=rules)

@@ -1,0 +1,141 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+Scalability note (this is what makes 256-expert/1M-token cells lower):
+the classic one-hot dispatch tensor (T, E, C) is O(T*E*C) and cannot exist
+at DeepSeek-V3 scale. We instead sort the T*K (token, expert) assignments by
+expert id, compute each assignment's rank within its expert via the sorted
+run starts, and scatter rows into an (E, C, d) buffer (overflow rows drop,
+standard capacity semantics). Combine is the reverse gather weighted by
+router probabilities. Cost: O(TK log TK) sort + O(TK d) data movement.
+
+Tokens are pre-grouped into ``n_groups`` independent dispatch groups (one per
+data shard at scale) so the sort never crosses the sharded token axis; the
+(E, C, d) buffers are sharded over the 'experts'->model mesh axis, which is
+exactly expert parallelism (the reshard is XLA's all-to-all).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert or cfg.d_ff
+    specs = {
+        "router": ParamSpec((d, m.n_experts), ("embed", None), dtype=jnp.float32),
+        "w_gate": ParamSpec((m.n_experts, d, f), ("experts", "embed", "mlp")),
+        "w_up": ParamSpec((m.n_experts, d, f), ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((m.n_experts, f, d), ("experts", "mlp", "embed")),
+    }
+    if m.router == "sigmoid":
+        specs["router_bias"] = ParamSpec((m.n_experts,), (None,), init="zeros",
+                                         dtype=jnp.float32)
+    if m.n_shared:
+        fs = f * m.n_shared
+        specs["shared_gate"] = ParamSpec((d, fs), ("embed", "mlp"))
+        specs["shared_up"] = ParamSpec((d, fs), ("embed", "mlp"))
+        specs["shared_down"] = ParamSpec((fs, d), ("mlp", "embed"))
+    return specs
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    cf = float(os.environ.get("REPRO_MOE_CF", m.capacity_factor))
+    c = math.ceil(tokens_per_group * m.top_k * cf / m.n_experts)
+    return max(8, -(-c // 8) * 8)     # round up to a multiple of 8
+
+
+def _routing(params, x_flat, cfg: ModelConfig):
+    """x_flat: (G, T, d) -> (weights (G,T,K) fp32, ids (G,T,K) int32, aux loss)."""
+    m = cfg.moe
+    logits = jnp.einsum("gtd,de->gte", x_flat.astype(jnp.float32),
+                        params["router"])
+    if m.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"][None, None, :]
+        _, ids = jax.lax.top_k(sel, m.top_k)
+        w = jnp.take_along_axis(scores, ids, axis=-1)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+        aux = jnp.zeros((), jnp.float32)              # aux-loss-free routing
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, m.top_k)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+        # Switch-style load-balance loss: E * sum_e f_e * P_e
+        pe = jnp.mean(probs, axis=(0, 1))
+        fe = jnp.zeros((m.n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+        fe = fe / ids.size
+        aux = m.aux_loss_weight * m.n_experts * jnp.sum(fe * pe)
+    return w, ids.astype(jnp.int32), aux
+
+
+def _dispatch_indices(ids_flat, n_experts: int, cap: int):
+    """ids_flat: (A,) sorted-free assignment ids -> (dest slot or OOB, perm).
+
+    Returns per-assignment destination slot in the (E*C) buffer with
+    overflow mapped to E*C (dropped by scatter mode='drop').
+    """
+    a = ids_flat.shape[0]
+    order = jnp.argsort(ids_flat, stable=True)            # sort by expert
+    sorted_ids = ids_flat[order]
+    counts = jax.ops.segment_sum(jnp.ones((a,), jnp.int32), ids_flat,
+                                 num_segments=n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    rank_sorted = jnp.arange(a, dtype=jnp.int32) - starts[sorted_ids]
+    rank = jnp.zeros((a,), jnp.int32).at[order].set(rank_sorted)
+    ok = rank < cap
+    dest = jnp.where(ok, ids_flat * cap + rank, n_experts * cap)
+    return dest, ok
+
+
+def moe_ffn(params, x, cfg: ModelConfig, *, n_groups: int = 1):
+    """x: (B, S, d) -> (y, aux_loss). Capacity dispatch + expert GLU FFN."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t_total = b * s
+    g = n_groups if t_total % n_groups == 0 else 1
+    tg = t_total // g
+    x_flat = x.reshape(g, tg, d)
+    w, ids, aux = _routing(params, x_flat, cfg)
+    cap = capacity(tg, cfg)
+    k = m.top_k
+    e = m.n_experts
+
+    def one_group(xg, idg, wg):
+        # xg: (T,d), idg: (T,K), wg: (T,K)
+        ids_flat = idg.reshape(-1)                        # (T*K,)
+        dest, ok = _dispatch_indices(ids_flat, e, cap)
+        rows = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)
+        buf = jnp.zeros((e * cap, d), xg.dtype)
+        buf = buf.at[dest].set(xg[rows], mode="drop")     # (E*C, d)
+        buf = buf.reshape(e, cap, d)
+        gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(xg.dtype) * up
+        out = jnp.einsum("ecf,efd->ecd", h, params["w_down"]).reshape(e * cap, d)
+        # combine: gather back, zero for dropped assignments
+        gathered = jnp.where(ok[:, None], out.at[dest].get(mode="fill",
+                                                           fill_value=0), 0)
+        y = jax.ops.segment_sum(gathered * wg.reshape(-1, 1).astype(xg.dtype),
+                                rows, num_segments=tg)
+        return y
+
+    y = jax.vmap(one_group)(x_flat, ids, w)
+    y = y.reshape(b, s, d)
+    if m.n_shared:
+        sg = jnp.einsum("bsd,df->bsf", x, params["shared_gate"])
+        su = jnp.einsum("bsd,df->bsf", x, params["shared_up"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        y = y + jnp.einsum("bsf,fd->bsd", sh, params["shared_down"])
+    return y, aux

@@ -1,0 +1,129 @@
+"""Abstract parameter specifications.
+
+Models declare their parameters as a pytree of ``ParamSpec`` (shape, dtype,
+logical sharding axes, initializer). The tree is then *materialized* three
+ways:
+
+- ``materialize``      -> real arrays (smoke tests, examples, training)
+- ``abstract``         -> ShapeDtypeStruct stand-ins (dry-run: no allocation)
+- ``shardings``        -> NamedShardings via the logical->mesh rule table
+
+Keeping init abstract is what lets the 671B config lower+compile on a CPU
+container without ever allocating a parameter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import ShardingRules
+
+InitFn = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"              # normal | zeros | ones | embed | lambda_lru
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(
+                f"spec rank mismatch: shape {self.shape} vs logical {self.logical}"
+            )
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # stacked-layer leading dims are not fan-in; use second-to-last dim.
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1][-2:][-1:])) or shape[-2]
+
+
+def _init_one(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    shape, dtype = spec.shape, spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "lambda_lru":
+        # Griffin Λ init: a in [0.9, 0.999] -> Λ = softplus^-1-ish param.
+        u = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(jnp.expm1(-jnp.log(u) * 8.0) + 1e-8)  # softplus inverse of -c^-1 log a
+        return lam.astype(dtype)
+    if spec.init == "dt_bias":
+        u = jax.random.uniform(key, shape, jnp.float32, math.log(1e-3), math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # inv softplus
+    if spec.init == "a_log":
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    std = spec.scale / math.sqrt(max(_fan_in(shape), 1))
+    if spec.init == "embed":
+        std = spec.scale
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(key: jax.Array, spec_tree):
+    """Seeded init of the full parameter pytree."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract(spec_tree):
+    """ShapeDtypeStruct tree — for .lower() without allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def shardings(spec_tree, mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda s: rules.sharding(mesh, s.logical, s.shape), spec_tree,
+        is_leaf=_is_spec,
+    )
+
+
+def logical_specs(spec_tree):
+    return jax.tree.map(lambda s: s.logical, spec_tree, is_leaf=_is_spec)
+
+
+def param_bytes(spec_tree) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    )
+
+
+def param_count(spec_tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec))
+
+
+def stacked(spec: ParamSpec, n: int) -> ParamSpec:
+    """Prepend a scan-over-layers dim (logical axis 'layers', never sharded)."""
+    return ParamSpec(
+        shape=(n, *spec.shape),
+        logical=("layers", *spec.logical),
+        init=spec.init,
+        scale=spec.scale,
+        dtype=spec.dtype,
+    )
+
+
+def map_stacked(tree, n: int):
+    return jax.tree.map(lambda s: stacked(s, n), tree, is_leaf=_is_spec)

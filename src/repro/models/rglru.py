@@ -1,0 +1,111 @@
+"""Griffin recurrent block: temporal conv + RG-LRU gated linear recurrence
+[arXiv:2402.19427].
+
+The linear recurrence h_t = a_t * h_{t-1} + b_t is evaluated with
+``jax.lax.associative_scan`` (log-depth, parallelizable over the sequence —
+the TPU-friendly formulation of the paper's custom linear-scan kernel).
+Decode is the O(1) recurrent update; the state is (B, W) + a conv tail —
+window-free, which is what makes long_500k feasible for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    k = cfg.hybrid.conv_width
+    return {
+        "in_x": ParamSpec((d, w), ("embed", "mlp")),
+        "in_gate": ParamSpec((d, w), ("embed", "mlp")),
+        "conv_w": ParamSpec((k, w), (None, "mlp")),
+        "conv_b": ParamSpec((w,), ("mlp",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("mlp", None)),
+        "b_a": ParamSpec((w,), (None,), init="zeros"),
+        "w_i": ParamSpec((w, w), ("mlp", None)),
+        "b_i": ParamSpec((w,), (None,), init="zeros"),
+        "lam": ParamSpec((w,), (None,), init="lambda_lru", dtype=jnp.float32),
+        "out": ParamSpec((w, d), ("mlp", "embed")),
+    }
+
+
+def _gates(params, x):
+    """x: (..., W) -> (log_a, gated_input) both fp32."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wk->...k", x, params["w_a"])
+                       .astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wk->...k", x, params["w_i"])
+                       .astype(jnp.float32) + params["b_i"])
+    log_a = -_C * r * jax.nn.softplus(params["lam"])             # (..., W) <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * x.astype(jnp.float32))
+    return log_a, gated
+
+
+def _conv(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : xp.shape[1] - (k - 1 - i), :] * w[i] for i in range(k))
+    return out + b
+
+
+def rglru_forward(params, x, cfg: ModelConfig, *, return_state: bool = False):
+    """Full-sequence recurrent block. x: (B,S,d) -> (B,S,d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"])
+                       .astype(jnp.float32))
+    xb_raw = jnp.einsum("bsd,dw->bsw", x, params["in_x"])
+    xb = _conv(xb_raw, params["conv_w"], params["conv_b"])
+    log_a, bterm = _gates(params, xb)
+    a = jnp.exp(log_a)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    y = (gate * h).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"])
+    if return_state:
+        k = cfg.hybrid.conv_width
+        tail = xb_raw[:, -(k - 1):, :]
+        if tail.shape[1] < k - 1:
+            pad = k - 1 - tail.shape[1]
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"conv": tail, "h": h[:, -1]}
+    return out
+
+
+# --- decode ---------------------------------------------------------------------
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int, n_layers: int,
+                     dtype=jnp.bfloat16) -> dict:
+    w = cfg.hybrid.lru_width or cfg.d_model
+    k = cfg.hybrid.conv_width
+    return {
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, k - 1, w), dtype),
+        "h": jax.ShapeDtypeStruct((n_layers, batch, w), jnp.float32),
+    }
+
+
+def rglru_decode(params, x, layer_cache, cfg: ModelConfig):
+    """Single-token update. x: (B,1,d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"])
+                       .astype(jnp.float32))[:, 0]
+    xb = jnp.einsum("bsd,dw->bsw", x, params["in_x"])[:, 0]      # (B,W)
+    hist = jnp.concatenate([layer_cache["conv"],
+                            xb[:, None].astype(layer_cache["conv"].dtype)], axis=1)
+    xc = jnp.einsum("bkw,kw->bw", hist.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    log_a, bterm = _gates(params, xc.astype(x.dtype))
+    h = layer_cache["h"] * jnp.exp(log_a) + bterm
+    y = (gate * h).astype(x.dtype)[:, None]
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"])
+    return out, {"conv": hist[:, 1:].astype(layer_cache["conv"].dtype), "h": h}

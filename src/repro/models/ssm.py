@@ -1,0 +1,193 @@
+"""Mamba-2 block: state-space duality (SSD) chunked scan [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute *within* chunks of length Q plus a sequential inter-chunk state
+recurrence of length S/Q — O(S*Q) work, O(S/Q) scan depth. Decode is the
+O(1) recurrent update; the "KV cache" is the (H, P, N) state + conv tail,
+which is why long_500k is trivially feasible for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamSpec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.headdim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nheads, conv_ch
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nheads   # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.conv_kernel, conv_ch), (None, "ssm_inner")),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((nheads,), (None,), init="a_log", dtype=jnp.float32),
+        "d_skip": ParamSpec((nheads,), (None,), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamSpec((nheads,), (None,), init="dt_bias", dtype=jnp.float32),
+        "norm": ParamSpec((d_in,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s, d_in, nheads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, bb, cc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn,
+                                          2 * d_in + 2 * gn], axis=-1)
+    return z, x, bb, cc, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : xp.shape[1] - (k - 1 - i), :] * w[i] for i in range(k))
+    return out + b
+
+
+def ssd_chunked(x, dt, a, bb, cc, d_skip, *, chunk: int, init_state=None):
+    """SSD scan. x:(B,S,H,P) dt:(B,S,H) a:(H,) bb/cc:(B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    One lax.scan over chunks carries the inter-chunk state; the rematted
+    body does the quadratic intra-chunk work, so peak memory is one chunk's
+    (B,Q,Q,H) score tensor rather than all Nc of them.
+    """
+    b, s, h, p = x.shape
+    g, n = bb.shape[2], bb.shape[3]
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    rep = h // g
+
+    # (Nc, B, Q, ...) chunked views for scan
+    xr = jnp.moveaxis(x.reshape(b, nc, q, h, p), 1, 0)
+    dtr = jnp.moveaxis(dt.reshape(b, nc, q, h), 1, 0)
+    br = jnp.moveaxis(jnp.repeat(bb.reshape(b, nc, q, g, n), rep, axis=3), 1, 0)
+    cr = jnp.moveaxis(jnp.repeat(cc.reshape(b, nc, q, g, n), rep, axis=3), 1, 0)
+
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    @jax.checkpoint
+    def body(hprev, xs):
+        xc, dtc, bc, cc_ = xs                    # (B,Q,H,P),(B,Q,H),(B,Q,H,N)x2
+        da = dtc * a[None, None, :]              # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)
+        seg = cum[:, -1, :]                      # (B,H)
+        # intra-chunk
+        li = cum[:, :, None, :] - cum[:, None, :, :]
+        ldec = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        scores = jnp.einsum("bqhk,bthk->bqth", cc_, bc)
+        xdt = xc * dtc[..., None]
+        y_diag = jnp.einsum("bqth,bqth,bthp->bqhp", scores.astype(jnp.float32),
+                            ldec, xdt.astype(jnp.float32))
+        # inter-chunk: read previous state
+        decay_in = jnp.exp(cum)                  # (B,Q,H)
+        y_off = jnp.einsum("bqhn,bqh,bhpn->bqhp", cc_.astype(jnp.float32),
+                           decay_in, hprev)
+        # state update: contribution of this chunk to the running state
+        decay_to_end = jnp.exp(seg[:, None, :] - cum)
+        cst = jnp.einsum("bqhn,bqh,bqhp->bhpn", bc.astype(jnp.float32),
+                         decay_to_end, xdt.astype(jnp.float32))
+        hnew = hprev * jnp.exp(seg)[:, :, None, None] + cst
+        y = y_diag + y_off + xc.astype(jnp.float32) * d_skip[None, None, :, None]
+        return hnew, y.astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(body, h0, (xr, dtr, br, cr))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, h_final
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, *, return_state: bool = False):
+    """Full-sequence mamba2 block. x: (B,S,d) -> (B,S,d)."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([xs, bb, cc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+                      .astype(jnp.float32)).astype(x.dtype)
+    xs, bb, cc = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(*xs.shape[:2], nheads, s.headdim)
+    bh = bb.reshape(*bb.shape[:2], s.n_groups, s.d_state)
+    ch = cc.reshape(*cc.shape[:2], s.n_groups, s.d_state)
+    y, h_final = ssd_chunked(xh, dt, a, bh, ch, params["d_skip"],
+                             chunk=s.chunk_size)
+    y = y.reshape(*x.shape[:2], d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    if return_state:
+        k = s.conv_kernel
+        tail = xbc_raw[:, -(k - 1):, :]
+        if tail.shape[1] < k - 1:   # S < K-1: left-pad with zeros
+            pad = k - 1 - tail.shape[1]
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"conv": tail, "ssm": h_final}
+    return out
+
+
+# --- decode ---------------------------------------------------------------------
+
+def mamba2_cache_spec(cfg: ModelConfig, batch: int, n_layers: int,
+                      dtype=jnp.bfloat16) -> dict:
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, s.conv_kernel - 1, conv_ch), dtype),
+        "ssm": jax.ShapeDtypeStruct((n_layers, batch, nheads, s.headdim, s.d_state),
+                                    jnp.float32),
+    }
+
+
+def mamba2_decode(params, x, layer_cache, cfg: ModelConfig):
+    """Single-token recurrent update. x: (B,1,d)."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)[:, 0]           # (B,C)
+    conv_hist = jnp.concatenate([layer_cache["conv"],
+                                 xbc[:, None].astype(layer_cache["conv"].dtype)],
+                                axis=1)                          # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_hist.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    xs_c, bb_c, cc_c = jnp.split(conv_out.astype(x.dtype),
+                                 [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt1 * a[None, :])                               # (B,H)
+    xh = xs_c.reshape(-1, nheads, s.headdim)
+    rep = nheads // s.n_groups
+    bh = jnp.repeat(bb_c.reshape(-1, s.n_groups, s.d_state), rep, axis=1)
+    chh = jnp.repeat(cc_c.reshape(-1, s.n_groups, s.d_state), rep, axis=1)
+    hstate = layer_cache["ssm"]                                  # (B,H,P,N) fp32
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt1, xh.astype(jnp.float32),
+                     bh.astype(jnp.float32))
+    hstate = hstate * da[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", chh.astype(jnp.float32), hstate)
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    new_cache = {"conv": conv_hist[:, 1:].astype(layer_cache["conv"].dtype),
+                 "ssm": hstate}
+    return out, new_cache

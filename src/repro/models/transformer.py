@@ -1,0 +1,244 @@
+"""Layer assembly: pre-norm residual blocks over pluggable mixers.
+
+``layer_specs``/``layer_apply``/``layer_decode`` define one decoder layer for
+every family; stacks are built in model.py (scanned where homogeneous,
+unrolled for the Griffin interleave and enc-dec cross wiring).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionKind, Family, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp, mlp_specs, rmsnorm, rmsnorm_spec
+
+
+# --- layer kinds ----------------------------------------------------------------
+# "attn_dense"  : attention + dense MLP
+# "attn_moe"    : attention + MoE FFN
+# "mamba2"      : norm + mamba2 block (no FFN)
+# "recurrent"   : RG-LRU block + dense MLP
+# "local_attn"  : sliding-window attention + dense MLP
+# "enc"         : bidirectional attention + dense MLP (encoder)
+# "dec_cross"   : self attn + cross attn + dense MLP (enc-dec decoder)
+
+
+def layer_specs(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    s: dict[str, Any] = {"ln1": rmsnorm_spec(d)}
+    if kind == "mamba2":
+        s["ssm"] = ssm_mod.ssm_specs(cfg)
+        return s
+    if kind == "recurrent":
+        s["rglru"] = rglru_mod.rglru_specs(cfg)
+    else:
+        s["attn"] = attn.attn_specs(cfg)
+    if kind == "dec_cross":
+        s["lnx"] = rmsnorm_spec(d)
+        s["xattn"] = attn.attn_specs(cfg, cross=True)
+    s["ln2"] = rmsnorm_spec(d)
+    if kind == "attn_moe":
+        s["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        s["ffn"] = mlp_specs(cfg)
+    return s
+
+
+def layer_apply(params, x, positions, cfg: ModelConfig, kind: str, *,
+                enc_out=None, n_moe_groups: int = 1, causal: bool = True,
+                constrain=None):
+    """Full-sequence layer. Returns (y, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind == "mamba2":
+        return x + ssm_mod.mamba2_forward(params["ssm"], h, cfg), aux
+    if kind == "recurrent":
+        mixed = rglru_mod.rglru_forward(params["rglru"], h, cfg)
+    elif kind == "local_attn":
+        mixed = attn.gqa_full(params["attn"], h, positions, cfg, causal=True,
+                              window=cfg.window, constrain=constrain)
+    elif cfg.attention == AttentionKind.MLA:
+        mixed = attn.mla_full(params["attn"], h, positions, cfg, causal=causal)
+    else:
+        mixed = attn.gqa_full(params["attn"], h, positions, cfg, causal=causal,
+                              constrain=constrain)
+    x = x + mixed
+    if kind == "dec_cross":
+        hx = rmsnorm(params["lnx"], x, cfg.norm_eps)
+        x = x + attn.gqa_full(params["xattn"], hx, positions, cfg, kv_x=enc_out)
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        y, aux = moe_mod.moe_ffn(params["moe"], h2, cfg, n_groups=n_moe_groups)
+        return x + y, aux
+    return x + mlp(params["ffn"], h2, cfg), aux
+
+
+def layer_decode(params, x, layer_cache, pos, cfg: ModelConfig, kind: str, *,
+                 enc_out=None):
+    """One-token layer step. Returns (y, new_layer_cache)."""
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    new_cache = dict(layer_cache)
+    if kind == "mamba2":
+        y, c = ssm_mod.mamba2_decode(params["ssm"], h,
+                                     {"conv": layer_cache["conv"],
+                                      "ssm": layer_cache["ssm"]}, cfg)
+        new_cache.update(c)
+        return x + y, new_cache
+    if kind == "recurrent":
+        y, c = rglru_mod.rglru_decode(params["rglru"], h,
+                                      {"conv": layer_cache["conv"],
+                                       "h": layer_cache["h"]}, cfg)
+        new_cache.update(c)
+        x = x + y
+    else:
+        window = cfg.window if kind == "local_attn" else 0
+        if cfg.attention == AttentionKind.MLA:
+            y, c = attn.mla_decode(params["attn"], h,
+                                   {"c_kv": layer_cache["c_kv"],
+                                    "k_rope": layer_cache["k_rope"]}, pos, cfg)
+        else:
+            y, c = attn.gqa_decode(params["attn"], h,
+                                   {"k": layer_cache["k"],
+                                    "v": layer_cache["v"],
+                                    "kpos": layer_cache["kpos"]}, pos, cfg,
+                                   window=window)
+        new_cache.update(c)
+        x = x + y
+    if kind == "dec_cross":
+        hx = rmsnorm(params["lnx"], x, cfg.norm_eps)
+        # cross kv precomputed at prefill: (B, T_enc, KVH, Dh)
+        kvh, dh = cfg.n_kv_heads, cfg.head_dim
+        g = cfg.n_heads // kvh
+        q = jnp.einsum("bsd,dhk->bshk", hx, params["xattn"]["wq"])
+        qg = q.reshape(*q.shape[:2], kvh, g, dh)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, layer_cache["xk"])
+        logits = logits.astype(jnp.float32) / jnp.sqrt(float(dh))
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkgst,btkd->bskgd", w, layer_cache["xv"])
+        o = o.reshape(*x.shape[:2], cfg.n_heads, dh)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, params["xattn"]["wo"])
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        y, _ = moe_mod.moe_ffn(params["moe"], h2, cfg, n_groups=1)
+        return x + y, new_cache
+    return x + mlp(params["ffn"], h2, cfg), new_cache
+
+
+def _fill_buffer(buf_len: int, seq: jax.Array, dtype):
+    """Pack a (B,S,...) prefill sequence into a (B,buf_len,...) ring buffer.
+
+    Entry for absolute position p lives at slot p % buf_len; returns
+    (buffer, kpos) where kpos[i] is the absolute position stored in slot i
+    (-1 = empty).
+    """
+    b, s = seq.shape[0], seq.shape[1]
+    rest = seq.shape[2:]
+    if s <= buf_len:
+        buf = jnp.zeros((b, buf_len, *rest), dtype)
+        buf = buf.at[:, :s].set(seq.astype(dtype))
+        kpos = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                                jnp.full((buf_len - s,), -1, jnp.int32)])
+        return buf, kpos
+    keep = seq[:, s - buf_len:]
+    pos = jnp.arange(s - buf_len, s, dtype=jnp.int32)
+    slots = jnp.mod(pos, buf_len)
+    buf = jnp.zeros((b, buf_len, *rest), dtype).at[:, slots].set(keep.astype(dtype))
+    kpos = jnp.zeros((buf_len,), jnp.int32).at[slots].set(pos)
+    return buf, kpos
+
+
+def layer_prefill(params, x, positions, cfg: ModelConfig, kind: str, *,
+                  max_seq: int, enc_out=None, cache_dtype=jnp.bfloat16):
+    """Full-sequence layer that also emits its decode cache. -> (y, cache)."""
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    cache: dict[str, Any] = {}
+    if kind == "mamba2":
+        y, st = ssm_mod.mamba2_forward(params["ssm"], h, cfg, return_state=True)
+        return x + y, {"conv": st["conv"].astype(cache_dtype), "ssm": st["ssm"]}
+    if kind == "recurrent":
+        y, st = rglru_mod.rglru_forward(params["rglru"], h, cfg, return_state=True)
+        cache = {"conv": st["conv"].astype(cache_dtype), "h": st["h"]}
+        x = x + y
+    else:
+        window = cfg.window if kind == "local_attn" else 0
+        if cfg.attention == AttentionKind.MLA:
+            y, (c_kv, k_rope) = attn.mla_full(params["attn"], h, positions, cfg,
+                                              return_kv=True)
+            ckv_buf, _ = _fill_buffer(max_seq, c_kv, cache_dtype)
+            kr_buf, _ = _fill_buffer(max_seq, k_rope, cache_dtype)
+            cache = {"c_kv": ckv_buf, "k_rope": kr_buf}
+        else:
+            y, (k, v) = attn.gqa_full(params["attn"], h, positions, cfg,
+                                      window=window, return_kv=True)
+            buf_len = min(max_seq, window) if window else max_seq
+            k_buf, kpos = _fill_buffer(buf_len, k, cache_dtype)
+            v_buf, _ = _fill_buffer(buf_len, v, cache_dtype)
+            cache = {"k": k_buf, "v": v_buf, "kpos": kpos}
+        x = x + y
+    if kind == "dec_cross":
+        hx = rmsnorm(params["lnx"], x, cfg.norm_eps)
+        x = x + attn.gqa_full(params["xattn"], hx, positions, cfg, kv_x=enc_out)
+        cache["xk"] = jnp.einsum("btd,dhk->bthk", enc_out,
+                                 params["xattn"]["wk"]).astype(cache_dtype)
+        cache["xv"] = jnp.einsum("btd,dhk->bthk", enc_out,
+                                 params["xattn"]["wv"]).astype(cache_dtype)
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        yf, _ = moe_mod.moe_ffn(params["moe"], h2, cfg, n_groups=1)
+        return x + yf, cache
+    return x + mlp(params["ffn"], h2, cfg), cache
+
+
+def layer_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Per-layer (unstacked) decode-cache ShapeDtypeStructs."""
+    if kind == "mamba2":
+        spec = ssm_mod.mamba2_cache_spec(cfg, batch, 1, dtype)
+        return {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype) for k, v in spec.items()}
+    if kind == "recurrent":
+        spec = rglru_mod.rglru_cache_spec(cfg, batch, 1, dtype)
+        return {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype) for k, v in spec.items()}
+    if cfg.attention == AttentionKind.MLA:
+        spec = attn.mla_cache_spec(cfg, batch, max_seq, 1, dtype)
+        out = {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+               for k, v in spec.items()}
+    else:
+        eff = min(max_seq, cfg.window) if (cfg.window and kind == "local_attn") else max_seq
+        kvh, dh = cfg.n_kv_heads, cfg.head_dim
+        out = {
+            "k": jax.ShapeDtypeStruct((batch, eff, kvh, dh), dtype),
+            "v": jax.ShapeDtypeStruct((batch, eff, kvh, dh), dtype),
+            "kpos": jax.ShapeDtypeStruct((eff,), jnp.int32),
+        }
+    if kind == "dec_cross":
+        enc_t = cfg.encdec.encoder_seq
+        out["xk"] = jax.ShapeDtypeStruct((batch, enc_t, cfg.n_kv_heads, cfg.head_dim), dtype)
+        out["xv"] = jax.ShapeDtypeStruct((batch, enc_t, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return out
+
+
+def cache_logical(kind: str, cfg: ModelConfig) -> dict:
+    """Logical sharding axes for each cache leaf (batch over dp, heads over tp)."""
+    if kind == "mamba2":
+        return {"conv": ("batch", None, "ssm_inner"),
+                "ssm": ("batch", "heads", None, None)}
+    if kind == "recurrent":
+        return {"conv": ("batch", None, "mlp"), "h": ("batch", "mlp")}
+    if cfg.attention == AttentionKind.MLA:
+        out = {"c_kv": ("batch", "kv_seq", None),
+               "k_rope": ("batch", "kv_seq", None)}
+    else:
+        out = {"k": ("batch", "kv_seq", "kv_heads", None),
+               "v": ("batch", "kv_seq", "kv_heads", None),
+               "kpos": ("kv_seq",)}
+    if kind == "dec_cross":
+        out["xk"] = ("batch", "kv_seq", "kv_heads", None)
+        out["xv"] = ("batch", "kv_seq", "kv_heads", None)
+    return out

@@ -1,0 +1,165 @@
+"""Optimizer substrate: AdamW with bf16/fp32 state policies, LR schedules,
+global-norm clipping, and int8 error-feedback gradient compression.
+
+No optax in this container — implemented from scratch on pytrees. The state
+layout mirrors the param tree leaf-for-leaf so checkpointing and
+mesh-elastic restore treat (params, m, v) uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --- schedules ---------------------------------------------------------------
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = (step + 1.0) / jnp.maximum(warmup_steps, 1)
+        prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def constant_lr(base_lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.full((), base_lr, jnp.float32)
+
+
+# --- global-norm clip -----------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+# --- AdamW -----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    state_dtype: Any = jnp.float32     # m/v dtype; bf16 halves optimizer HBM
+    compress_grads: bool = False       # int8 error-feedback on DP gradients
+
+
+class AdamW:
+    """Stateless functional AdamW; state = {'m','v','err'?} mirroring params."""
+
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+        self.schedule = warmup_cosine(cfg.lr, cfg.warmup_steps, cfg.total_steps)
+
+    def init(self, params):
+        c = self.cfg
+        zeros = lambda p: jnp.zeros(p.shape, c.state_dtype)
+        state = {"m": jax.tree.map(zeros, params),
+                 "v": jax.tree.map(zeros, params)}
+        if c.compress_grads:
+            state["err"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                        params)
+        return state
+
+    def init_abstract(self, param_specs_abstract):
+        """ShapeDtypeStruct state tree (dry-run: lower without allocation)."""
+        c = self.cfg
+        zeros = lambda p: jax.ShapeDtypeStruct(p.shape, c.state_dtype)
+        state = {"m": jax.tree.map(zeros, param_specs_abstract),
+                 "v": jax.tree.map(zeros, param_specs_abstract)}
+        if c.compress_grads:
+            state["err"] = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                param_specs_abstract)
+        return state
+
+    def update(self, grads, state, params, step):
+        c = self.cfg
+        if c.compress_grads:
+            grads, err = compress_decompress(grads, state["err"])
+        grads, gnorm = clip_by_global_norm(grads, c.clip_norm)
+        lr = self.schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - c.b1 ** t
+        bc2 = 1.0 - c.b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * g32
+            v_new = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * jnp.square(g32)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + c.eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            if p.ndim >= 2:
+                delta = delta + c.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (p_new.astype(p.dtype), m_new.astype(c.state_dtype),
+                    v_new.astype(c.state_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": new_m, "v": new_v}
+        if c.compress_grads:
+            new_state["err"] = err
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# --- int8 error-feedback compression ------------------------------------------------
+
+def quantize_int8(x):
+    """Symmetric per-tensor int8. -> (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, err):
+    """int8 quantize grads with error feedback (1-bit-Adam style residuals).
+
+    On a real cluster the int8 payload is what crosses the DP interconnect
+    (4x smaller all-reduce); numerically this function is exactly that
+    round-trip, and the residual carries the quantization error into the
+    next step so convergence is preserved.
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), target - deq
+
+    out = jax.tree.map(one, grads, err)
+    new_g = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

@@ -1,0 +1,224 @@
+"""Logical-axis sharding substrate.
+
+Parameters and activations are annotated with *logical* axis names
+("embed", "heads", "mlp", "experts", "batch", "seq", ...). A `ShardingRules`
+table maps each logical axis onto zero or more *mesh* axes. Physical
+`NamedSharding`s are derived on demand, MaxText-style, so the same model
+definition runs on any mesh (single host, 16x16 pod, 2x16x16 multi-pod)
+by swapping rule tables rather than editing the model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical axis vocabulary (documented here; rules may omit entries = replicated)
+#
+#   batch        global batch dim of activations
+#   seq          sequence dim of activations (context parallelism for long seq)
+#   embed        model dimension d_model
+#   heads        attention head dim of params/activations
+#   kv_heads     kv-head dim (GQA)
+#   qk_dim       per-head feature dim (optional TP fallback)
+#   kv_seq       decode-cache sequence dim (optional TP; serving)
+#   attn_q_seq   per-chunk query rows (optional TP; seq-parallel attention)
+#   mlp          FFN hidden dim
+#   experts      MoE expert dim (expert parallelism)
+#   vocab        embedding/vocab rows
+#   ssm_inner    mamba inner channels
+#   ssm_state    SSM state dim (never sharded)
+#   layers       stacked-scan leading layer dim (never sharded)
+#   circuits     LASANA circuit instance dim (pure data parallel)
+#   features     LASANA feature dim
+# ---------------------------------------------------------------------------
+
+LogicalAxis = str | None
+LogicalSpec = tuple[LogicalAxis, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis name -> mesh axis (or tuple of mesh axes)."""
+
+    rules: Mapping[str, str | tuple[str, ...] | None]
+
+    def mesh_axes(self, logical: LogicalAxis):
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+    def spec(self, logical_spec: Sequence[LogicalAxis]) -> P:
+        """Translate a logical spec into a PartitionSpec, dropping conflicts.
+
+        A mesh axis may appear at most once in a PartitionSpec; later logical
+        axes that would reuse an already-consumed mesh axis degrade to
+        replicated (standard GSPMD rule resolution).
+        """
+        used: set[str] = set()
+        out = []
+        for logical in logical_spec:
+            axes = self.mesh_axes(logical)
+            if axes is None:
+                out.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            keep = tuple(a for a in axes if a not in used)
+            if not keep:
+                out.append(None)
+                continue
+            used.update(keep)
+            out.append(keep if len(keep) > 1 else keep[0])
+        # Trim trailing Nones (canonical form).
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def spec_for_shape(self, mesh: Mesh, logical_spec: Sequence[LogicalAxis],
+                       shape: Sequence[int]) -> P:
+        """Like ``spec`` but drops mesh axes that do not divide the dim.
+
+        GSPMD requires every explicitly-sharded dim to be divisible by the
+        product of its mesh axes; small dims (kv_heads=2 on a 16-way model
+        axis, batch=1 decode) degrade gracefully to replicated.
+        """
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        used: set[str] = set()
+        out = []
+        for logical, dim in zip(logical_spec, shape):
+            axes = self.mesh_axes(logical)
+            if axes is None:
+                out.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            keep: list[str] = []
+            prod = 1
+            for a in axes:
+                if a in used:
+                    continue
+                if dim % (prod * sizes[a]) == 0:
+                    keep.append(a)
+                    prod *= sizes[a]
+            if not keep:
+                out.append(None)
+                continue
+            used.update(keep)
+            out.append(tuple(keep) if len(keep) > 1 else keep[0])
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, mesh: Mesh, logical_spec: Sequence[LogicalAxis],
+                 shape: Sequence[int] | None = None) -> NamedSharding:
+        if shape is not None:
+            return NamedSharding(mesh, self.spec_for_shape(mesh, logical_spec, shape))
+        return NamedSharding(mesh, self.spec(logical_spec))
+
+
+# --- Canonical rule tables --------------------------------------------------
+
+def train_rules(mesh: Mesh, *, fsdp: bool = True, shard_seq: bool = False,
+                qk_dim_fallback: bool = False,
+                seq_parallel_attn: bool = False,
+                kv_seq_sharding: bool = False) -> ShardingRules:
+    """Rules for training on a ('pod','data','model') or ('data','model') mesh.
+
+    - activations: batch over (pod, data); optionally seq over data
+      (context parallelism, used when batch < data axis size).
+    - params: TP over 'model' on heads/mlp/experts/vocab; FSDP over
+      ('pod','data') on the embed dim when ``fsdp``.
+    - ``qk_dim_fallback``: shard head_dim over TP when head counts don't
+      divide the model axis. Measured in EXPERIMENTS §Perf: cuts attention
+      compute 4.7x but all-reduces fp32 (S,T) logits every chunk — wire cost
+      explodes 40x. Kept as a switch for the perf log; OFF by default.
+    - ``seq_parallel_attn``: shard the *query sequence* of attention over the
+      model axis instead (each TP shard owns S/tp queries against the full
+      K/V). Used by the hillclimbed configs for head counts that don't
+      divide TP.
+    """
+    axes = mesh.axis_names
+    dp: tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+    rules: dict[str, Any] = {
+        "batch": dp if not shard_seq else dp,
+        "seq": dp if shard_seq else None,
+        "embed": dp if fsdp else None,
+        "heads": tp,
+        "kv_heads": tp,
+        "qk_dim": tp if qk_dim_fallback else None,
+        "attn_q_seq": tp if seq_parallel_attn else None,
+        # decode caches: shard the KV sequence dim over TP. GQA kv-head
+        # counts (1-8) never divide a 16-way model axis, so head-sharding
+        # degrades to replication; seq-sharding divides the whole cache and
+        # the per-step attention reduction (softmax stats all-reduce).
+        "kv_seq": tp if kv_seq_sharding else None,
+        "mlp": tp,
+        "experts": tp,
+        "vocab": tp,
+        "ssm_inner": tp,
+        "circuits": dp + ((tp,) if tp else ()),
+        "features": None,
+    }
+    return ShardingRules(rules=rules)
+
+
+def serve_rules(mesh: Mesh, *, kv_seq_sharding: bool = False) -> ShardingRules:
+    """Decode rules: caches shard batch over dp; optionally seq over tp."""
+    return train_rules(mesh, fsdp=True, shard_seq=False,
+                       kv_seq_sharding=kv_seq_sharding)
+
+
+# --- Pytree annotation helpers ----------------------------------------------
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class Logical:
+    """A static marker carried alongside arrays: its logical PartitionSpec."""
+
+    spec: LogicalSpec
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"Logical{self.spec}"
+
+
+def logical_to_sharding(tree_of_logical, mesh: Mesh, rules: ShardingRules):
+    """Map a pytree of Logical markers to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda l: rules.sharding(mesh, l.spec),
+        tree_of_logical,
+        is_leaf=lambda x: isinstance(x, Logical),
+    )
+
+
+def logical_like(tree_of_arrays, tree_of_logical):
+    """Structural zip check: every array leaf has a Logical partner."""
+    arr_leaves = jax.tree.leaves(tree_of_arrays)
+    log_leaves = jax.tree.leaves(
+        tree_of_logical, is_leaf=lambda x: isinstance(x, Logical)
+    )
+    if len(arr_leaves) != len(log_leaves):
+        raise ValueError(
+            f"array tree has {len(arr_leaves)} leaves but logical tree has "
+            f"{len(log_leaves)}"
+        )
+    return True
+
+
+def constraint(x, mesh: Mesh, rules: ShardingRules, logical_spec: Sequence[LogicalAxis]):
+    """with_sharding_constraint via logical names (no-op off-mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.sharding(mesh, logical_spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def num_devices(mesh: Mesh) -> int:
+    return int(np.prod(mesh.devices.shape))

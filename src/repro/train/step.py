@@ -1,0 +1,174 @@
+"""train_step / serve_step factories.
+
+``make_train_step`` builds a jit-able ``(state, batch) -> (state, metrics)``
+with microbatched gradient accumulation (lax.scan over microbatches keeps
+the HLO O(1) in accumulation steps) and the sharding contract derived from
+the logical rule table. ``make_decode_step``/``make_prefill`` build the
+serving counterparts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import params as prm
+from repro.models.model import Model
+from repro.optim import AdamW
+
+
+# --- train state -------------------------------------------------------------
+
+def init_train_state(model: Model, optimizer: AdamW, key):
+    params = model.init(key)
+    return {"step": jnp.zeros((), jnp.int32), "params": params,
+            "opt": optimizer.init(params)}
+
+
+def abstract_train_state(model: Model, optimizer: AdamW):
+    ap = model.abstract_params()
+    return {"step": jax.ShapeDtypeStruct((), jnp.int32), "params": ap,
+            "opt": optimizer.init_abstract(ap)}
+
+
+def train_state_shardings(model: Model, optimizer: AdamW, mesh: Mesh,
+                          rules: shd.ShardingRules):
+    pshard = prm.shardings(model.param_specs(), mesh, rules)
+    opt = {"m": pshard, "v": pshard}
+    if optimizer.cfg.compress_grads:
+        opt["err"] = pshard
+    return {"step": NamedSharding(mesh, P()), "params": pshard, "opt": opt}
+
+
+# --- microbatching -------------------------------------------------------------
+#
+# Gradient-accumulation batches arrive microbatch-major: every leaf is
+# (M, B/M, ...) with the *second* dim sharded over dp. (A post-hoc reshape of
+# a dp-sharded (B, ...) cannot keep rows local — XLA replicates — so the
+# data pipeline deals microbatch slices directly; see data/lm_data.py.)
+
+
+def make_train_step(model: Model, optimizer: AdamW, *,
+                    num_microbatches: int = 1, n_moe_groups: int = 1,
+                    donate: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics). Pure; jit outside."""
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, n_moe_groups=n_moe_groups)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = batch   # leaves already (M, B/M, ...)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(accum, (g0, jnp.zeros((), jnp.float32)), mbs)
+            inv = 1.0 / num_microbatches
+            grads = jax.tree.map(lambda g: (g * inv).astype(jnp.bfloat16), grads)
+            loss = loss_sum * inv
+            metrics = {"loss": loss}
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state["opt"], params, state["step"])
+        metrics = {**metrics, **opt_metrics}
+        new_state = {"step": state["step"] + 1, "params": new_params,
+                     "opt": new_opt}
+        return new_state, {k: v for k, v in metrics.items()
+                           if jnp.asarray(v).ndim == 0}
+
+    return train_step
+
+
+def _tree_shardings(logical_tree, spec_tree, mesh, rules):
+    """Shape-aware shardings for a (logical, ShapeDtypeStruct) tree pair."""
+    return jax.tree.map(
+        lambda lg, sp: rules.sharding(mesh, lg, sp.shape),
+        logical_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def jit_train_step(model: Model, optimizer: AdamW, mesh: Mesh,
+                   rules: shd.ShardingRules, shape: ShapeConfig, *,
+                   n_moe_groups: int = 1):
+    """jit with explicit in/out shardings for the production mesh."""
+    step = make_train_step(model, optimizer,
+                           num_microbatches=shape.num_microbatches,
+                           n_moe_groups=n_moe_groups)
+    st_sh = train_state_shardings(model, optimizer, mesh, rules)
+    batch_sh = _tree_shardings(model.input_logical(shape),
+                               model.input_specs(shape), mesh, rules)
+    metric_sh = None  # replicated scalars
+    return jax.jit(step,
+                   in_shardings=(st_sh, batch_sh),
+                   out_shardings=(st_sh, metric_sh),
+                   donate_argnums=(0,))
+
+
+# --- serving -----------------------------------------------------------------------
+
+def make_decode_step(model: Model):
+    def serve_step(params, cache, tokens):
+        return model.decode(params, cache, tokens)
+    return serve_step
+
+
+def cache_shardings(model: Model, mesh: Mesh, rules: shd.ShardingRules,
+                    batch: int, max_seq: int):
+    logical = model.cache_logical()
+    specs = model.cache_specs(batch, max_seq)
+    return _tree_shardings(logical, specs, mesh, rules)
+
+
+def jit_decode_step(model: Model, mesh: Mesh, rules: shd.ShardingRules,
+                    shape: ShapeConfig):
+    step = make_decode_step(model)
+    pshard = prm.shardings(model.param_specs(), mesh, rules)
+    b, s = shape.global_batch, shape.seq_len
+    csh = cache_shardings(model, mesh, rules, b, s)
+    tok_sh = rules.sharding(mesh, ("batch", None), (b, 1))
+    logit_sh = rules.sharding(mesh, ("batch", None, "vocab"),
+                              (b, 1, model.cfg.vocab))
+    return jax.jit(step,
+                   in_shardings=(pshard, csh, tok_sh),
+                   out_shardings=(logit_sh, csh),
+                   donate_argnums=(1,))
+
+
+def make_prefill(model: Model, *, max_seq: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq=max_seq)
+    return prefill_step
+
+
+def jit_prefill(model: Model, mesh: Mesh, rules: shd.ShardingRules,
+                shape: ShapeConfig):
+    step = make_prefill(model, max_seq=shape.seq_len)
+    pshard = prm.shardings(model.param_specs(), mesh, rules)
+    batch_sh = _tree_shardings(model.input_logical(shape),
+                               model.input_specs(shape), mesh, rules)
+    b = shape.global_batch
+    csh = cache_shardings(model, mesh, rules, b, shape.seq_len)
+    cache_out_sh = {"stacks": csh["stacks"], "pos": csh["pos"]}
+    logit_sh = rules.sharding(mesh, ("batch", None, "vocab"),
+                              (b, 1, model.cfg.vocab))
+    return jax.jit(step, in_shardings=(pshard, batch_sh),
+                   out_shardings=(logit_sh, cache_out_sh))

@@ -1,0 +1,56 @@
+"""Data pipeline determinism and shaping."""
+
+import numpy as np
+import pytest
+
+from repro.data.lm_data import Prefetcher, SyntheticCorpus, make_train_batch
+from repro.data.mnist import make_digits, poisson_encode
+
+
+def test_corpus_deterministic():
+    c = SyntheticCorpus(1000, seed=3)
+    a = c.batch(7, 4, 64)
+    b = c.batch(7, 4, 64)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c.batch(8, 4, 64))
+    assert a.min() >= 0 and a.max() < 1000
+
+
+def test_microbatch_major_shape():
+    c = SyntheticCorpus(100, seed=0)
+    b = make_train_batch(c, 0, global_batch=8, seq=16, num_microbatches=4)
+    assert b["tokens"].shape == (4, 2, 16)
+    assert b["labels"].shape == (4, 2, 16)
+
+
+def test_labels_are_shifted_tokens():
+    c = SyntheticCorpus(100, seed=0)
+    b = make_train_batch(c, 0, global_batch=2, seq=16)
+    full = c.batch(0, 2, 17)
+    np.testing.assert_array_equal(b["tokens"], full[:, :-1])
+    np.testing.assert_array_equal(b["labels"], full[:, 1:])
+
+
+def test_prefetcher_orders_steps():
+    c = SyntheticCorpus(50, seed=1)
+    pf = Prefetcher(lambda s: make_train_batch(c, s, global_batch=2, seq=8),
+                    depth=2, start_step=5)
+    try:
+        s0, b0 = pf.next()
+        s1, b1 = pf.next()
+        assert (s0, s1) == (5, 6)
+    finally:
+        pf.close()
+
+
+def test_digits_and_spikes():
+    imgs, labels = make_digits(64, size=20, seed=0)
+    assert imgs.shape == (64, 400)
+    assert 0 <= imgs.min() and imgs.max() <= 1
+    assert set(np.unique(labels)) <= set(range(10))
+    spikes = poisson_encode(imgs, 50, seed=0)
+    assert spikes.shape == (50, 64, 400)
+    # brighter pixels spike more
+    hi = imgs > 0.6
+    lo = imgs < 0.1
+    assert spikes[:, hi].mean() > 5 * max(spikes[:, lo].mean(), 1e-4)

@@ -1,0 +1,93 @@
+"""Distributed equivalence (subprocess, forced host devices): the sharded
+train step must match the single-device step, and the shard_map'd LASANA
+step must match the local wrapper."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.configs import reduced_config
+    from repro.models.model import Model
+    from repro.optim import AdamW, AdamWConfig
+    from repro.sharding import train_rules
+    from repro.train import step as step_mod
+    from repro.configs.shapes import ShapeConfig
+
+    cfg = reduced_config("granite-3-8b")
+    opt = AdamW(AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (8, 32), 0, cfg.vocab)}
+
+    # single device
+    m1 = Model(cfg)
+    s1 = step_mod.init_train_state(m1, opt, key)
+    step1 = jax.jit(step_mod.make_train_step(m1, opt))
+    _, met1 = step1(s1, batch)
+
+    # 4x2 mesh, explicit shardings
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = train_rules(mesh)
+    m2 = Model(cfg, mesh=mesh, rules=rules)
+    shape = ShapeConfig("t", 32, 8, "train")
+    with mesh:
+        s2 = step_mod.init_train_state(m2, opt, key)
+        jitted = step_mod.jit_train_step(m2, opt, mesh, rules, shape,
+                                         n_moe_groups=4)
+        _, met2 = jitted(s2, batch)
+    l1, l2 = float(met1["loss"]), float(met2["loss"])
+    print("LOSS1", l1, "LOSS2", l2)
+    assert abs(l1 - l2) / abs(l1) < 2e-2, (l1, l2)
+
+    # LASANA shard_map equivalence
+    from repro.core.dataset import build_dataset, TestbenchConfig
+    from repro.core.predictors import PredictorBank
+    from repro.core.wrapper import init_state, lasana_step
+    from repro.core.distributed import make_distributed_step
+    from repro.core.circuits import LIFNeuron
+    ds = build_dataset("lif", TestbenchConfig(n_runs=40, n_steps=40))
+    bank = PredictorBank("lif", families=("linear",)).fit(ds)
+    circ = LIFNeuron()
+    n = 64
+    params = circ.sample_params(key, n)
+    state = init_state(n, params)
+    changed = jax.random.bernoulli(key, 0.8, (n,))
+    x = circ.sample_inputs(key, (n,))
+    sm_mesh = jax.make_mesh((8,), ("data",),
+                            axis_types=(jax.sharding.AxisType.Auto,))
+    dstep = make_distributed_step(bank, sm_mesh, clock_ns=5.0, spiking=True)
+    with sm_mesh:
+        st_d, e_tot, n_out = dstep(state, changed, x, jnp.asarray([5.0]))
+    st_l, e_l, _, o_l = lasana_step(bank, state, changed, x, 5.0, 5.0,
+                                    spiking=True)
+    np.testing.assert_allclose(np.asarray(st_d.v), np.asarray(st_l.v),
+                               rtol=1e-5, atol=1e-6)
+    assert abs(float(e_tot) - float(jnp.sum(e_l))) <= 1e-18 + 1e-5 * abs(float(e_tot))
+    print("SHARDMAP-OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_equals_single_device(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    script = tmp_path / "dist_check.py"
+    script.write_text(_SCRIPT)
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, env=env, cwd=_ROOT, timeout=900)
+    out = r.stdout + r.stderr
+    assert r.returncode == 0, out[-3000:]
+    assert "SHARDMAP-OK" in out

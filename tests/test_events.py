@@ -1,0 +1,92 @@
+"""Event-processing invariants (hypothesis property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dataset import TestbenchConfig, build_dataset, \
+    generate_testbench, simulate_golden
+from repro.core.events import EventKind, EventSet, extract_events, \
+    split_runwise
+
+
+def _small_trace(circuit, seed, n_runs=6, n_steps=40, alpha=0.7):
+    cfg = TestbenchConfig(n_runs=n_runs, n_steps=n_steps, alpha=alpha,
+                          seed=seed)
+    from repro.core.circuits import get_circuit
+    circ = get_circuit(circuit)
+    active, inputs, params = generate_testbench(circ, cfg)
+    return simulate_golden(circ, active, inputs, params)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_event_partition_covers_active_steps(seed):
+    trace = _small_trace("lif", seed)
+    ev = extract_events(trace)
+    # one E1-or-E3 event per active step
+    n_active = int(trace.active.sum())
+    n_e13 = int(np.sum((ev.kind == 1) | (ev.kind == 3)))
+    assert n_e13 == n_active
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_event_energy_conserved(seed):
+    """Sum of event energies == trace energy over the covered interval."""
+    trace = _small_trace("lif", seed)
+    ev = extract_events(trace)
+    for run in range(trace.active.shape[0]):
+        idx = np.flatnonzero(trace.active[run])
+        last = idx[-1]
+        covered = trace.energy[run, : last + 1]
+        # events cover [0, last]; trailing idle is excluded by design
+        ev_run = ev.select(ev.run_id == run)
+        np.testing.assert_allclose(ev_run.energy.sum(), covered.sum(),
+                                   rtol=1e-6)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_e2_tau_is_multiple_of_clock(seed):
+    trace = _small_trace("lif", seed)
+    ev = extract_events(trace)
+    e2 = ev.of_kind(EventKind.E2)
+    ratios = e2.tau / trace.clock_ns
+    np.testing.assert_allclose(ratios, np.round(ratios), atol=1e-5)
+    assert np.all(ratios >= 1)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_e1_has_output_change_e3_does_not(seed):
+    trace = _small_trace("lif", seed)
+    ev = extract_events(trace)
+    e1 = ev.of_kind(EventKind.E1)
+    # LIF output events are spikes at V_dd
+    assert np.all(e1.o_end > 0.75)
+    e3 = ev.of_kind(EventKind.E3)
+    assert np.all(e3.o_end < 0.75)
+
+
+def test_runwise_split_disjoint_and_complete():
+    trace = _small_trace("crossbar", 3, n_runs=20)
+    ev = extract_events(trace)
+    tr, te, va = split_runwise(ev, 20, seed=0)
+    assert len(tr) + len(te) + len(va) == len(ev)
+    runs = [set(np.unique(s.run_id)) for s in (tr, te, va)]
+    assert not (runs[0] & runs[1]) and not (runs[0] & runs[2]) \
+        and not (runs[1] & runs[2])
+
+
+def test_state_continuity_within_run():
+    """Consecutive events chain: v_end of one == v_start of the next."""
+    trace = _small_trace("lif", 11)
+    ev = extract_events(trace)
+    for run in range(trace.active.shape[0]):
+        sel = ev.select(ev.run_id == run)
+        # events were appended in temporal order per run
+        for i in range(len(sel) - 1):
+            np.testing.assert_allclose(sel.v_end[i], sel.v_start[i + 1],
+                                       atol=1e-6)

@@ -1,0 +1,107 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+oracles, interpret=True execution (kernel bodies run in Python on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.circuits import LIFNeuron
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [64, 300, 1024])
+@pytest.mark.parametrize("f,h1,h2", [(41, 100, 50), (67, 100, 50), (16, 32, 16)])
+def test_mlp_surrogate_shapes(n, f, h1, h2):
+    key = jax.random.PRNGKey(n + f)
+    ks = jax.random.split(key, 7)
+    x = jax.random.normal(ks[0], (n, f))
+    w1 = jax.random.normal(ks[1], (f, h1)) * 0.1
+    b1 = jax.random.normal(ks[2], (h1,)) * 0.1
+    w2 = jax.random.normal(ks[3], (h1, h2)) * 0.1
+    b2 = jax.random.normal(ks[4], (h2,)) * 0.1
+    w3 = jax.random.normal(ks[5], (h2, 1)) * 0.1
+    b3 = jax.random.normal(ks[6], (1,)) * 0.1
+    got = ops.mlp_surrogate(x, w1, b1, w2, b2, w3, b3)
+    want = ref.mlp_surrogate_ref(x, w1, b1, w2, b2, w3, b3)[:, 0]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlp_surrogate_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (128, 41)).astype(dtype)
+    w1 = (jax.random.normal(key, (41, 100)) * 0.1).astype(jnp.float32)
+    b1 = jnp.zeros((100,))
+    w2 = (jax.random.normal(key, (100, 50)) * 0.1).astype(jnp.float32)
+    b2 = jnp.zeros((50,))
+    w3 = (jax.random.normal(key, (50, 1)) * 0.1).astype(jnp.float32)
+    b3 = jnp.zeros((1,))
+    got = ops.mlp_surrogate(x, w1, b1, w2, b2, w3, b3)
+    want = ref.mlp_surrogate_ref(x.astype(jnp.float32), w1, b1, w2, b2, w3,
+                                 b3)[:, 0]
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,n_in", [(64, 32), (123, 32), (256, 16)])
+def test_crossbar_target(n, n_in):
+    key = jax.random.PRNGKey(n)
+    v = jax.random.uniform(key, (n, n_in), minval=-0.8, maxval=0.8)
+    w = jax.random.randint(key, (n, n_in + 1), -1, 2).astype(jnp.float32)
+    tgt, tau = ops.crossbar_target(v, w)
+    tgt_r, tau_r = ref.crossbar_target_ref(v, w)
+    np.testing.assert_allclose(tgt, tgt_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(tau, tau_r, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [64, 200, 512])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_lif_step_matches_golden(n, seed):
+    circ = LIFNeuron()
+    key = jax.random.PRNGKey(seed)
+    st = jnp.abs(jax.random.normal(key, (n, 3))) * 0.3
+    x = circ.sample_inputs(key, (n,))
+    p = circ.sample_params(key, n)
+    ns_k, obs_k = ops.lif_step(st, x, p)
+    ns_r, obs_r = ref.lif_step_ref(st, x, p)
+    np.testing.assert_allclose(ns_k, ns_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(obs_k["energy"], obs_r["energy"],
+                               rtol=1e-5, atol=1e-22)
+    np.testing.assert_array_equal(np.asarray(obs_k["spiked"]),
+                                  np.asarray(obs_r["spiked"]))
+    np.testing.assert_allclose(obs_k["latency"], obs_r["latency"],
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("s,d,bq", [(256, 64, 128), (512, 64, 128),
+                                    (256, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(s, d, bq, dtype):
+    key = jax.random.PRNGKey(s + d)
+    shape = (1, 2, s, d)
+    q = jax.random.normal(key, shape).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), shape).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), shape).astype(dtype)
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=min(bq, 128))
+    want = ref.flash_attention_ref(
+        q.reshape(2, s, d), k.reshape(2, s, d), v.reshape(2, s, d)
+    ).reshape(1, 2, s, d)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_is_causal():
+    """Future tokens must not influence the output."""
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (1, 1, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 256, 64))
+    o1 = ops.flash_attention(q, k, v)
+    k2 = k.at[:, :, 200:].set(99.0)
+    v2 = v.at[:, :, 200:].set(-99.0)
+    o2 = ops.flash_attention(q, k2, v2)
+    np.testing.assert_allclose(o1[:, :, :200], o2[:, :, :200],
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,72 @@
+"""Surrogate model-family tests: GBDT jax==numpy, fit quality ordering,
+standardizer properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.models import (GBDTModel, LinearModel, MLPModel, MeanModel,
+                               Standardizer, TableModel)
+
+
+def _toy(n=3000, f=8, seed=0, noise=0.05):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    y = (np.sin(x[:, 0]) + 0.5 * x[:, 1] * x[:, 2] + 0.2 * x[:, 3]
+         + noise * rng.normal(size=n)).astype(np.float32)
+    return x[: n // 2], y[: n // 2], x[n // 2 :], y[n // 2 :]
+
+
+def test_model_quality_ordering():
+    xtr, ytr, xte, yte = _toy()
+    xva, yva = xte[:500], yte[:500]
+    mean = MeanModel().fit(xtr, ytr, xva, yva)
+    lin = LinearModel().fit(xtr, ytr, xva, yva)
+    gbdt = GBDTModel(n_trees=40, max_depth=6).fit(xtr, ytr, xva, yva)
+    mse = {m.name: float(np.mean((m.predict(xte) - yte) ** 2))
+           for m in (mean, lin, gbdt)}
+    assert mse["linear"] < mse["mean"]
+    assert mse["gbdt"] < mse["linear"]
+    assert mse["gbdt"] < 0.2
+
+
+def test_gbdt_jax_equals_numpy():
+    xtr, ytr, xte, yte = _toy(n=2000)
+    m = GBDTModel(n_trees=20, max_depth=5).fit(xtr, ytr, xte[:200], yte[:200])
+    got_np = m.predict(xte)
+    got_jax = np.asarray(m.jax_predict(jnp.asarray(xte)))
+    np.testing.assert_allclose(got_np, got_jax, rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_learns_nonlinearity():
+    xtr, ytr, xte, yte = _toy(n=4000)
+    m = MLPModel(max_epochs=60, patience=10).fit(xtr, ytr, xte[:500], yte[:500])
+    mse = float(np.mean((m.predict(xte) - yte) ** 2))
+    base = float(np.var(yte))
+    assert mse < 0.5 * base, (mse, base)
+    # jax/np parity
+    np.testing.assert_allclose(m.predict(xte[:64]),
+                               np.asarray(m.jax_predict(jnp.asarray(xte[:64]))),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_table_exact_on_training_points():
+    xtr, ytr, xte, yte = _toy(n=1000)
+    m = TableModel().fit(xtr, ytr, xte[:100], yte[:100])
+    pred = m.predict(xtr[:50])
+    np.testing.assert_allclose(pred, ytr[:50], atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 200), st.integers(1, 8), st.integers(0, 1000))
+def test_standardizer_properties(n, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(3.0, 10.0, size=(n, f)).astype(np.float32)
+    s = Standardizer.fit(x)
+    z = s.apply(x)
+    np.testing.assert_allclose(z.mean(axis=0), 0.0, atol=1e-3)
+    sd = z.std(axis=0)
+    # constant columns map to zeros (sd clamped to 1)
+    assert np.all((np.abs(sd - 1) < 1e-3) | (sd < 1e-6))

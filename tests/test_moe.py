@@ -1,0 +1,89 @@
+"""MoE dispatch invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import AttentionKind, Family, ModelConfig, MoEConfig
+from repro.models import moe as moe_mod
+from repro.models.params import materialize
+
+
+def _cfg(e=8, k=2, cf=1.25, router="softmax", shared=0):
+    return ModelConfig(
+        name="t", family=Family.MOE, n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=64,
+        moe=MoEConfig(n_experts=e, top_k=k, n_shared=shared, d_ff_expert=48,
+                      capacity_factor=cf, router=router))
+
+
+def _params(cfg, key):
+    return materialize(key, moe_mod.moe_specs(cfg))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), router=st.sampled_from(["softmax", "sigmoid"]))
+def test_moe_finite_and_shaped(seed, router):
+    cfg = _cfg(router=router, shared=1)
+    key = jax.random.PRNGKey(seed)
+    params = _params(cfg, key)
+    x = jax.random.normal(key, (2, 16, 32), jnp.bfloat16)
+    y, aux = moe_mod.moe_ffn(params, x, cfg)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+def test_dispatch_respects_capacity():
+    """No expert processes more than C assignments."""
+    ids = jnp.asarray(np.random.default_rng(0).integers(0, 4, 64), jnp.int32)
+    cap = 8
+    dest, ok = moe_mod._dispatch_indices(ids, 4, cap)
+    dest = np.asarray(dest)
+    kept = dest[dest < 4 * cap]
+    counts = np.bincount(kept // cap, minlength=4)
+    assert np.all(counts <= cap)
+    # slots unique
+    assert len(np.unique(kept)) == len(kept)
+
+
+def test_dispatch_keeps_everything_under_large_capacity():
+    ids = jnp.asarray(np.random.default_rng(1).integers(0, 8, 128), jnp.int32)
+    dest, ok = moe_mod._dispatch_indices(ids, 8, 128)
+    assert bool(np.all(np.asarray(ok)))
+
+
+def test_moe_equals_dense_mixture_when_capacity_ample():
+    """top_k == n_experts + huge capacity -> exact softmax mixture of FFNs."""
+    cfg = _cfg(e=4, k=4, cf=64.0)
+    key = jax.random.PRNGKey(3)
+    params = _params(cfg, key)
+    x = jax.random.normal(key, (1, 8, 32), jnp.float32)
+    y, _ = moe_mod.moe_ffn(params, x, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"])
+    w = jax.nn.softmax(logits, axis=-1)
+    dense = 0
+    for e in range(4):
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"][e])
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"][e])
+        h = jax.nn.silu(g) * u
+        o = jnp.einsum("bsf,fd->bsd", h, params["w_down"][e])
+        dense = dense + w[..., e : e + 1] * o
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(dense, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_group_count_changes_capacity_not_semantics():
+    cfg = _cfg(e=4, k=1, cf=8.0)
+    key = jax.random.PRNGKey(4)
+    params = _params(cfg, key)
+    x = jax.random.normal(key, (2, 16, 32), jnp.float32)
+    y1, _ = moe_mod.moe_ffn(params, x, cfg, n_groups=1)
+    y2, _ = moe_mod.moe_ffn(params, x, cfg, n_groups=2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,41 @@
+"""Bank persistence roundtrip (deployable-artifact contract)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.persist import load_bank, save_bank
+from repro.core.predictors import PREDICTOR_DEFS, build_features
+
+
+def test_bank_roundtrip(tmp_path, lif_bank_mlp, lif_dataset):
+    path = str(tmp_path / "lif_bank.npz")
+    save_bank(lif_bank_mlp, path)
+    loaded = load_bank(path)
+    for pname, d in PREDICTOR_DEFS.items():
+        te = lif_dataset.test.of_kind(*d["kinds"])
+        if len(te) == 0:
+            continue
+        x = jnp.asarray(build_features(
+            te, prev_out=d["prev_out"],
+            chain_out=d.get("chain_out", False))[:64])
+        a = np.asarray(lif_bank_mlp.predict(pname, x))
+        b = np.asarray(loaded.predict(pname, x))
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-20)
+
+
+def test_loaded_bank_runs_algorithm1(tmp_path, lif_bank_mlp):
+    import jax
+    from repro.core.circuits import LIFNeuron
+    from repro.core.wrapper import init_state, lasana_step
+    path = str(tmp_path / "bank2.npz")
+    save_bank(lif_bank_mlp, path)
+    bank = load_bank(path)
+    circ = LIFNeuron()
+    key = jax.random.PRNGKey(0)
+    n = 16
+    state = init_state(n, circ.sample_params(key, n))
+    changed = jnp.ones((n,), bool)
+    x = circ.sample_inputs(key, (n,))
+    s, e, l, o = lasana_step(bank, state, changed, x, 5.0, 5.0, spiking=True)
+    assert np.all(np.isfinite(np.asarray(e)))

@@ -1,0 +1,77 @@
+"""Sharding rule table properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding import ShardingRules, train_rules
+
+
+def _mesh_2d():
+    d = jax.devices()[0]
+    arr = np.array([[d]])
+    return Mesh(arr, ("data", "model"))
+
+
+def test_spec_dedups_mesh_axes():
+    rules = ShardingRules(rules={"a": "x", "b": "x", "c": ("x", "y")})
+    spec = rules.spec(("a", "b", "c"))
+    # 'x' consumed by 'a'; 'b' replicated; 'c' gets only 'y'
+    assert spec == jax.sharding.PartitionSpec("x", None, "y")
+
+
+@settings(max_examples=40, deadline=None)
+@given(dim=st.integers(1, 64), size=st.sampled_from([2, 4, 8, 16]))
+def test_spec_for_shape_divisibility(dim, size):
+    d = jax.devices()[0]
+    mesh = Mesh(np.array([d]).reshape(1, 1), ("data", "model"))
+    # fake sizes via a rules table probe: use the pure logic on dict sizes
+    rules = ShardingRules(rules={"h": "model"})
+    sizes = {"data": 1, "model": size}
+
+    # re-implement the check the production mesh enforces
+    spec = rules.spec_for_shape_with_sizes if hasattr(
+        rules, "spec_for_shape_with_sizes") else None
+    # direct: axis kept iff divisible
+    keep = dim % size == 0
+    p = rules.spec_for_shape(_FakeMesh(sizes), ("h",), (dim,))
+    got_kept = len(p) > 0 and p[0] == "model"
+    assert got_kept == keep
+
+
+class _FakeMesh:
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self._shape = tuple(sizes.values())
+
+    @property
+    def devices(self):
+        class _D:
+            pass
+        d = _D()
+        d.shape = self._shape
+        return d
+
+
+def test_train_rules_have_expected_axes():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = train_rules(mesh)
+    p = rules.spec_for_shape(mesh, ("batch", None), (256, 128))
+    assert p == jax.sharding.PartitionSpec(("pod", "data"))
+    p = rules.spec_for_shape(mesh, ("embed", "mlp"), (4096, 12800))
+    assert p == jax.sharding.PartitionSpec(("pod", "data"), "model")
+    # kv_heads=2 on 16-way model axis -> replicated
+    p = rules.spec_for_shape(mesh, ("embed", "kv_heads", None),
+                             (4096, 2, 128))
+    assert p == jax.sharding.PartitionSpec(("pod", "data"))
+
+
+def test_batch_dim_one_replicates():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    rules = train_rules(mesh)
+    p = rules.spec_for_shape(mesh, ("batch", None, None), (1, 1, 512))
+    assert p == jax.sharding.PartitionSpec()

@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the LASANA system."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.circuits import CrossbarRow, LIFNeuron
+from repro.core.dataset import TestbenchConfig, build_dataset
+from repro.core.simulate import (make_stimulus, run_behavioral, run_golden,
+                                 run_lasana)
+
+
+def test_dataset_event_counts(lif_dataset):
+    counts = lif_dataset.counts()
+    # all three event classes must occur for the stateful circuit
+    assert counts["E1"] > 100
+    assert counts["E2"] > 100
+    assert counts["E3"] > 1000
+
+
+def test_crossbar_has_no_e3_dominance(crossbar_dataset):
+    counts = crossbar_dataset.counts()
+    # nearly every input change moves the crossbar output (paper: no E3 rows)
+    assert counts["E1"] > 10 * max(counts["E3"], 1)
+
+
+def test_golden_energy_positive_and_finite():
+    active, x, params = make_stimulus("lif", 64, 50, seed=0)
+    g = run_golden("lif", active, x, params)
+    assert np.all(np.isfinite(g.energy))
+    assert np.all(g.energy >= 0)
+    assert g.outputs.shape == (50, 64)
+
+
+def test_lasana_matches_golden_spikes(lif_bank_mlp):
+    active, x, params = make_stimulus("lif", 256, 80, seed=5)
+    g = run_golden("lif", active, x, params)
+    lz = run_lasana(lif_bank_mlp, "lif", active, x, params)
+    acc = float(np.mean((g.outputs > 0.75) == (lz.outputs > 0.75)))
+    assert acc > 0.93, f"spike accuracy {acc}"
+    e_err = abs(lz.energy.sum() - g.energy.sum()) / g.energy.sum()
+    assert e_err < 0.15, f"total energy err {e_err}"
+
+
+def test_error_does_not_diverge_over_time(lif_bank_mlp):
+    """Fig 8 property: state-feedback error must not blow up over ticks."""
+    active, x, params = make_stimulus("lif", 256, 90, seed=7)
+    g = run_golden("lif", active, x, params)
+    lz = run_lasana(lif_bank_mlp, "lif", active, x, params)
+    mse = np.mean((g.states - lz.states) ** 2, axis=1)     # per tick
+    first = float(np.mean(mse[: len(mse) // 3]))
+    last = float(np.mean(mse[-len(mse) // 3:]))
+    assert last < 5 * first + 1e-3, (first, last)
+
+
+def test_oracle_state_mode(lif_bank_mlp):
+    """LASANA-O (oracle state) must beat or match LASANA-P on state MSE."""
+    active, x, params = make_stimulus("lif", 128, 60, seed=9)
+    g = run_golden("lif", active, x, params)
+    lp = run_lasana(lif_bank_mlp, "lif", active, x, params)
+    lo = run_lasana(lif_bank_mlp, "lif", active, x, params,
+                    oracle_states=g.states)
+    mse_p = float(np.mean((g.states - lp.states) ** 2))
+    mse_o = float(np.mean((g.states - lo.states) ** 2))
+    assert mse_o <= mse_p * 1.2, (mse_o, mse_p)
+
+
+def test_behavioral_runs_all_circuits():
+    for name in ("lif", "crossbar"):
+        active, x, params = make_stimulus(name, 32, 30, seed=1)
+        b = run_behavioral(name, active, x, params)
+        assert np.all(np.isfinite(b.outputs))
