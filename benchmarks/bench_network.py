@@ -1,0 +1,147 @@
+"""Network-engine throughput — batched event-driven engine vs naive loop.
+
+A 3-layer spiking-MNIST-sized LIF network runs the same event stream two
+ways:
+
+  engine  core/network.py: one jit-compiled scan over ticks, all banks
+          batched, idle neurons merged into E2 catch-up events
+  naive   the pre-engine formulation: a Python loop over ticks and banks,
+          one numpy predictor call per model per bank per tick
+
+Reported: events/s of both, the speedup (acceptance: >= 10x), and the
+network-level per-layer energy/latency report from the engine run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bank, emit, save_json
+
+SNN_LAYERS = (196, 64, 32, 10)          # CPU scale
+SNN_LAYERS_FULL = (784, 256, 128, 10)   # spiking-MNIST scale
+T_STEPS = 60
+BATCH = 8
+
+
+def _make_net(layers, seed=0):
+    rng = np.random.default_rng(seed)
+    ws = []
+    for i in range(len(layers) - 1):
+        w = rng.normal(0, (2.0 / layers[i]) ** 0.5, (layers[i], layers[i + 1]))
+        ws.append((w * 2.2).astype(np.float32))      # drive into spiking range
+    params = [np.array([0.58, 0.5, 0.5, 0.5], np.float32) for _ in ws]
+    return ws, params
+
+
+def _poisson_spikes(t, b, n, rate=0.25, seed=1):
+    rng = np.random.default_rng(seed)
+    return (rng.random((t, b, n)) < rate).astype(np.float32) * 1.5
+
+
+def run_naive(b, weights, spike_seq, params_list, clock=5.0):
+    """Per-bank Python loop: Algorithm 1 semantics, one numpy predictor
+    call per model per bank per tick (no jit, no cross-tick fusion)."""
+    t_steps, batch, _ = spike_seq.shape
+    layers = []
+    for w, p in zip(weights, params_list):
+        n = batch * w.shape[1]
+        layers.append({
+            "w": w, "conn": (np.abs(w) > 0).astype(np.float32),
+            "v": np.zeros(n, np.float32), "o": np.zeros(n, np.float32),
+            "t_last": np.zeros(n, np.float32),
+            "params": np.broadcast_to(p[None], (n, p.shape[0])),
+        })
+    energy = 0.0
+    events = 0
+    t0 = time.time()
+    for ti in range(t_steps):
+        t = (ti + 1) * clock
+        s = spike_seq[ti]
+        for L in layers:
+            drive = (s @ L["w"]) / 1.5
+            pre = (s > 0.75).astype(np.float32)
+            changed = ((pre @ L["conn"]) > 0.5).reshape(-1)
+            x = np.stack([np.clip(drive, -1, 1),
+                          np.full_like(drive, 1.5),
+                          np.full_like(drive, 5.0)], -1).reshape(-1, 3)
+            n = L["v"].shape[0]
+            stale = changed & (L["t_last"] < t - clock)
+            tau_idle = np.maximum(t - L["t_last"] - clock, 0.0)
+            fi = np.concatenate([np.zeros_like(x), L["v"][:, None],
+                                 tau_idle[:, None], L["params"]], 1)
+            v_cur = np.where(stale, b.predict_np("M_V", fi), L["v"])
+            e = np.where(stale, b.predict_np("M_ES", fi), 0.0)
+            tau = np.full((n, 1), clock, np.float32)
+            f = np.concatenate([x, v_cur[:, None], tau, L["params"]], 1)
+            o_hat = b.predict_np("M_O", f)
+            v_new = b.predict_np("M_V", f)
+            fired = o_hat > 0.75
+            o_res = np.where(fired, 1.5, 0.0)
+            ftr = np.concatenate([f, L["o"][:, None], o_res[:, None]], 1)
+            e_evt = np.where(fired, b.predict_np("M_ED", ftr),
+                             b.predict_np("M_ES", f))
+            b.predict_np("M_L", ftr)
+            energy += float(np.sum(e + np.where(changed, e_evt, 0.0)))
+            L["v"] = np.where(changed, v_new, v_cur).astype(np.float32)
+            L["o"] = np.where(changed, o_res, L["o"]).astype(np.float32)
+            L["t_last"] = np.where(changed, t, L["t_last"]).astype(np.float32)
+            events += int(changed.sum())
+            s = np.where(changed, o_res, 0.0).reshape(batch, -1)
+    return {"events": events, "energy_j": energy,
+            "wall_seconds": time.time() - t0}
+
+
+def run(full: bool = False):
+    from repro.core.network import NetworkEngine, snn_spec
+
+    layers = SNN_LAYERS_FULL if full else SNN_LAYERS
+    ws, params = _make_net(layers)
+    spikes = _poisson_spikes(T_STEPS, BATCH, layers[0])
+    b = bank("lif", full, families=("mean", "linear", "mlp"))
+
+    eng = NetworkEngine(snn_spec(ws, params), backend="lasana", bank=b,
+                        record_hidden=False)
+    eng.run(spikes)                           # compile
+    run_e = eng.run(spikes)                   # measured
+    rep = run_e.report()
+    ev_engine = rep["network"]["events_per_sec"]
+
+    # naive: same event stream, Python loop over ticks x banks
+    naive = run_naive(b, ws, spikes, params)
+    ev_naive = naive["events"] / max(naive["wall_seconds"], 1e-9)
+    speedup = ev_engine / max(ev_naive, 1e-9)
+
+    # golden reference for context (the SPICE stand-in through the engine)
+    eng_g = NetworkEngine(snn_spec(ws, params), backend="golden",
+                          record_hidden=False)
+    eng_g.run(spikes)
+    run_g = eng_g.run(spikes)
+    rep_g = run_g.report()
+
+    out = {
+        "layers": list(layers), "t_steps": T_STEPS, "batch": BATCH,
+        "engine": rep, "naive": naive,
+        "golden": rep_g["network"],
+        "events_per_sec_engine": ev_engine,
+        "events_per_sec_naive": ev_naive,
+        "speedup_engine_over_naive": speedup,
+        "energy_err_vs_golden": abs(
+            rep["network"]["energy_j"] - rep_g["network"]["energy_j"])
+        / max(rep_g["network"]["energy_j"], 1e-30),
+    }
+    save_json("network_engine", out)
+    emit("network/events_per_sec_engine", ev_engine)
+    emit("network/events_per_sec_naive", ev_naive)
+    emit("network/speedup", speedup,
+         f"target >=10x; energy_err={out['energy_err_vs_golden']:.2%}")
+    if speedup < 10:
+        print(f"# WARNING: engine speedup {speedup:.1f}x below 10x target")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

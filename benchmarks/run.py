@@ -9,6 +9,7 @@ results/benchmarks/.
   table2   predictor accuracy MSE/MAPE             (paper Table II)
   table3   error propagation LASANA-O vs -P + Fig8 (paper Table III)
   table4   runtime scaling vs layer size           (paper Table IV)
+  network  network engine events/s vs naive loop   (§V-E system scale)
   roofline dry-run roofline terms                  (EXPERIMENTS §Roofline)
 """
 
@@ -24,16 +25,18 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale datasets/models (slow)")
     ap.add_argument("--only", default="",
-                    help="comma list: table1,table2,table3,table4,roofline")
+                    help="comma list: table1,table2,table3,table4,network,"
+                         "roofline")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_models, bench_propagation,
-                            bench_roofline, bench_scaling)
+    from benchmarks import (bench_accuracy, bench_models, bench_network,
+                            bench_propagation, bench_roofline, bench_scaling)
     suites = {
         "table1": bench_models.run,
         "table2": bench_accuracy.run,
         "table3": bench_propagation.run,
         "table4": bench_scaling.run,
+        "network": bench_network.run,
         "roofline": bench_roofline.run,
     }
     only = [s for s in args.only.split(",") if s] or list(suites)

@@ -1,25 +1,25 @@
 """Crossbar MNIST case study (paper §V-E, first half).
 
 A 400-120-84-10 ternary-weight network runs on 32-input PCM crossbar rows:
-every layer matmul is tiled into 32-wide row segments, each segment is one
-LASANA crossbar-row instance (the paper's 67-crossbar accelerator built
-from 32x LASANA rows per crossbar). We compare the full golden transient
-simulation of every row event against LASANA surrogates: classification
-accuracy, per-inference energy, and wall time.
+the network engine (core/network.py) tiles every layer matmul into 32-wide
+row segments, each segment one crossbar-row instance (the paper's
+67-crossbar accelerator built from 32x LASANA rows per crossbar), with the
+8-bit ADC and digital tanh activation between layers. We compare the full
+golden transient simulation of every row event against LASANA surrogates:
+classification accuracy, per-inference energy, and wall time.
 
     PYTHONPATH=src python examples/mnist_crossbar.py [--n-test 200]
 """
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.circuits import CrossbarRow
 from repro.core.dataset import TestbenchConfig, build_dataset
-from repro.core.predictors import PredictorBank, build_features
+from repro.core.network import NetworkEngine, crossbar_mlp_spec
+from repro.core.predictors import PredictorBank
 from repro.data.mnist import make_digits
 
 LAYERS = (400, 120, 84, 10)
@@ -63,57 +63,6 @@ def train_ternary_net(seed=0, n_train=4000, steps=300):
     return tern
 
 
-def _row_segments(w):
-    """(n_in, n_out) ternary matrix -> (n_seg_rows, 33) crossbar params."""
-    n_in, n_out = w.shape
-    n_seg = -(-n_in // 32)
-    pad = n_seg * 32 - n_in
-    wp = np.pad(w, ((0, pad), (0, 0)))
-    segs = wp.reshape(n_seg, 32, n_out).transpose(2, 0, 1).reshape(-1, 32)
-    return np.concatenate([segs, np.zeros((len(segs), 1))], 1).astype(np.float32)
-
-
-def run_layer(x_volts, w, circ, bank=None):
-    """x: (B, n_in) volts -> (analog outputs (B, n_out), energy J, latency ns).
-
-    Golden when bank is None, LASANA otherwise. Each output neuron sums
-    ceil(n_in/32) crossbar-row voltages (ADC'd digitally).
-    """
-    b, n_in = x_volts.shape
-    n_out = w.shape[1]
-    n_seg = -(-n_in // 32)
-    params = _row_segments(w)                       # (n_out*n_seg, 33)
-    xp = np.pad(x_volts, ((0, 0), (0, n_seg * 32 - n_in)))
-    xin = xp.reshape(b, n_seg, 32)
-    xin = np.broadcast_to(xin[:, None], (b, n_out, n_seg, 32)).reshape(-1, 32)
-    pall = np.broadcast_to(params[None], (b, *params.shape)).reshape(-1, 33)
-    n_rows = xin.shape[0]
-    if bank is None:
-        st, obs = circ.step(jnp.zeros((n_rows, 1)), jnp.asarray(xin),
-                            jnp.asarray(pall))
-        v = np.asarray(obs["output"])
-        e = float(np.sum(np.asarray(obs["energy"])))
-        lat = float(np.max(np.asarray(obs["latency"])))
-    else:
-        feats = np.concatenate(
-            [xin, np.zeros((n_rows, 1), np.float32),
-             np.full((n_rows, 1), circ.clock_ns, np.float32), pall], 1)
-        v = np.asarray(bank.predict("M_O", jnp.asarray(feats)))
-        feats_tr = np.concatenate(
-            [feats, np.zeros((n_rows, 1), np.float32),
-             v[:, None].astype(np.float32)], 1)
-        e = float(np.sum(np.asarray(
-            bank.predict("M_ED", jnp.asarray(feats_tr)))))
-        lat = float(np.max(np.asarray(
-            bank.predict("M_L", jnp.asarray(feats_tr)))))
-    # 8-bit ADC over [-2, 2], then digital gain compensation: the TIA gives
-    # v = -R_f*G_unit*dot = -0.48*dot (inverting), undone in the digital domain
-    v = np.round((v + 2.0) / 4.0 * 255) / 255 * 4.0 - 2.0
-    gain = -circ.r_f * circ.g_unit
-    out = v.reshape(b, n_out, n_seg).sum(-1) / gain
-    return out, e, lat
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-test", type=int, default=200)
@@ -123,7 +72,7 @@ def main():
     print("== training ternary 400-120-84-10 network on synthetic digits ==")
     ws = train_ternary_net()
     imgs, labels = make_digits(args.n_test, size=20, seed=999)
-    circ = CrossbarRow()
+    spec = crossbar_mlp_spec(ws)
     n_tiles = sum((-(-w.shape[0] // 32)) * w.shape[1] for w in ws) / 32
     print(f"   {n_tiles:.0f} 32x32-crossbar equivalents")
 
@@ -132,22 +81,11 @@ def main():
                                                    n_steps=100))
     bank = PredictorBank("crossbar", families=("linear", "gbdt", "mlp")).fit(ds)
 
-    def infer(bank_or_none):
-        x = imgs * 1.6 - 0.8
-        e_tot, lat_tot = 0.0, 0.0
-        for i, w in enumerate(ws):
-            x, e, lat = run_layer(x, w, circ, bank_or_none)
-            e_tot += e
-            lat_tot += lat
-            if i < len(ws) - 1:
-                x = np.tanh(x)                      # digital activation
-                x = x * 0.8                         # DAC back to volts
-        pred = np.argmax(x, -1)
-        return pred, e_tot, lat_tot
+    x_volts = imgs * 1.6 - 0.8
 
     # digital reference (exact ternary matmuls, same activations)
     def infer_digital():
-        x = imgs * 1.6 - 0.8
+        x = x_volts
         for i, w in enumerate(ws):
             x = x @ w
             if i < len(ws) - 1:
@@ -157,17 +95,18 @@ def main():
     acc_d = float(np.mean(infer_digital() == labels))
     print(f"   digital ternary-net reference accuracy: {acc_d:.2%}")
 
-    print("== golden (SPICE stand-in) inference ==")
-    t0 = time.time()
-    pred_g, e_g, lat_g = infer(None)
-    t_gold = time.time() - t0
-    acc_g = float(np.mean(pred_g == labels))
+    print("== golden (SPICE stand-in) inference (network engine) ==")
+    run_g = NetworkEngine(spec, backend="golden").run(x_volts)
+    acc_g = float(np.mean(np.argmax(run_g.outputs, -1) == labels))
 
-    print("== LASANA inference ==")
-    t0 = time.time()
-    pred_l, e_l, lat_l = infer(bank)
-    t_las = time.time() - t0
-    acc_l = float(np.mean(pred_l == labels))
+    print("== LASANA inference (network engine) ==")
+    run_l = NetworkEngine(spec, backend="lasana", bank=bank).run(x_volts)
+    acc_l = float(np.mean(np.argmax(run_l.outputs, -1) == labels))
+
+    rep_g, rep_l = run_g.report(), run_l.report()
+    e_g, e_l = rep_g["network"]["energy_j"], rep_l["network"]["energy_j"]
+    lat_g = sum(l["max_latency_ns"] for l in rep_g["layers"])
+    lat_l = sum(l["max_latency_ns"] for l in rep_l["layers"])
 
     print(f"\n   accuracy: golden {acc_g:.2%} vs LASANA {acc_l:.2%} "
           f"(delta {abs(acc_g - acc_l) * 100:.2f} pts)")
@@ -175,8 +114,12 @@ def main():
           f"LASANA {e_l / args.n_test * 1e9:.3f} nJ "
           f"(err {abs(e_l - e_g) / e_g:.2%})")
     print(f"   latency err: {abs(lat_l - lat_g) / max(lat_g, 1e-9):.2%}")
-    print(f"   wall: golden {t_gold:.1f}s vs LASANA {t_las:.1f}s "
-          f"({t_gold / max(t_las, 1e-9):.1f}x)")
+    print("   per-layer (LASANA): " + "; ".join(
+        f"L{l['layer']}: {l['energy_j'] * 1e9:.2f} nJ, {l['events']} rows"
+        for l in rep_l["layers"]))
+    print(f"   wall: golden {run_g.wall_seconds:.1f}s vs LASANA "
+          f"{run_l.wall_seconds:.1f}s "
+          f"({run_g.wall_seconds / max(run_l.wall_seconds, 1e-9):.1f}x)")
 
 
 if __name__ == "__main__":

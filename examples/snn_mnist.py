@@ -1,23 +1,23 @@
 """Spiking MNIST case study (paper §V-E, second half).
 
 A 784-128-10 SNN (ANN-to-SNN conversion, Poisson rate coding, 100 ticks)
-runs once through the golden LIF integrator and once through per-neuron
-LASANA instances wired by the network connectivity. Reported: MNIST-style
-accuracy of both, spike-level agreement, total-energy error, wall time.
+runs through the network-level event-driven engine (core/network.py) once
+per backend: golden LIF integration vs. LASANA surrogates wired by the same
+connectivity. Reported: MNIST-style accuracy of both, spike-level
+agreement, total-energy error, per-layer report, wall time.
 
     PYTHONPATH=src python examples/snn_mnist.py [--n-test 100]
 """
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dataset import TestbenchConfig, build_dataset
+from repro.core.network import NetworkEngine, snn_spec
 from repro.core.predictors import PredictorBank
-from repro.core.simulate import run_snn_golden, run_snn_lasana
 from repro.data.mnist import make_digits, poisson_encode
 
 LAYERS = (784, 128, 10)
@@ -74,35 +74,39 @@ def main():
     spikes = jnp.asarray(spikes)
 
     # per-layer LIF knobs: paper's setting (all 0.5 V, V_leak = 0.58 V)
-    params = [np.tile(np.array([[0.58, 0.5, 0.5, 0.5]], np.float32),
-                      (1, 1)) for _ in ws]
-    params = [jnp.asarray(p[0]) for p in params]
-    w_jax = [jnp.asarray(w) for w in ws]
+    params = [jnp.asarray([0.58, 0.5, 0.5, 0.5], jnp.float32) for _ in ws]
+    spec = snn_spec([jnp.asarray(w) for w in ws], params)
 
-    print("== golden SNN simulation ==")
-    t0 = time.time()
-    counts_g, e_g = run_snn_golden("lif", w_jax, spikes, params)
-    counts_g = np.asarray(jax.block_until_ready(counts_g))
-    t_gold = time.time() - t0
-    acc_g = float(np.mean(np.argmax(counts_g, -1) == labels))
+    print("== golden SNN simulation (network engine) ==")
+    run_g = NetworkEngine(spec, backend="golden").run(spikes)
+    acc_g = float(np.mean(np.argmax(run_g.outputs, -1) == labels))
 
     print("== training LIF surrogate bank ==")
     ds = build_dataset("lif", TestbenchConfig(n_runs=args.bank_runs,
                                               n_steps=100))
     bank = PredictorBank("lif", families=("linear", "mlp")).fit(ds)
 
-    print("== LASANA SNN simulation ==")
-    t0 = time.time()
-    counts_l, e_l = run_snn_lasana(bank, w_jax, spikes, params)
-    counts_l = np.asarray(jax.block_until_ready(counts_l))
-    t_las = time.time() - t0
-    acc_l = float(np.mean(np.argmax(counts_l, -1) == labels))
+    print("== LASANA SNN simulation (network engine) ==")
+    run_l = NetworkEngine(spec, backend="lasana", bank=bank).run(spikes)
+    acc_l = float(np.mean(np.argmax(run_l.outputs, -1) == labels))
 
-    e_g, e_l = float(e_g), float(e_l)
+    rep_g, rep_l = run_g.report(), run_l.report()
+    e_g = rep_g["network"]["energy_j"]
+    e_l = rep_l["network"]["energy_j"]
+    spike_match = float(np.mean(
+        (run_g.out_spikes > 0.75) == (run_l.out_spikes > 0.75)))
+
     print(f"\n   accuracy: golden {acc_g:.2%} vs LASANA {acc_l:.2%} "
           f"(delta {abs(acc_g - acc_l) * 100:.2f} pts)")
+    print(f"   output spike agreement: {spike_match:.2%}")
     print(f"   total energy err: {abs(e_l - e_g) / max(e_g, 1e-30):.2%}")
-    print(f"   wall: golden {t_gold:.1f}s vs LASANA {t_las:.1f}s")
+    print("   per-layer (LASANA): " + "; ".join(
+        f"L{l['layer']}: {l['energy_j'] * 1e9:.2f} nJ, {l['events']} events"
+        for l in rep_l["layers"]))
+    print(f"   events/s: LASANA {rep_l['network']['events_per_sec']:.3g} "
+          f"vs golden {rep_g['network']['events_per_sec']:.3g}")
+    print(f"   wall: golden {run_g.wall_seconds:.1f}s vs LASANA "
+          f"{run_l.wall_seconds:.1f}s")
 
 
 if __name__ == "__main__":

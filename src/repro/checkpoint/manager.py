@@ -3,7 +3,10 @@
 Format: one directory per step —
     step_0000100.tmp/           (written, fsynced)
       meta.json                 treedef + shapes/dtypes + user metadata
-      leaf_00000.npz ...        zstd-compressed array chunks
+      leaf_00000.zst ...        zstd-compressed array chunks (``.raw``
+                                uncompressed fallback when the optional
+                                ``zstandard`` module is unavailable; the
+                                codec is recorded in meta.json)
     -> atomic rename to step_0000100/   (commit point)
 
 Design decisions for 1000+ node scale (documented here because the CPU
@@ -32,7 +35,11 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
-import zstandard as zstd
+
+try:                                    # optional: fall back to raw chunks
+    import zstandard as zstd
+except ImportError:                     # pragma: no cover - env dependent
+    zstd = None
 
 
 def _tree_flatten_with_names(tree):
@@ -74,12 +81,14 @@ class CheckpointManager:
         # device->host fetch happens on the caller thread (cheap, sharded);
         # compression + IO go to the writer thread.
         host_leaves = [np.asarray(x) for x in leaves]
+        codec = "zstd" if zstd is not None else "raw"
         meta = {
             "step": step,
             "treedef": str(treedef),
             "n_leaves": len(host_leaves),
             "shapes": [list(x.shape) for x in host_leaves],
             "dtypes": [str(x.dtype) for x in host_leaves],
+            "codec": codec,
             "user": metadata or {},
             "time": time.time(),
         }
@@ -91,11 +100,15 @@ class CheckpointManager:
                 if os.path.exists(tmp):
                     shutil.rmtree(tmp)
                 os.makedirs(tmp)
-                cctx = zstd.ZstdCompressor(level=3)
+                cctx = zstd.ZstdCompressor(level=3) if codec == "zstd" else None
+                ext = "zst" if codec == "zstd" else "raw"
                 for i, arr in enumerate(host_leaves):
                     raw = arr.tobytes()
-                    with open(os.path.join(tmp, f"leaf_{i:05d}.zst"), "wb") as f:
-                        f.write(cctx.compress(raw))
+                    if cctx is not None:
+                        raw = cctx.compress(raw)
+                    with open(os.path.join(tmp, f"leaf_{i:05d}.{ext}"),
+                              "wb") as f:
+                        f.write(raw)
                 with open(os.path.join(tmp, "meta.json"), "w") as f:
                     json.dump(meta, f)
                 if os.path.exists(final):
@@ -148,11 +161,19 @@ class CheckpointManager:
             raise ValueError(
                 f"checkpoint has {meta['n_leaves']} leaves; target structure "
                 f"has {len(leaves_like)}")
-        dctx = zstd.ZstdDecompressor()
+        codec = meta.get("codec", "zstd")
+        if codec == "zstd" and zstd is None:
+            raise RuntimeError(
+                f"checkpoint {path} is zstd-compressed but the zstandard "
+                "module is not installed")
+        dctx = zstd.ZstdDecompressor() if codec == "zstd" else None
+        ext = "zst" if codec == "zstd" else "raw"
         out = []
         for i, ref in enumerate(leaves_like):
-            with open(os.path.join(path, f"leaf_{i:05d}.zst"), "rb") as f:
-                raw = dctx.decompress(f.read())
+            with open(os.path.join(path, f"leaf_{i:05d}.{ext}"), "rb") as f:
+                raw = f.read()
+            if dctx is not None:
+                raw = dctx.decompress(raw)
             arr = np.frombuffer(raw, dtype=np.dtype(meta["dtypes"][i]))
             arr = arr.reshape(meta["shapes"][i])
             out.append(arr)

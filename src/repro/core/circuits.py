@@ -92,6 +92,15 @@ class CrossbarRow:
         tau = self.tau_base_ns * (1.0 + 0.5 * load)
         return self.v_sat * jnp.tanh(v_lin / self.v_sat), tau
 
+    def behavioral_step(self, v, v_in, params):
+        """SV-RNM-style ideal update: instant settle to the DC target.
+
+        v (N,) exposed state; v_in (N, n_in); params (N, n_p).
+        Returns (v_new, output) — no energy/latency (needs ML annotation).
+        """
+        tgt, _ = self._target(v_in, params)
+        return tgt, tgt
+
     def step(self, state, v_in, params):
         """One clock period. state: (N,1); v_in: (N,n_in); params: (N,n_p)."""
         v_out0 = state[..., 0]
@@ -182,6 +191,25 @@ class LIFNeuron:
         v_th = 0.55 + 0.9 * (params[..., 1] - 0.5)          # 0.55..0.82 V... scaled below
         v_adapt_gain = 1.0 + 2.0 * (params[..., 2] - 0.5)
         return 0.9 * v_th / 0.55 * 0.55 + v_adapt_gain * i_adap * 0.25
+
+    def behavioral_step(self, v, v_in, params):
+        """SV-RNM-style ideal discrete LIF update for one clock period.
+
+        v (N,) membrane voltage; v_in (N, 3) = (w, x_amp, n_spikes);
+        params (N, 4). Returns (v_new, output in {0, V_dd}) — no
+        energy/latency (those require the LASANA annotation pass). Idle
+        neurons are driven with v_in = 0 (drive term vanishes, leak stays).
+        """
+        thresh = 0.8 + 1.0 * (params[:, 1] - 0.5)
+        leak = jnp.exp(-(self.i_leak0 / self.c_mem) * jnp.exp(
+            (params[:, 0] - 0.5) / self.ut) * 1e-9 * self.clock_ns)
+        drive = (self.g_syn * v_in[:, 0] * v_in[:, 1] * v_in[:, 2] / 5.0
+                 / self.c_mem * self.clock_ns * 1e-9)
+        v_new = (v + drive) * leak
+        fire = v_new >= thresh
+        v_new = jnp.where(fire, 0.0, jnp.clip(v_new, 0.0, self.vdd))
+        out = jnp.where(fire, self.vdd, 0.0)
+        return v_new, out
 
     def step(self, state, v_in, params):
         """One clock period. state: (N,3); v_in: (N,3); params: (N,4)."""

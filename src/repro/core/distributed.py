@@ -28,6 +28,25 @@ def circuit_spec(mesh: Mesh) -> P:
     return P(tuple(mesh.axis_names))      # shard circuits over all axes
 
 
+def batch_spec(mesh: Mesh, ndim: int = 1, axis: int = 0) -> P:
+    """PartitionSpec sharding dim ``axis`` of an ndim array over ALL mesh
+    axes flattened (the network engine's batch-parallel layout: batch-major
+    flattened circuit arrays shard contiguously)."""
+    spec: list = [None] * ndim
+    spec[axis] = tuple(mesh.axis_names)
+    return P(*spec)
+
+
+def shard_over_batch(fn, mesh: Mesh, in_specs, out_specs):
+    """jit(shard_map(fn)) — the network engine's batch-parallel wrapper.
+
+    ``fn`` must be batch-local except for explicit psum/pmax collectives
+    (Algorithm 1 has zero cross-circuit communication, so a whole network
+    tick is batch-local; only diagnostics reduce)."""
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs))
+
+
 def make_distributed_step(bank, mesh: Mesh, *, clock_ns: float,
                           spiking: bool = False):
     """(state, changed, x, t) -> (state, e_total, spikes_total) shard-mapped."""

@@ -116,6 +116,22 @@ def extract_events(trace: Trace) -> EventSet:
             ls.append(trace.latency[run, t0])
             rids.append(run)
 
+    if not kinds:
+        # keep the column shapes of the 2-D fields so feature building on
+        # an empty event set (all-idle traces) stays well-formed
+        return EventSet(
+            kind=np.zeros((0,), np.int32),
+            x=np.zeros((0, trace.inputs.shape[-1]), np.float32),
+            v_start=np.zeros((0,), np.float32),
+            v_end=np.zeros((0,), np.float32),
+            o_prev=np.zeros((0,), np.float32),
+            o_end=np.zeros((0,), np.float32),
+            tau=np.zeros((0,), np.float32),
+            params=np.zeros((0, trace.params.shape[-1]), np.float32),
+            energy=np.zeros((0,), np.float64),
+            latency=np.zeros((0,), np.float32),
+            run_id=np.zeros((0,), np.int32),
+        )
     return EventSet(
         kind=np.asarray(kinds, np.int32),
         x=np.asarray(xs, np.float32),

@@ -94,7 +94,9 @@ def tile_energy_latency(bank: PredictorBank, *, seed=0, n_samples=2048):
 def explore_arch(cfg: ModelConfig, bank: PredictorBank) -> TileReport:
     model = Model(cfg)
     specs = model.param_specs()
-    flat = jax.tree.leaves_with_path(specs)
+    # jax.tree.leaves_with_path only exists on newer jax; tree_util spells
+    # it the same on 0.4.x
+    flat = jax.tree_util.tree_leaves_with_path(specs)
     e_tile, l_tile = tile_energy_latency(bank)
 
     n_tiles = 0

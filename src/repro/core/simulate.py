@@ -96,25 +96,12 @@ def run_behavioral(circuit, active, x, params) -> LayerRun:
 
     @jax.jit
     def sim(active, x, params):
-        if is_lif:
-            thresh = 0.8 + 1.0 * (params[:, 1] - 0.5)
-            leak = jnp.exp(-(5e-6 / circuit.c_mem) * jnp.exp(
-                (params[:, 0] - 0.5) / circuit.ut) * 1e-9 * circuit.clock_ns)
-
-            def step(v, xs):
-                a, xi = xs
-                drive = (circuit.g_syn * xi[:, 0] * xi[:, 1] * xi[:, 2] / 5.0
-                         / circuit.c_mem * circuit.clock_ns * 1e-9)
-                v_new = (v + jnp.where(a, drive, 0.0)) * leak
-                fire = v_new >= thresh
-                v_new = jnp.where(fire, 0.0, jnp.clip(v_new, 0.0, circuit.vdd))
-                out = jnp.where(fire, circuit.vdd, 0.0)
-                return v_new, (out, v_new)
-        else:
-            def step(v, xs):
-                a, xi = xs
-                tgt, _ = circuit._target(xi, params)
-                return tgt, (tgt, tgt)
+        def step(v, xs):
+            a, xi = xs
+            if is_lif:                  # no drive on idle ticks, leak stays
+                xi = jnp.where(a[:, None], xi, 0.0)
+            v_new, out = circuit.behavioral_step(v, xi, params)
+            return v_new, (out, v_new)
 
         _, (outs, states) = jax.lax.scan(step, jnp.zeros((n,)), (active, x))
         return outs, states
@@ -179,98 +166,38 @@ def run_lasana(bank, circuit, active, x, params, *,
                     wall_seconds=wall)
 
 
-# --- SNN network (layers of LIF banks wired by weight matrices) --------------------
+# --- SNN network (compat wrappers over core/network.py) -----------------------
+#
+# The hand-rolled per-layer loops that used to live here moved into the
+# network-level event-driven engine (core/network.py); these wrappers keep
+# the historical (counts, total_energy) signature for callers that don't
+# need the full NetworkRun report.
 
 def drive_to_circuit_inputs(drive):
     """Aggregate synaptic drive -> (w, x, n) circuit inputs (see DESIGN.md)."""
-    w = jnp.clip(drive, -1.0, 1.0)
-    x = jnp.full_like(drive, 1.5)
-    n = jnp.full_like(drive, 5.0)
-    return jnp.stack([w, x, n], axis=-1)
+    from repro.core.network import drive_to_circuit_inputs as _impl
+    return _impl(drive)
 
 
 def run_snn_lasana(bank, weights: list, spike_seq, params_per_layer, *,
-                   clock_ns=5.0):
-    """Feed-forward SNN: spike_seq (T, B, n_in) -> per-layer LASANA banks.
+                   clock_ns=5.0, mode="standalone"):
+    """Feed-forward SNN via the network engine's LASANA backend.
 
-    weights[i]: (n_in_i, n_out_i). Neurons are flattened (B * n_out_i) per
-    layer. Returns (spike counts per output neuron (B, n_cls), total energy).
+    weights[i]: (n_in_i, n_out_i). Returns (spike counts (B, n_cls),
+    total energy incl. the end-of-run idle flush).
     """
-    t_steps, b, _ = spike_seq.shape
-    n_layers = len(weights)
-
-    def _tile_params(p, n_out):
-        p = jnp.asarray(p)
-        if p.ndim == 1:                      # one knob set for the layer
-            return jnp.broadcast_to(p[None], (b * n_out, p.shape[0]))
-        return jnp.tile(p, (b, 1))           # per-neuron knobs
-
-    states = [init_state(b * w.shape[1],
-                         _tile_params(params_per_layer[i], w.shape[1]))
-              for i, w in enumerate(weights)]
-
-    @jax.jit
-    def sim(spike_seq, states):
-        def step(carry, xs):
-            states = carry
-            spikes, t = xs                               # (B, n_in)
-            energy = 0.0
-            new_states = []
-            s = spikes
-            for i, w in enumerate(weights):
-                drive = (s @ w) / 1.5                    # spike amp 1.5 -> unit
-                xin = drive_to_circuit_inputs(drive).reshape(-1, 3)
-                changed = jnp.ones((xin.shape[0],), bool)
-                ns, e, l, o = lasana_step(bank, states[i], changed, xin, t,
-                                          clock_ns, spiking=True)
-                new_states.append(ns)
-                s = o.reshape(b, w.shape[1])
-                energy = energy + jnp.sum(e)
-            return new_states, (s, energy)
-
-        times = (jnp.arange(t_steps, dtype=jnp.float32) + 1.0) * clock_ns
-        states, (out_spikes, energy) = jax.lax.scan(step, states,
-                                                    (spike_seq, times))
-        counts = jnp.sum(out_spikes > 0.75, axis=0)      # (B, n_cls)
-        return counts, jnp.sum(energy)
-
-    return sim(spike_seq, states)
+    from repro.core.network import NetworkEngine, snn_spec
+    eng = NetworkEngine(snn_spec(weights, params_per_layer),
+                        backend="lasana", bank=bank, mode=mode,
+                        record_hidden=False)
+    run = eng.run(spike_seq)
+    return run.outputs, run.energy.sum() + run.flush_energy.sum()
 
 
 def run_snn_golden(circuit, weights: list, spike_seq, params_per_layer):
     """Same network through the golden integrator (the SPICE reference)."""
-    circuit = get_circuit(circuit)
-    t_steps, b, _ = spike_seq.shape
-
-    def _tile_params(p, n_out):
-        p = jnp.asarray(p)
-        if p.ndim == 1:
-            return jnp.broadcast_to(p[None], (b * n_out, p.shape[0]))
-        return jnp.tile(p, (b, 1))
-
-    @jax.jit
-    def sim(spike_seq):
-        states = [circuit.init_state(b * w.shape[1]) for w in weights]
-        params = [_tile_params(params_per_layer[i], w.shape[1])
-                  for i, w in enumerate(weights)]
-
-        def step(carry, spikes):
-            states = carry
-            energy = 0.0
-            s = spikes
-            new_states = []
-            for i, w in enumerate(weights):
-                drive = (s @ w) / 1.5
-                xin = drive_to_circuit_inputs(drive).reshape(-1, 3)
-                ns, obs = circuit.step(states[i], xin, params[i])
-                new_states.append(ns)
-                s = jnp.where(obs["spiked"], circuit.vdd, 0.0).reshape(
-                    b, w.shape[1])
-                energy = energy + jnp.sum(obs["energy"])
-            return new_states, (s, energy)
-
-        states, (out_spikes, energy) = jax.lax.scan(step, states, spike_seq)
-        counts = jnp.sum(out_spikes > 0.75, axis=0)
-        return counts, jnp.sum(energy)
-
-    return sim(spike_seq)
+    from repro.core.network import NetworkEngine, snn_spec
+    eng = NetworkEngine(snn_spec(weights, params_per_layer),
+                        backend="golden", record_hidden=False)
+    run = eng.run(spike_seq)
+    return run.outputs, run.energy.sum()

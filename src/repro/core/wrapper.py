@@ -53,7 +53,8 @@ def _features(x, v, tau, params, o_prev=None, o_new=None):
 
 
 def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
-                out_eps: float = 0.02, spiking: bool = False):
+                out_eps: float = 0.02, spiking: bool = False,
+                known_out=None):
     """One digital tick for N circuits (Algorithm 1).
 
     bank     PredictorBank (selected models embedded as jit-able predictors)
@@ -61,18 +62,28 @@ def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
     changed  (N,) bool — set S as a mask
     x        (N, n_in) inputs applied at t (rows of X)
     t        scalar time (ns)
+    known_out  (N,) optional — annotation mode: the output this tick is
+             supplied by an external behavioral model, so M_O/M_V are
+             skipped and LASANA only resolves the event class and predicts
+             energy/latency. Callers substitute the behavioral state into
+             ``state.v`` each tick (there is no staleness to catch up, but
+             the merged-E2 *energy* of idle gaps is still accounted).
     returns  (new_state, e (N,), l (N,), o (N,))
     """
     n = state.v.shape[0]
     zeros_x = jnp.zeros_like(x)
+    annotate = known_out is not None
 
     # --- lines 3-9: catch up stale circuits with one merged idle event
     stale = changed & (state.t_last < t - clock_ns)
     tau_idle = jnp.maximum(t - state.t_last - clock_ns, 0.0)
     feats_idle = _features(zeros_x, state.v, tau_idle, state.params)
-    v_hat = bank.predict("M_V", feats_idle)
     e_s_idle = bank.predict("M_ES", feats_idle)
-    v_cur = jnp.where(stale, v_hat, state.v)
+    if annotate:
+        v_cur = state.v            # behavioral state: never stale
+    else:
+        v_hat = bank.predict("M_V", feats_idle)
+        v_cur = jnp.where(stale, v_hat, state.v)
     e = jnp.where(stale, e_s_idle, 0.0)
 
     # --- lines 10-22: run all predictors on the active batch.
@@ -80,8 +91,12 @@ def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
     # energy/latency predictors (beyond-paper; see predictors.py).
     tau_act = jnp.full((n,), clock_ns, jnp.float32)
     feats = _features(x, v_cur, tau_act, state.params)
-    o_hat = bank.predict("M_O", feats)
-    v_new = bank.predict("M_V", feats)
+    if annotate:
+        o_hat = known_out
+        v_new = v_cur              # caller overwrites with behavioral state
+    else:
+        o_hat = bank.predict("M_O", feats)
+        v_new = bank.predict("M_V", feats)
 
     # --- lines 23-29: select dynamic vs static by output behaviour
     if spiking:

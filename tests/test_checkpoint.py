@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import zstd
 
 
 def _tree(seed=0):
@@ -69,3 +70,29 @@ def test_async_save(tmp_path):
 def test_restore_latest_none(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     assert mgr.restore_latest(_tree()) is None
+
+
+def test_codec_recorded(tmp_path):
+    """meta.json records which codec wrote the leaves."""
+    import json
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, _tree())
+    with open(tmp_path / "step_0000002" / "meta.json") as f:
+        meta = json.load(f)
+    assert meta["codec"] == ("zstd" if zstd is not None else "raw")
+
+
+@pytest.mark.skipif(zstd is None, reason="zstandard not installed")
+def test_zstd_roundtrip_and_compression(tmp_path):
+    """zstd path: leaves are .zst, actually compressed, and roundtrip."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.zeros((256, 256))}       # compressible
+    mgr.save(4, tree)
+    path = tmp_path / "step_0000004"
+    leaf = path / "leaf_00000.zst"
+    assert leaf.exists()
+    assert leaf.stat().st_size < 256 * 256 * 4
+    got, _ = mgr.restore(4, tree)
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(tree["a"]))

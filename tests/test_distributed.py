@@ -36,9 +36,17 @@ _SCRIPT = textwrap.dedent("""
     step1 = jax.jit(step_mod.make_train_step(m1, opt))
     _, met1 = step1(s1, batch)
 
+    def make_mesh(shape, names):
+        # jax.sharding.AxisType only exists on newer jax; 0.4.x meshes are
+        # implicitly Auto
+        if hasattr(jax.sharding, "AxisType"):
+            return jax.make_mesh(
+                shape, names,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        return jax.make_mesh(shape, names)
+
     # 4x2 mesh, explicit shardings
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     rules = train_rules(mesh)
     m2 = Model(cfg, mesh=mesh, rules=rules)
     shape = ShapeConfig("t", 32, 8, "train")
@@ -65,8 +73,7 @@ _SCRIPT = textwrap.dedent("""
     state = init_state(n, params)
     changed = jax.random.bernoulli(key, 0.8, (n,))
     x = circ.sample_inputs(key, (n,))
-    sm_mesh = jax.make_mesh((8,), ("data",),
-                            axis_types=(jax.sharding.AxisType.Auto,))
+    sm_mesh = make_mesh((8,), ("data",))
     dstep = make_distributed_step(bank, sm_mesh, clock_ns=5.0, spiking=True)
     with sm_mesh:
         st_d, e_tot, n_out = dstep(state, changed, x, jnp.asarray([5.0]))

@@ -74,6 +74,47 @@ def test_lif_step_matches_golden(n, seed):
                                rtol=1e-5)
 
 
+@pytest.mark.parametrize("n", [64, 256, 300, 512, 1024])
+@pytest.mark.parametrize("block_n", [128, 256])
+def test_lif_scan_bitwise_matches_circuit_step(n, block_n):
+    """The kernel docstring contract: ``lif_scan`` must match
+    ``circuits.LIFNeuron.step`` BIT-FOR-BIT in fp32 (both as compiled XLA
+    programs — the oracle is jitted exactly as dataset generation runs it;
+    eager per-op execution may differ by FMA contraction)."""
+    circ = LIFNeuron()
+    key = jax.random.PRNGKey(n + block_n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    st = jnp.abs(jax.random.normal(k1, (n, 3))).astype(jnp.float32) * 0.3
+    x = circ.sample_inputs(k2, (n,)).astype(jnp.float32)
+    p = circ.sample_params(k3, n)
+    ns_k, obs_k = ops.lif_step(st, x, p, block_n=block_n)
+    ns_g, obs_g = jax.jit(circ.step)(st, x, p)
+    assert ns_k.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(ns_k), np.asarray(ns_g))
+    for field in ("output", "energy", "latency", "spiked"):
+        np.testing.assert_array_equal(np.asarray(obs_k[field]),
+                                      np.asarray(obs_g[field]),
+                                      err_msg=field)
+
+
+@pytest.mark.parametrize("dtype_state", [jnp.float32])
+def test_lif_scan_fp32_state_dtype_preserved(dtype_state):
+    """Padding in the ops wrapper must not change dtypes or the valid rows."""
+    circ = LIFNeuron()
+    key = jax.random.PRNGKey(11)
+    n = 100                                     # forces padding to block
+    st = jnp.zeros((n, 3), dtype_state)
+    x = circ.sample_inputs(key, (n,)).astype(jnp.float32)
+    p = circ.sample_params(key, n)
+    ns, obs = ops.lif_step(st, x, p, block_n=64)
+    assert ns.shape == (n, 3) and ns.dtype == jnp.float32
+    assert obs["spiked"].dtype == jnp.bool_
+    ns_ref, obs_ref = jax.jit(circ.step)(st, x, p)
+    np.testing.assert_array_equal(np.asarray(ns), np.asarray(ns_ref))
+    np.testing.assert_array_equal(np.asarray(obs["energy"]),
+                                  np.asarray(obs_ref["energy"]))
+
+
 @pytest.mark.parametrize("s,d,bq", [(256, 64, 128), (512, 64, 128),
                                     (256, 128, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -27,8 +27,14 @@ _SCRIPT = textwrap.dedent("""
     toks = jax.random.randint(key, (B, S + GEN), 0, cfg.vocab)
 
     def run(kv_seq):
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        # jax.sharding.AxisType only exists on newer jax; 0.4.x meshes are
+        # implicitly Auto
+        if hasattr(jax.sharding, "AxisType"):
+            mesh = jax.make_mesh(
+                (2, 4), ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        else:
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
         rules = serve_rules(mesh, kv_seq_sharding=kv_seq)
         model = Model(cfg, mesh=mesh, rules=rules)
         with mesh:

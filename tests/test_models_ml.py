@@ -4,8 +4,11 @@ standardizer properties."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # minimal CPU container
+    from _hyp_fallback import given, settings, st
 
 from repro.core.models import (GBDTModel, LinearModel, MLPModel, MeanModel,
                                Standardizer, TableModel)

@@ -1,0 +1,187 @@
+"""Network-level event-driven engine (core/network.py).
+
+Covers the ISSUE-1 acceptance properties: scheduler determinism under a
+fixed seed, standalone-vs-annotation mode consistency, and network-level
+LASANA-vs-behavioral spike-train parity within the paper tolerance (<2%
+behavioral error) on a tiny 2-layer net — plus mesh batch-parallel parity
+and report aggregation invariants.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core.network import (NetworkEngine, crossbar_mlp_spec, snn_spec)
+from repro.core.simulate import run_snn_golden, run_snn_lasana
+
+T_STEPS, BATCH = 40, 4
+
+
+@pytest.fixture(scope="module")
+def net_bank():
+    """Quality LIF bank — large enough for <2% network-level parity."""
+    from repro.core.dataset import TestbenchConfig, build_dataset
+    from repro.core.predictors import PredictorBank
+    ds = build_dataset("lif", TestbenchConfig(n_runs=600, n_steps=80, seed=1))
+    return PredictorBank("lif", families=("linear", "mlp")).fit(ds)
+
+
+@pytest.fixture(scope="module")
+def tiny_net():
+    """2-layer 12-8-4 LIF net + fixed-seed Poisson spike stimulus."""
+    key = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(key, (12, 8)) * 0.8
+    w2 = jax.random.normal(jax.random.PRNGKey(1), (8, 4)) * 0.8
+    params = [jnp.asarray([0.58, 0.5, 0.5, 0.5])] * 2
+    spec = snn_spec([w1, w2], params)
+    spikes = (jax.random.bernoulli(jax.random.PRNGKey(2), 0.2,
+                                   (T_STEPS, BATCH, 12)) * 1.5
+              ).astype(jnp.float32)
+    return spec, spikes
+
+
+def test_scheduler_deterministic_under_fixed_seed(net_bank, tiny_net):
+    """Same spec + same stimulus -> bit-identical runs, engine reuse or not."""
+    spec, spikes = tiny_net
+    eng = NetworkEngine(spec, backend="lasana", bank=net_bank)
+    r1 = eng.run(spikes)
+    r2 = eng.run(spikes)                                   # cached jit
+    r3 = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    for other in (r2, r3):
+        np.testing.assert_array_equal(r1.out_spikes, other.out_spikes)
+        np.testing.assert_array_equal(r1.energy, other.energy)
+        np.testing.assert_array_equal(r1.events, other.events)
+        np.testing.assert_array_equal(r1.flush_energy, other.flush_energy)
+
+
+def test_standalone_vs_annotation_consistency(net_bank, tiny_net):
+    """Annotation mode must reproduce behavioral spikes EXACTLY (it only
+    adds energy/latency) and its energy must land near standalone's."""
+    spec, spikes = tiny_net
+    behav = NetworkEngine(spec, backend="behavioral").run(spikes)
+    annot = NetworkEngine(spec, backend="lasana", bank=net_bank,
+                          mode="annotation").run(spikes)
+    stand = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    np.testing.assert_array_equal(annot.out_spikes, behav.out_spikes)
+    for a, b in zip(annot.layer_spikes, behav.layer_spikes):
+        np.testing.assert_array_equal(a, b)
+    # behavioral alone reports zero energy; annotation fills it in
+    assert behav.energy.sum() == 0.0
+    e_a = annot.energy.sum() + annot.flush_energy.sum()
+    e_s = stand.energy.sum() + stand.flush_energy.sum()
+    assert np.isfinite(e_a) and e_a > 0
+    assert abs(e_a - e_s) / e_s < 0.5, (e_a, e_s)
+
+
+def test_lasana_behavioral_spike_parity(net_bank, tiny_net):
+    """Paper tolerance: <2% spike-train mismatch across the whole net."""
+    spec, spikes = tiny_net
+    behav = NetworkEngine(spec, backend="behavioral").run(spikes)
+    las = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    mism = sum(np.sum((b > 0.75) != (l > 0.75)) for b, l in
+               zip(behav.layer_spikes, las.layer_spikes))
+    total = sum(b.size for b in behav.layer_spikes)
+    assert mism / total < 0.02, f"spike mismatch {mism / total:.4f}"
+
+
+def test_lasana_energy_tracks_golden(net_bank, tiny_net):
+    """Event-driven totals (incl. idle flush) land near the golden sim."""
+    spec, spikes = tiny_net
+    gold = NetworkEngine(spec, backend="golden").run(spikes)
+    las = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    e_g = gold.report()["network"]["energy_j"]
+    e_l = las.report()["network"]["energy_j"]
+    assert abs(e_l - e_g) / e_g < 0.15, (e_l, e_g)
+
+
+def test_mesh_batch_parallel_parity(net_bank, tiny_net):
+    """shard_map over a 1-device mesh must not change any output."""
+    spec, spikes = tiny_net
+    mesh = Mesh(np.array(jax.devices()[:1]), ("batch",))
+    base = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    shard = NetworkEngine(spec, backend="lasana", bank=net_bank,
+                          mesh=mesh).run(spikes)
+    np.testing.assert_array_equal(base.out_spikes, shard.out_spikes)
+    np.testing.assert_allclose(base.energy, shard.energy, rtol=1e-6)
+    np.testing.assert_allclose(base.flush_energy, shard.flush_energy,
+                               rtol=1e-6)
+    np.testing.assert_array_equal(base.events, shard.events)
+
+
+def test_report_aggregation(net_bank, tiny_net):
+    """The network report must be consistent with the raw per-tick arrays."""
+    spec, spikes = tiny_net
+    run = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    rep = run.report()
+    assert len(rep["layers"]) == spec.n_layers
+    for i, layer in enumerate(rep["layers"]):
+        np.testing.assert_allclose(
+            layer["energy_j"],
+            run.energy[:, i].sum() + run.flush_energy[i], rtol=1e-6)
+        assert layer["events"] == int(run.events[:, i].sum())
+    np.testing.assert_allclose(
+        rep["network"]["energy_j"],
+        sum(l["energy_j"] for l in rep["layers"]), rtol=1e-6)
+    assert rep["network"]["events"] == int(run.events.sum())
+    assert rep["network"]["ticks"] == T_STEPS
+    # event-driven scheduling actually skips idle circuits
+    assert rep["network"]["events"] < T_STEPS * BATCH * (8 + 4)
+
+
+def test_golden_backend_matches_simulate_wrapper(tiny_net):
+    """The compat wrapper in simulate.py is the engine under the hood."""
+    spec, spikes = tiny_net
+    run = NetworkEngine(spec, backend="golden").run(spikes)
+    counts, energy = run_snn_golden(
+        "lif", [l.weight for l in spec.layers],
+        spikes, [l.params for l in spec.layers])
+    np.testing.assert_array_equal(run.outputs, counts)
+    np.testing.assert_allclose(run.energy.sum(), energy, rtol=1e-6)
+
+
+def test_invalid_configuration_raises(tiny_net):
+    spec, _ = tiny_net
+    with pytest.raises(ValueError, match="backend"):
+        NetworkEngine(spec, backend="spice")
+    with pytest.raises(ValueError, match="PredictorBank"):
+        NetworkEngine(spec, backend="lasana")
+    with pytest.raises(ValueError, match="mode"):
+        NetworkEngine(spec, backend="lasana", bank=object(), mode="oracle")
+
+
+# --- crossbar (combinational) path -------------------------------------------
+
+@pytest.fixture(scope="module")
+def xbar_net():
+    rng = np.random.default_rng(7)
+    ws = [rng.integers(-1, 2, (40, 8)).astype(np.float32),
+          rng.integers(-1, 2, (8, 4)).astype(np.float32)]
+    x = rng.uniform(-0.8, 0.8, (4, 40)).astype(np.float32)
+    return crossbar_mlp_spec(ws), x
+
+
+def test_crossbar_golden_vs_behavioral(xbar_net):
+    """Ideal settle + ADC quantization: behavioral must equal golden."""
+    spec, x = xbar_net
+    g = NetworkEngine(spec, backend="golden").run(x)
+    b = NetworkEngine(spec, backend="behavioral").run(x)
+    assert g.outputs.shape == (4, 4)
+    np.testing.assert_allclose(g.outputs, b.outputs, atol=1e-5)
+    assert g.report()["network"]["energy_j"] > 0
+    assert np.all(g.latency > 0)
+
+
+def test_crossbar_lasana_smoke(xbar_net, crossbar_dataset):
+    from repro.core.predictors import PredictorBank
+    spec, x = xbar_net
+    bank = PredictorBank("crossbar",
+                         families=("mean", "linear")).fit(crossbar_dataset)
+    run = NetworkEngine(spec, backend="lasana", bank=bank).run(x)
+    assert np.all(np.isfinite(run.outputs))
+    rep = run.report()
+    assert rep["network"]["energy_j"] > 0
+    # one row evaluation per segment per output per sample
+    assert rep["layers"][0]["events"] == 4 * 8 * 2    # B * n_out * n_seg
+    assert rep["layers"][1]["events"] == 4 * 4 * 1

@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # minimal CPU container
+    from _hyp_fallback import given, settings, st
 
 from repro.optim import (AdamW, AdamWConfig, clip_by_global_norm,
                          compress_decompress, dequantize_int8, global_norm,

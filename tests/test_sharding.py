@@ -2,8 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # minimal CPU container
+    from _hyp_fallback import given, settings, st
 
 import jax
 from jax.sharding import Mesh

@@ -5,8 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # minimal CPU container
+    from _hyp_fallback import given, settings, st
 
 from repro.core.circuits import LIFNeuron
 from repro.core.wrapper import (init_state, lasana_step,
