@@ -135,6 +135,9 @@ def run(full: bool = False):
     save_json("network_engine", out)
     emit("network/events_per_sec_engine", ev_engine)
     emit("network/events_per_sec_naive", ev_naive)
+    for l in rep["layers"]:       # per-layer attribution (circuit + backend)
+        emit(f"network/layer{l['layer']}_{l['circuit']}_energy_nj",
+             l["energy_j"] * 1e9, f"{l['events']} events, {l['backend']}")
     emit("network/speedup", speedup,
          f"target >=10x; energy_err={out['energy_err_vs_golden']:.2%}")
     if speedup < 10:

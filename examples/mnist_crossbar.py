@@ -115,8 +115,8 @@ def main():
           f"(err {abs(e_l - e_g) / e_g:.2%})")
     print(f"   latency err: {abs(lat_l - lat_g) / max(lat_g, 1e-9):.2%}")
     print("   per-layer (LASANA): " + "; ".join(
-        f"L{l['layer']}: {l['energy_j'] * 1e9:.2f} nJ, {l['events']} rows"
-        for l in rep_l["layers"]))
+        f"L{l['layer']} [{l['circuit']}]: {l['energy_j'] * 1e9:.2f} nJ, "
+        f"{l['events']} rows" for l in rep_l["layers"]))
     print(f"   wall: golden {run_g.wall_seconds:.1f}s vs LASANA "
           f"{run_l.wall_seconds:.1f}s "
           f"({run_g.wall_seconds / max(run_l.wall_seconds, 1e-9):.1f}x)")

@@ -101,8 +101,8 @@ def main():
     print(f"   output spike agreement: {spike_match:.2%}")
     print(f"   total energy err: {abs(e_l - e_g) / max(e_g, 1e-30):.2%}")
     print("   per-layer (LASANA): " + "; ".join(
-        f"L{l['layer']}: {l['energy_j'] * 1e9:.2f} nJ, {l['events']} events"
-        for l in rep_l["layers"]))
+        f"L{l['layer']} [{l['circuit']}]: {l['energy_j'] * 1e9:.2f} nJ, "
+        f"{l['events']} events" for l in rep_l["layers"]))
     print(f"   events/s: LASANA {rep_l['network']['events_per_sec']:.3g} "
           f"vs golden {rep_g['network']['events_per_sec']:.3g}")
     print(f"   wall: golden {run_g.wall_seconds:.1f}s vs LASANA "

@@ -82,6 +82,19 @@ class CrossbarRow:
     def init_state(self, n: int):
         return jnp.zeros((n, 1), jnp.float32)   # V_out is the only memory
 
+    def surrogate_features(self, x, params):
+        """Physics-informed derived interface feature: the aggregate row
+        current drive (w . x + bias * v_bias), the only path through which
+        inputs enter the DC solution. Still strictly an interface signal —
+        it is computed from x and the fixed row weights, both of which the
+        wrapper already has — but it turns the surrogate's 32-way bilinear
+        learning problem into a nearly 1-D regression (M_O test MSE drops
+        ~200x with it; see docs/adding_a_circuit.md)."""
+        w = params[..., : self.n_inputs]
+        bias = params[..., self.n_inputs]
+        i_sig = (w * x).sum(axis=-1) + bias * self.v_bias
+        return i_sig[..., None]
+
     def _target(self, v_in, params):
         w = params[..., : self.n_inputs]
         bias = params[..., self.n_inputs]
@@ -185,6 +198,13 @@ class LIFNeuron:
 
     def init_state(self, n: int):
         return jnp.zeros((n, 3), jnp.float32)    # (V_mem, I_adap, t_ref)
+
+    def surrogate_features(self, x, params):
+        """Physics-informed derived interface feature: the aggregate
+        synaptic drive w * x_amp * n_spikes / 5 (the same reduction the
+        behavioral model applies), computed purely from interface inputs."""
+        drive = x[..., 0] * x[..., 1] * x[..., 2] / 5.0
+        return drive[..., None]
 
     def _thresh(self, params, i_adap):
         # V_th knob maps to an effective threshold plus adaptation raise

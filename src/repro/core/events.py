@@ -7,6 +7,23 @@
 Events always start/end on timestep boundaries. Energy is integrated over
 the event; latency is only defined for E1 (start of input to 90% settle /
 spike peak). Extraction is vectorized over (runs, T) trace arrays.
+
+Public API
+----------
+:class:`Trace`
+    the (R runs, T timesteps) golden-simulation record handed to extraction
+    (``idle_x_is_zero`` distinguishes spiking inputs, which vanish between
+    events, from sample-and-hold voltage inputs)
+:func:`extract_events` -> :class:`EventSet`
+    flat struct-of-arrays event table; slice with ``of_kind``/``select``,
+    merge with ``EventSet.concat``
+:func:`split_runwise`
+    the paper's run-wise 70/15/15 train/test/val split
+
+Downstream, predictors.build_features turns an EventSet into the
+(x, v', tau, params[, o_prev, o_new]) feature rows the five predictors
+train on; see docs/architecture.md for the event taxonomy's role in
+Algorithm 1.
 """
 
 from __future__ import annotations

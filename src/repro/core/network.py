@@ -1,41 +1,79 @@
-"""Network-level event-driven LASANA simulation engine (paper §V-E at scale).
+"""Heterogeneous network-level event-driven LASANA engine (paper §V-E at scale).
 
-Composes multiple circuit banks (LIF layers wired by synaptic weight
-matrices, or tiled crossbar-row layers) into a layered dataflow graph and
-runs the paper's Algorithm 1 across the whole network:
+Composes circuit banks of *different kinds* — event-driven LIF neuron layers
+and combinational PCM crossbar-row layers — into one layered dataflow graph
+(the MENAGE-style mixed-signal composition: analog crossbar MACs feeding
+spiking neuron banks, with optional recurrent feedback) and runs the paper's
+Algorithm 1 across the whole graph:
 
-  * batched per-tick event queues — each tick, the spike vector emitted by
-    layer i-1 is the event queue consumed by layer i; per-neuron ``changed``
-    masks mark which circuits received an input event, so idle neurons are
-    skipped and later caught up with ONE merged E2 event (wrapper.py);
-  * per-bank jit-compiled steps for three backends over the same graph:
+  * per-layer ``circuit`` kinds: every :class:`LayerSpec` names the circuit
+    bank it instantiates (``"lif"`` | ``"crossbar"``) plus the bank's local
+    knobs (LIF bias params, crossbar segment width / ADC bits / digital
+    activation);
+  * typed inter-layer adapters (:func:`adapt_signal`): spike trains become
+    crossbar input volts (spike -> DAC drive), crossbar ADC codes become
+    rate-encoded LIF current drive, crossbar codes become the next crossbar's
+    DAC volts — every (src kind, dst kind) pair has one documented signal
+    conversion, so heterogeneous layers compose without per-network glue;
+  * batched per-tick event queues — each tick, the signal published by layer
+    i-1 is the event queue consumed by layer i; per-circuit ``changed`` masks
+    mark which circuits received an input event (spike arrival through a
+    nonzero weight for LIF banks, a live sample-and-hold input for crossbar
+    rows), so idle circuits are skipped and later caught up with ONE merged
+    E2 event (core/wrapper.py);
+  * recurrent edges (:class:`EdgeSpec`): extra layer->layer connections
+    (layer to an *earlier* layer or to itself) that deliver the source
+    layer's previous-tick output with a one-tick delay — lateral inhibition,
+    feedback loops, winner-take-all circuits;
+  * one unified ``_build_sim`` for every graph and all three backends:
       golden      — sub-step ODE integration of every circuit every tick
       behavioral  — SV-RNM ideal discrete update (no energy/latency)
-      lasana      — Algorithm 1 over a trained PredictorBank, in
-                    ``standalone`` mode (surrogate predicts spikes + state +
-                    energy/latency) or ``annotation`` mode (behavioral model
-                    supplies spikes/state, LASANA adds energy/latency);
+      lasana      — Algorithm 1 over trained PredictorBanks (one per circuit
+                    kind), in ``standalone`` mode (surrogate predicts output
+                    + state + energy/latency) or ``annotation`` mode
+                    (behavioral model supplies outputs, LASANA adds
+                    energy/latency);
   * ``shard_map`` batch parallelism over the device mesh via
     core/distributed.py — circuits are batch-local, so a whole network tick
     shards over the flattened mesh with only diagnostic psums;
-  * a network-level report aggregating per-layer energy / latency / event
-    counts plus an end-of-run flush that charges the static energy of
-    still-idle circuits (so event-driven totals are comparable to golden).
+  * a network-level report attributing per-layer energy / latency / event
+    counts to each layer's circuit kind, plus an end-of-run flush that
+    charges the static energy of still-idle circuits.
+
+Public API
+----------
+:class:`LayerSpec` / :class:`EdgeSpec` / :class:`NetworkSpec`
+    the graph description (pure data, hashable layer tuples)
+:func:`lif_layer` / :func:`crossbar_layer` / :func:`recurrent_edge`
+    per-layer/per-edge constructors
+:func:`snn_spec` / :func:`crossbar_mlp_spec` / :func:`graph_spec`
+    whole-graph constructors (homogeneous SNN, tiled crossbar MLP, arbitrary
+    mixed graph)
+:func:`adapt_signal` / :func:`event_threshold`
+    the typed inter-layer signal adapters
+:class:`NetworkEngine` / :class:`NetworkRun`
+    the simulator and its run record / report
 
 Usage::
 
-    from repro.core.network import NetworkEngine, snn_spec
+    from repro.core.network import (NetworkEngine, crossbar_layer, graph_spec,
+                                    lif_layer, recurrent_edge, snn_spec)
 
-    spec = snn_spec(weights, params_per_layer)        # LIF layers
+    spec = snn_spec(weights, params_per_layer)        # homogeneous LIF net
     golden = NetworkEngine(spec, backend="golden").run(spike_seq)
     lasana = NetworkEngine(spec, backend="lasana", bank=bank).run(spike_seq)
     print(lasana.report()["network"])                 # energy, events/s, ...
 
-    xspec = crossbar_mlp_spec(ternary_weights)        # tiled crossbar MLP
-    run = NetworkEngine(xspec, backend="lasana", bank=xbank).run(x_volts)
+    mixed = graph_spec(                               # MENAGE-style graph
+        [crossbar_layer(ternary_w),                   # analog MAC front-end
+         lif_layer(readout_w, lif_params)],           # spiking readout
+        edges=[recurrent_edge(1, 1, inhibit_w)])      # lateral inhibition
+    run = NetworkEngine(mixed, backend="lasana",
+                        bank={"crossbar": xbank, "lif": lbank}).run(x_seq)
 
-``spike_seq`` is (T, B, n_in) spike amplitudes; crossbar inputs are
-(B, n_in) volts. Pass ``mesh=Mesh(...)`` to shard the batch axis.
+Spiking inputs are (T, B, n_in) spike amplitudes; a 2-D (B, n_in) input is
+promoted to one combinational wave (T=1, the pure-crossbar MLP case).
+Pass ``mesh=Mesh(...)`` to shard the batch axis.
 """
 
 from __future__ import annotations
@@ -56,54 +94,196 @@ from repro.core.wrapper import LasanaState, init_state, lasana_step
 P_REPL = P()                     # replicated diagnostics spec
 BACKENDS = ("golden", "behavioral", "lasana")
 MODES = ("standalone", "annotation")
+CIRCUIT_KINDS = ("lif", "crossbar")
+
+# a crossbar row-segment has an input event iff any of its sample-and-hold
+# input lines carries a live (nonzero) voltage this tick
+_XBAR_EVENT_EPS = 1e-6
 
 
 # --- network specification ----------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
-    """One bank of circuits fed by a synaptic/row weight matrix."""
+    """One bank of circuits of a single ``circuit`` kind.
 
-    weight: Any                 # (fan_in, n_out)
-    params: Any                 # (n_out, n_p) or (n_p,) broadcast knobs
+    weight      (fan_in, n_out) — synaptic matrix (lif) or the ternary
+                matrix tiled onto ``seg_width``-input crossbar rows
+    params      lif: (n_p,) broadcast knobs or (n_out, n_p); crossbar: None
+    circuit     "lif" | "crossbar"
+    seg_width   crossbar: row segment width (must equal the circuit's
+                ``n_inputs``)
+    adc_bits    crossbar: ADC resolution applied to each row output
+    activation  crossbar: digital activation applied to this layer's ADC
+                codes before they drive any downstream layer ("tanh"|"none")
+    """
+
+    weight: Any
+    params: Any = None
+    circuit: str = "lif"
+    seg_width: int = 32
+    adc_bits: int = 8
+    activation: str = "tanh"
+
+    @property
+    def fan_in(self) -> int:
+        return self.weight.shape[0]
 
     @property
     def n_out(self) -> int:
         return self.weight.shape[1]
 
+    @property
+    def n_seg(self) -> int:
+        return -(-self.fan_in // self.seg_width)
+
+    def n_circuits(self, batch: int) -> int:
+        """Circuit instances this layer simulates for one batch."""
+        if self.circuit == "crossbar":
+            return batch * self.n_out * self.n_seg
+        return batch * self.n_out
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSpec:
+    """An extra (typically recurrent) connection between two layers.
+
+    Every edge is delivered with a ONE-TICK DELAY: at tick t the destination
+    layer receives the source layer's output published at tick t-1 (zeros at
+    t=0).  This makes self-loops and layer->earlier-layer feedback
+    well-defined inside the single-tick feed-forward cascade.
+
+    weight   (n_out[src], n_out[dst]) for a lif destination (maps straight
+             into the destination's synaptic drive) or
+             (n_out[src], fan_in[dst]) for a crossbar destination (maps into
+             the destination's DAC input volts).
+    """
+
+    src: int
+    dst: int
+    weight: Any
+
+
+def recurrent_edge(src: int, dst: int, weight) -> EdgeSpec:
+    """One-tick-delayed edge from layer ``src``'s output to layer ``dst``."""
+    return EdgeSpec(src=src, dst=dst,
+                    weight=jnp.asarray(weight, jnp.float32))
+
 
 @dataclasses.dataclass(frozen=True)
 class NetworkSpec:
+    """A layered circuit graph: a feed-forward chain + optional extra edges.
+
+    The chain network-input -> layers[0] -> layers[1] -> ... is evaluated
+    within one tick (a combinational cascade); every :class:`EdgeSpec` in
+    ``edges`` adds a one-tick-delayed connection on top.
+    """
+
     layers: tuple
-    circuit: str = "lif"
+    edges: tuple = ()
     spike_amp: float = 1.5      # V_dd spike amplitude on the event queues
-    seg_width: int = 32         # crossbar: row segment width
-    adc_bits: int = 8           # crossbar: ADC resolution between layers
-    activation: str = "tanh"    # crossbar: digital activation between layers
 
     @property
     def n_layers(self) -> int:
         return len(self.layers)
 
+    @property
+    def circuits(self) -> tuple:
+        return tuple(l.circuit for l in self.layers)
 
-def snn_spec(weights, params_per_layer, *, spike_amp: float = 1.5
-             ) -> NetworkSpec:
+    def edges_into(self, i: int) -> tuple:
+        return tuple(e for e in self.edges if e.dst == i)
+
+
+def lif_layer(weight, params, **kw) -> LayerSpec:
+    """LIF neuron bank: weight (fan_in, n_out), params (n_p,) | (n_out, n_p)."""
+    return LayerSpec(weight=jnp.asarray(weight, jnp.float32),
+                     params=jnp.asarray(params, jnp.float32),
+                     circuit="lif", **kw)
+
+
+def crossbar_layer(weight, *, seg_width: int = 32, adc_bits: int = 8,
+                   activation: str = "tanh") -> LayerSpec:
+    """Ternary matrix (fan_in, n_out) tiled onto seg_width-input rows."""
+    return LayerSpec(weight=jnp.asarray(weight, jnp.float32), params=None,
+                     circuit="crossbar", seg_width=seg_width,
+                     adc_bits=adc_bits, activation=activation)
+
+
+def snn_spec(weights, params_per_layer, *, spike_amp: float = 1.5,
+             edges=()) -> NetworkSpec:
     """Feed-forward SNN of LIF banks: weights[i] (fan_in_i, n_out_i)."""
-    layers = tuple(
-        LayerSpec(weight=jnp.asarray(w, jnp.float32),
-                  params=jnp.asarray(p, jnp.float32))
-        for w, p in zip(weights, params_per_layer))
-    return NetworkSpec(layers=layers, circuit="lif", spike_amp=spike_amp)
+    layers = tuple(lif_layer(w, p)
+                   for w, p in zip(weights, params_per_layer))
+    return NetworkSpec(layers=layers, edges=tuple(edges),
+                       spike_amp=spike_amp)
 
 
 def crossbar_mlp_spec(weights, *, seg_width: int = 32, adc_bits: int = 8,
                       activation: str = "tanh") -> NetworkSpec:
     """Ternary-weight MLP tiled onto ``seg_width``-input crossbar rows."""
-    layers = tuple(LayerSpec(weight=jnp.asarray(w, jnp.float32),
-                             params=None) for w in weights)
-    return NetworkSpec(layers=layers, circuit="crossbar",
-                       seg_width=seg_width, adc_bits=adc_bits,
-                       activation=activation)
+    layers = tuple(crossbar_layer(w, seg_width=seg_width, adc_bits=adc_bits,
+                                  activation=activation) for w in weights)
+    return NetworkSpec(layers=layers)
+
+
+def graph_spec(layers, *, edges=(), spike_amp: float = 1.5) -> NetworkSpec:
+    """Arbitrary mixed-circuit graph from LayerSpecs + EdgeSpecs."""
+    return NetworkSpec(layers=tuple(layers), edges=tuple(edges),
+                       spike_amp=spike_amp)
+
+
+# --- typed inter-layer adapters -----------------------------------------------
+
+def _digital_activation(y, activation: str):
+    if activation == "tanh":
+        return jnp.tanh(y)
+    return y
+
+
+def adapt_signal(src_kind: str, dst_kind: str, y, *, spike_amp: float = 1.5,
+                 activation: str = "tanh"):
+    """Convert a source layer's published output to dst-native input units.
+
+    Published outputs are: lif — spike amplitudes in {0, spike_amp} volts;
+    crossbar — post-ADC, gain-compensated codes in weight-sum units;
+    "input" — the network stimulus, already in the first layer's native
+    units (spike amplitudes for a lif front layer, DAC volts for crossbar).
+
+    Conversions (``activation`` is the SOURCE crossbar layer's digital
+    activation block):
+
+      lif      -> lif       identity (spikes are the drive currency)
+      lif      -> crossbar  spike -> DAC volts: s * input_hi / spike_amp
+      crossbar -> lif       ADC code -> rate-encoded drive:
+                            act(y) * spike_amp  (signed; |u| <= spike_amp)
+      crossbar -> crossbar  ADC code -> DAC volts: act(y) * input_hi
+    """
+    if src_kind == "input":
+        return y
+    xb = get_circuit("crossbar")
+    if src_kind == "lif" and dst_kind == "lif":
+        return y
+    if src_kind == "lif" and dst_kind == "crossbar":
+        return (y * (xb.input_hi / spike_amp)).astype(jnp.float32)
+    if src_kind == "crossbar" and dst_kind == "lif":
+        return (_digital_activation(y, activation)
+                * spike_amp).astype(jnp.float32)
+    if src_kind == "crossbar" and dst_kind == "crossbar":
+        return (_digital_activation(y, activation)
+                * xb.input_hi).astype(jnp.float32)
+    raise ValueError(f"no adapter for {src_kind!r} -> {dst_kind!r}")
+
+
+def event_threshold(src_kind: str, spike_amp: float) -> float:
+    """|u| above this counts as an input event at a LIF destination.
+
+    Spiking sources emit V_dd pulses (half-amplitude discriminator);
+    analog crossbar sources count any appreciable rate-encoded drive.
+    """
+    if src_kind in ("input", "lif"):
+        return 0.5 * spike_amp
+    return 0.05 * spike_amp
 
 
 def drive_to_circuit_inputs(drive):
@@ -119,7 +299,6 @@ def _tile_params(p, b: int, n_out: int):
     if p.ndim == 1:                       # one knob set for the whole layer
         return jnp.broadcast_to(p[None], (b * n_out, p.shape[0]))
     return jnp.tile(p, (b, 1))            # per-neuron knobs, batch-tiled
-
 
 def _row_segments(w, seg_width: int):
     """(n_in, n_out) ternary matrix -> (n_out * n_seg, seg_width + 1)
@@ -139,14 +318,14 @@ def _row_segments(w, seg_width: int):
 
 @dataclasses.dataclass
 class NetworkRun:
-    """Record of one network simulation (spiking: T ticks; crossbar: T=L)."""
+    """Record of one network simulation over T ticks (combinational: T=1)."""
 
     backend: str
     mode: str
-    outputs: np.ndarray           # spiking: (B, n_cls) spike counts;
-                                  # crossbar: (B, n_cls) analog logits
-    out_spikes: Optional[np.ndarray]   # spiking: (T, B, n_cls) amplitudes
-    layer_spikes: Optional[list]  # spiking: per layer (T, B, n_i) amplitudes
+    outputs: np.ndarray           # lif last layer: (B, n_cls) spike counts;
+                                  # crossbar last layer: (B, n_cls) codes
+    out_spikes: Optional[np.ndarray]   # lif last layer: (T, B, n_cls) amps
+    layer_spikes: Optional[list]  # per layer (T, B, n_i) published outputs
     energy: np.ndarray            # (T, L) joules per tick per layer
     latency: np.ndarray           # (T, L) ns — max over the layer's circuits
     events: np.ndarray            # (T, L) input events processed
@@ -154,14 +333,21 @@ class NetworkRun:
     n_circuits: np.ndarray        # (L,) circuits per layer (B-included)
     clock_ns: float
     wall_seconds: float
+    circuits: tuple = ()          # (L,) per-layer circuit kind
 
     def report(self) -> dict:
-        """Aggregate per-layer energy/latency/events + network totals."""
+        """Aggregate per-layer energy/latency/events + network totals.
+
+        Each layer entry names its ``circuit`` kind and the ``backend`` that
+        produced it, so mixed-graph energy breakdowns stay attributable."""
         t_steps, n_layers = self.energy.shape
+        circuits = self.circuits or ("?",) * n_layers
         layers = []
         for i in range(n_layers):
             layers.append({
                 "layer": i,
+                "circuit": circuits[i],
+                "backend": self.backend,
                 "n_circuits": int(self.n_circuits[i]),
                 "energy_j": float(self.energy[:, i].sum()
                                   + self.flush_energy[i]),
@@ -171,10 +357,17 @@ class NetworkRun:
                 "mean_tick_latency_ns": float(self.latency[:, i].mean()),
             })
         total_events = int(self.events.sum())
+        by_kind: dict = {}
+        for l in layers:
+            agg = by_kind.setdefault(l["circuit"],
+                                     {"energy_j": 0.0, "events": 0})
+            agg["energy_j"] += l["energy_j"]
+            agg["events"] += l["events"]
         return {
             "backend": self.backend,
             "mode": self.mode,
             "layers": layers,
+            "by_circuit": by_kind,
             "network": {
                 "ticks": t_steps,
                 "sim_time_ns": t_steps * self.clock_ns,
@@ -189,15 +382,16 @@ class NetworkRun:
 # --- the engine ----------------------------------------------------------------
 
 class NetworkEngine:
-    """Layered dataflow graph of circuit banks under one jitted scheduler.
+    """Heterogeneous circuit graph under one jitted event-driven scheduler.
 
     backend  "golden" | "behavioral" | "lasana"
     mode     lasana only: "standalone" (surrogate closes the loop) or
-             "annotation" (behavioral supplies spikes/state, LASANA adds
+             "annotation" (behavioral supplies outputs/state, LASANA adds
              energy/latency)
-    bank     PredictorBank — required for backend="lasana"
+    bank     backend="lasana": a PredictorBank (homogeneous graphs) or a
+             {circuit kind: PredictorBank} mapping (mixed graphs)
     mesh     optional jax Mesh: shard the batch axis over every mesh axis
-    record_hidden  keep per-layer spike trains (tests/parity); disable for
+    record_hidden  keep per-layer output traces (tests/parity); disable for
              large sweeps to save host memory
     """
 
@@ -208,65 +402,133 @@ class NetworkEngine:
             raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}: {mode}")
-        if backend == "lasana" and bank is None:
-            raise ValueError("backend='lasana' requires a PredictorBank")
+        for layer in spec.layers:
+            if layer.circuit not in CIRCUIT_KINDS:
+                raise ValueError(f"unknown circuit kind {layer.circuit!r}; "
+                                 f"registered kinds: {CIRCUIT_KINDS}")
         self.spec = spec
         self.backend = backend
         self.mode = mode if backend == "lasana" else "standalone"
-        self.bank = bank
         self.mesh = mesh
         self.record_hidden = record_hidden
-        self.circ = get_circuit(spec.circuit)
-        if isinstance(self.circ, LIFNeuron) \
-                and spec.spike_amp != self.circ.vdd:
-            # spike amplitude IS the circuit's V_dd: the wrapper's spike
-            # threshold (0.5 * 1.5) and behavioral/golden outputs are all
-            # V_dd-referenced, so other amplitudes would silently diverge
-            # across backends
-            raise ValueError(
-                f"spike_amp {spec.spike_amp} != circuit V_dd "
-                f"{self.circ.vdd}; the LIF event queues carry V_dd spikes")
+        self.circs = tuple(get_circuit(l.circuit) for l in spec.layers)
+        kinds = set(spec.circuits)
+        if backend == "lasana":
+            if bank is None:
+                raise ValueError(
+                    "backend='lasana' requires a PredictorBank (or a "
+                    "{circuit: PredictorBank} mapping for mixed graphs)")
+            if isinstance(bank, dict):
+                missing = kinds - set(bank)
+                if missing:
+                    raise ValueError("backend='lasana' is missing a "
+                                     f"PredictorBank for circuit kind(s) "
+                                     f"{sorted(missing)}")
+                self.banks = dict(bank)
+            else:
+                if len(kinds) > 1:
+                    raise ValueError(
+                        "mixed-circuit graphs need a {circuit: "
+                        "PredictorBank} mapping, got a single bank for "
+                        f"kinds {sorted(kinds)}")
+                self.banks = {next(iter(kinds)): bank}
+        else:
+            self.banks = {}
+        for i, (layer, circ) in enumerate(zip(spec.layers, self.circs)):
+            if isinstance(circ, LIFNeuron) and spec.spike_amp != circ.vdd:
+                # spike amplitude IS the circuit's V_dd: the wrapper's spike
+                # threshold (0.5 * 1.5) and behavioral/golden outputs are all
+                # V_dd-referenced, so other amplitudes would silently diverge
+                # across backends
+                raise ValueError(
+                    f"spike_amp {spec.spike_amp} != circuit V_dd "
+                    f"{circ.vdd}; the LIF event queues carry V_dd spikes")
+            if isinstance(circ, CrossbarRow) \
+                    and layer.seg_width != circ.n_inputs:
+                raise ValueError(
+                    f"layer {i}: seg_width {layer.seg_width} != crossbar "
+                    f"row n_inputs {circ.n_inputs}")
+        self._validate_edges()
+        # the network tick is one global digital clock; per-layer event
+        # features/timestamps use each circuit's native clock (see _lif_tick)
+        self.clock_ns = max(c.clock_ns for c in self.circs)
         self._sim_cache: dict = {}
+
+    def _validate_edges(self):
+        spec = self.spec
+        n = spec.n_layers
+        for e in spec.edges:
+            if not (0 <= e.src < n and 0 <= e.dst < n):
+                raise ValueError(f"edge {e.src}->{e.dst} out of range for "
+                                 f"{n} layers")
+            dst = spec.layers[e.dst]
+            want = (spec.layers[e.src].n_out,
+                    dst.n_out if dst.circuit == "lif" else dst.fan_in)
+            got = tuple(np.shape(e.weight))
+            if got != want:
+                raise ValueError(
+                    f"edge {e.src}->{e.dst} weight shape {got} != {want} "
+                    f"(src n_out, dst {'n_out' if dst.circuit == 'lif' else 'fan_in'})")
 
     # --- public entry point ---------------------------------------------------
 
     def run(self, inputs) -> NetworkRun:
-        """Spiking: inputs (T, B, n_in) spike amplitudes.
-        Crossbar: inputs (B, n_in) volts."""
-        if isinstance(self.circ, LIFNeuron):
-            return self._run_spiking(jnp.asarray(inputs, jnp.float32))
-        return self._run_crossbar(jnp.asarray(inputs, jnp.float32))
+        """inputs: (T, B, n_in) per-tick stimulus in the first layer's native
+        units (spike amplitudes for lif, DAC volts for crossbar); a 2-D
+        (B, n_in) input is promoted to one combinational wave (T=1)."""
+        x = jnp.asarray(inputs, jnp.float32)
+        if x.ndim == 2:
+            x = x[None]
+        if x.shape[-1] != self.spec.layers[0].fan_in:
+            raise ValueError(f"input width {x.shape[-1]} != layer-0 fan_in "
+                             f"{self.spec.layers[0].fan_in}")
+        return self._run(x)
 
-    # --- spiking path ---------------------------------------------------------
+    # --- per-layer state ------------------------------------------------------
+
+    def _xbar_row_params(self, i: int, b: int):
+        layer = self.spec.layers[i]
+        segs = jnp.asarray(_row_segments(layer.weight, layer.seg_width))
+        return jnp.broadcast_to(segs[None], (b, *segs.shape)
+                                ).reshape(-1, layer.seg_width + 1)
 
     def _init_carry(self, i: int, b: int):
         layer = self.spec.layers[i]
-        n = b * layer.n_out
+        circ = self.circs[i]
+        if layer.circuit == "crossbar":
+            n_rows = layer.n_circuits(b)
+            pall = self._xbar_row_params(i, b)
+            if self.backend == "golden":
+                return circ.init_state(n_rows), pall    # ((n_rows, 1), ...)
+            if self.backend == "behavioral":
+                return jnp.zeros((n_rows,), jnp.float32), pall
+            return init_state(n_rows, pall)
+        n = layer.n_circuits(b)
         params = _tile_params(layer.params, b, layer.n_out)
         if self.backend == "golden":
-            return self.circ.init_state(n), params
+            return circ.init_state(n), params
         if self.backend == "behavioral":
             return jnp.zeros((n,), jnp.float32), params
         # lasana: annotation mode keeps the behavioral voltage in .v
         return init_state(n, params)
 
-    def _layer_step(self, i: int, b: int):
-        """Returns tick(carry, s_in, t) -> (carry', spikes, e, l, events)."""
+    # --- per-layer tick functions ---------------------------------------------
+
+    def _lif_tick(self, i: int):
+        """Returns tick(carry, drive, changed, k) -> (carry', spikes (B, n),
+        e, l, events); ``drive`` is the pre-combined synaptic drive."""
         layer = self.spec.layers[i]
         amp = self.spec.spike_amp
-        circ, bank, clock = self.circ, self.bank, self.circ.clock_ns
-        w = layer.weight
-        conn = (jnp.abs(w) > 0).astype(jnp.float32)
+        circ = self.circs[i]
+        bank = self.banks.get("lif")
+        clock = circ.clock_ns
         n_out = layer.n_out
         backend, mode = self.backend, self.mode
 
-        def tick(carry, s_in, t):
-            drive = (s_in @ w) / amp                       # (B, n_out)
-            # event queue delivery: a circuit has an input event iff any
-            # presynaptic spike reaches it through a nonzero weight
-            pre = (s_in > 0.5 * amp).astype(jnp.float32)
-            incoming = (pre @ conn) > 0.5                  # (B, n_out)
-            changed = incoming.reshape(-1)
+        def tick(carry, drive, changed, k):
+            # drive is (B_local, n_out): under shard_map the batch dim is
+            # shard-local, so every shape below derives from the input
+            t = (k + 1.0) * clock
             xin = drive_to_circuit_inputs(drive).reshape(-1, 3)
 
             if backend == "golden":
@@ -298,84 +560,226 @@ class NetworkEngine:
                 spikes = jnp.where(changed, o, 0.0)
                 carry = ns
 
-            spikes = spikes.reshape(b, n_out)
-            return carry, spikes, e, l, changed
+            spikes = spikes.reshape(-1, n_out)
+            return carry, spikes, e, l, jnp.sum(changed.astype(jnp.float32))
 
         return tick
 
-    def _flush(self, carry, i: int, t_end):
-        """Charge trailing-idle static energy (merged E2 to t_end)."""
+    def _xbar_tick(self, i: int):
+        """Returns tick(carry, x_volts (B, fan_in), k) -> (carry', codes
+        (B, n_out), e, l, events).
+
+        Rows are combinational with sample-and-hold inputs: a row-segment
+        fires an input event iff any of its input lines is live (|x| > eps)
+        this tick; event-less rows hold their previous settled output."""
+        layer = self.spec.layers[i]
+        circ = self.circs[i]
+        bank = self.banks.get("crossbar")
+        seg_w, n_seg, n_out = layer.seg_width, layer.n_seg, layer.n_out
+        fan_in = layer.fan_in
+        clock = circ.clock_ns
+        gain = -circ.r_f * circ.g_unit
+        levels = 2 ** layer.adc_bits - 1
+        backend, mode = self.backend, self.mode
+
+        def tick(carry, x, k):
+            # x is (B_local, fan_in) volts: under shard_map the batch dim is
+            # shard-local, so every shape below derives from the input; row
+            # params ride in the carry so they shard with the rows
+            b_l = x.shape[0]
+            t = (k + 1.0) * clock
+            xp = jnp.pad(x, ((0, 0), (0, n_seg * seg_w - fan_in)))
+            xin = xp.reshape(b_l, n_seg, seg_w)
+            xin = jnp.broadcast_to(xin[:, None], (b_l, n_out, n_seg, seg_w)
+                                   ).reshape(-1, seg_w)
+            changed = jnp.any(jnp.abs(xin) > _XBAR_EVENT_EPS, axis=-1)
+
+            if backend == "golden":
+                state, pall = carry
+                v_prev = state[:, 0]
+                _, obs = circ.step(state, xin, pall)
+                v = jnp.where(changed, obs["output"], v_prev)
+                e = jnp.where(changed, obs["energy"], 0.0)
+                l = jnp.where(changed, obs["latency"], 0.0)
+                carry = (v[:, None], pall)
+            elif backend == "behavioral":
+                held, pall = carry
+                _, settled = circ.behavioral_step(held, xin, pall)
+                v = jnp.where(changed, settled, held)
+                e = jnp.zeros_like(v)
+                l = jnp.zeros_like(v)
+                carry = (v, pall)
+            else:
+                known = None
+                if mode == "annotation":
+                    _, known = circ.behavioral_step(carry.v, xin,
+                                                    carry.params)
+                ns, e, l, _ = lasana_step(bank, carry, changed, xin, t,
+                                          clock, known_out=known)
+                if known is not None:
+                    # behavioral value is both published output and state
+                    ns = ns._replace(v=ns.o)
+                carry = ns
+                v = ns.o
+
+            # adc_bits ADC over [-v_sat, v_sat], then digital gain comp
+            v_adc = (jnp.round((v + circ.v_sat) / (2 * circ.v_sat) * levels)
+                     / levels * 2 * circ.v_sat - circ.v_sat)
+            y = v_adc.reshape(-1, n_out, n_seg).sum(-1) / gain
+            return carry, y, e, l, jnp.sum(changed.astype(jnp.float32))
+
+        return tick
+
+    def _flush(self, carry, i: int, t_steps: int):
+        """Charge trailing-idle static energy (merged E2 to the run end).
+
+        Only stateful event-driven kinds (lif) are flushed: combinational
+        sample-and-hold crossbar rows charge nothing in the golden
+        reference while their inputs are dead, so predicting M_ES static
+        energy for their idle tail would break golden comparability."""
         if self.backend != "lasana":
             return jnp.zeros(())
+        if self.spec.layers[i].circuit == "crossbar":
+            return jnp.zeros(())
+        circ = self.circs[i]
+        bank = self.banks[self.spec.layers[i].circuit]
         lst = carry
-        tau = t_end - lst.t_last
-        n_in = self.circ.n_inputs
+        tau = t_steps * circ.clock_ns - lst.t_last
+        n_in = circ.n_inputs
         feats = jnp.concatenate(
             [jnp.zeros((lst.v.shape[0], n_in), jnp.float32),
              lst.v[:, None], tau[:, None], lst.params], axis=1)
-        e = self.bank.predict("M_ES", feats)
+        e = bank.predict("M_ES", feats)
         return jnp.sum(jnp.where(tau > 0, e, 0.0))
 
-    def _build_spiking_sim(self, b: int):
+    # --- the unified graph builder --------------------------------------------
+
+    def _build_sim(self, b: int):
         spec = self.spec
         n_layers = spec.n_layers
-        clock = self.circ.clock_ns
-        steps = [self._layer_step(i, b) for i in range(n_layers)]
+        kinds = spec.circuits
+        amp = spec.spike_amp
+        ticks = [self._lif_tick(i) if kinds[i] == "lif"
+                 else self._xbar_tick(i) for i in range(n_layers)]
         record_hidden = self.record_hidden
+        last_lif = kinds[-1] == "lif"
         sharded = self.mesh is not None
         axes = tuple(self.mesh.axis_names) if sharded else ()
 
-        def sim(spike_seq, carries):
-            t_steps = spike_seq.shape[0]
-            times = (jnp.arange(t_steps, dtype=jnp.float32) + 1.0) * clock
+        # pre-resolved connection tables (weights, connectivity masks,
+        # adapter arguments) — one entry per incoming connection per layer
+        ff_conn = []                   # lif layers: (|w| > 0) masks
+        rec = [[] for _ in range(n_layers)]
+        for i in range(n_layers):
+            w = spec.layers[i].weight
+            ff_conn.append((jnp.abs(w) > 0).astype(jnp.float32)
+                           if kinds[i] == "lif" else None)
+            for e in spec.edges_into(i):
+                we = jnp.asarray(e.weight, jnp.float32)
+                # connectivity mask feeds lif event detection only; crossbar
+                # destinations detect events from live input lines instead
+                conn = ((jnp.abs(we) > 0).astype(jnp.float32)
+                        if kinds[i] == "lif" else None)
+                rec[i].append((e.src, we, conn))
 
-            def tick(carries, xs):
-                spikes_t, t = xs
-                s = spikes_t
-                new_carries, layer_sp, es, ls, evs = [], [], [], [], []
+        def src_activation(src_idx: Optional[int]) -> str:
+            if src_idx is None:
+                return "tanh"
+            return spec.layers[src_idx].activation
+
+        def sim(input_seq, carries, prev0):
+            t_steps = input_seq.shape[0]
+            ks = jnp.arange(t_steps, dtype=jnp.float32)
+
+            def tick(state, xs):
+                carries, prev_ys = state
+                u_in, k = xs
+                cur, src_kind, src_idx = u_in, "input", None
+                new_carries, new_ys = [], []
+                es, ls, evs = [], [], []
                 for i in range(n_layers):
-                    carry, s, e, l, changed = steps[i](carries[i], s, t)
+                    layer = spec.layers[i]
+                    if kinds[i] == "lif":
+                        # combine feed-forward + delayed-edge synaptic drive
+                        u = adapt_signal(src_kind, "lif", cur, spike_amp=amp,
+                                         activation=src_activation(src_idx))
+                        drive = (u @ layer.weight) / amp
+                        pre = (jnp.abs(u) > event_threshold(src_kind, amp)
+                               ).astype(jnp.float32)
+                        incoming = (pre @ ff_conn[i]) > 0.5
+                        for src, we, conn in rec[i]:
+                            ur = adapt_signal(
+                                kinds[src], "lif", prev_ys[src],
+                                spike_amp=amp,
+                                activation=src_activation(src))
+                            drive = drive + (ur @ we) / amp
+                            pr = (jnp.abs(ur)
+                                  > event_threshold(kinds[src], amp)
+                                  ).astype(jnp.float32)
+                            incoming = incoming | ((pr @ conn) > 0.5)
+                        changed = incoming.reshape(-1)
+                        carry, y, e, l, ev = ticks[i](carries[i], drive,
+                                                      changed, k)
+                    else:
+                        circ = self.circs[i]
+                        xv = adapt_signal(src_kind, "crossbar", cur,
+                                          spike_amp=amp,
+                                          activation=src_activation(src_idx))
+                        for src, we, _ in rec[i]:
+                            xv = xv + adapt_signal(
+                                kinds[src], "crossbar", prev_ys[src],
+                                spike_amp=amp,
+                                activation=src_activation(src)) @ we
+                        xv = jnp.clip(xv, circ.input_lo, circ.input_hi)
+                        carry, y, e, l, ev = ticks[i](carries[i], xv, k)
                     new_carries.append(carry)
-                    layer_sp.append(s)
+                    new_ys.append(y)
                     es.append(jnp.sum(e))
                     ls.append(jnp.max(l))
-                    evs.append(jnp.sum(changed.astype(jnp.float32)))
-                out = (s, tuple(layer_sp) if record_hidden else (),
+                    evs.append(ev)
+                    cur, src_kind, src_idx = y, kinds[i], i
+                out = (new_ys[-1],
+                       tuple(new_ys) if record_hidden else (),
                        jnp.stack(es), jnp.stack(ls), jnp.stack(evs))
-                return new_carries, out
+                return (new_carries, new_ys), out
 
-            carries, (out_sp, hidden, e_tl, l_tl, ev_tl) = jax.lax.scan(
-                tick, list(carries), (spike_seq, times))
-            counts = jnp.sum(out_sp > 0.5 * spec.spike_amp, axis=0)
-            t_end = t_steps * clock
-            flush = jnp.stack([self._flush(carries[i], i, t_end)
+            (carries, _), (out_seq, hidden, e_tl, l_tl, ev_tl) = \
+                jax.lax.scan(tick, (list(carries), list(prev0)),
+                             (input_seq, ks))
+            if last_lif:
+                primary = jnp.sum(out_seq > 0.5 * amp, axis=0)
+            else:
+                primary = out_seq[-1]
+            flush = jnp.stack([self._flush(carries[i], i, t_steps)
                                for i in range(n_layers)])
             if sharded:        # diagnostics are the only collectives
                 e_tl = jax.lax.psum(e_tl, axes)
                 l_tl = jax.lax.pmax(l_tl, axes)
                 ev_tl = jax.lax.psum(ev_tl, axes)
                 flush = jax.lax.psum(flush, axes)
-            return counts, out_sp, hidden, e_tl, l_tl, ev_tl, flush
+            return primary, out_seq, hidden, e_tl, l_tl, ev_tl, flush
 
         if not sharded:
             return jax.jit(sim)
 
         mesh = self.mesh
         cspec = batch_spec(mesh)                     # flattened (B*n,) arrays
-        carry_specs = []
-        for i in range(spec.n_layers):
-            carry = jax.tree.map(lambda _: cspec, self._init_carry(i, b))
-            carry_specs.append(carry)
+        carry_specs = [jax.tree.map(lambda _: cspec, self._init_carry(i, b))
+                       for i in range(n_layers)]
+        bspec2 = batch_spec(mesh, ndim=2)
+        prev_specs = [bspec2 for _ in range(n_layers)]
         seq_spec = batch_spec(mesh, ndim=3, axis=1)
-        hidden_spec = tuple(seq_spec for _ in range(spec.n_layers)) \
+        hidden_spec = tuple(seq_spec for _ in range(n_layers)) \
             if self.record_hidden else ()
-        out_specs = (batch_spec(mesh, ndim=2), seq_spec, hidden_spec,
+        out_specs = (bspec2, seq_spec, hidden_spec,
                      P_REPL, P_REPL, P_REPL, P_REPL)
-        return shard_over_batch(sim, mesh, in_specs=(seq_spec, carry_specs),
-                                out_specs=out_specs)
+        return shard_over_batch(
+            sim, mesh, in_specs=(seq_spec, carry_specs, prev_specs),
+            out_specs=out_specs)
 
-    def _run_spiking(self, spike_seq) -> NetworkRun:
-        t_steps, b, _ = spike_seq.shape
+    def _run(self, x) -> NetworkRun:
+        spec = self.spec
+        t_steps, b, _ = x.shape
         if self.mesh is not None:
             n_dev = int(np.prod([self.mesh.shape[a]
                                  for a in self.mesh.axis_names]))
@@ -383,115 +787,25 @@ class NetworkEngine:
                 raise ValueError(f"batch {b} not divisible by mesh size "
                                  f"{n_dev}")
         if b not in self._sim_cache:
-            self._sim_cache[b] = self._build_spiking_sim(b)
+            self._sim_cache[b] = self._build_sim(b)
         sim = self._sim_cache[b]
-        carries = [self._init_carry(i, b) for i in range(self.spec.n_layers)]
+        carries = [self._init_carry(i, b) for i in range(spec.n_layers)]
+        prev0 = [jnp.zeros((b, l.n_out), jnp.float32) for l in spec.layers]
 
         t0 = time.time()
-        counts, out_sp, hidden, e_tl, l_tl, ev_tl, flush = \
-            jax.block_until_ready(sim(spike_seq, carries))
+        primary, out_seq, hidden, e_tl, l_tl, ev_tl, flush = \
+            jax.block_until_ready(sim(x, carries, prev0))
         wall = time.time() - t0
+        last_lif = spec.circuits[-1] == "lif"
         return NetworkRun(
             backend=self.backend, mode=self.mode,
-            outputs=np.asarray(counts),
-            out_spikes=np.asarray(out_sp),
+            outputs=np.asarray(primary),
+            out_spikes=np.asarray(out_seq) if last_lif else None,
             layer_spikes=[np.asarray(h) for h in hidden]
             if self.record_hidden else None,
             energy=np.asarray(e_tl), latency=np.asarray(l_tl),
-            events=np.asarray(ev_tl, np.int64).astype(np.float64),
+            events=np.asarray(ev_tl, np.float64),
             flush_energy=np.asarray(flush),
-            n_circuits=np.asarray([b * l.n_out for l in self.spec.layers]),
-            clock_ns=self.circ.clock_ns, wall_seconds=wall)
-
-    # --- crossbar (combinational cascade) path --------------------------------
-
-    def _build_crossbar_sim(self):
-        spec, circ, bank = self.spec, self.circ, self.bank
-        backend, mode = self.backend, self.mode
-        seg_w = spec.seg_width
-        gain = -circ.r_f * circ.g_unit
-        levels = 2 ** spec.adc_bits - 1
-        seg_params = [jnp.asarray(_row_segments(l.weight, seg_w))
-                      for l in spec.layers]
-        n_segs = [-(-l.weight.shape[0] // seg_w) for l in spec.layers]
-        sharded = self.mesh is not None
-        axes = tuple(self.mesh.axis_names) if sharded else ()
-
-        def layer_eval(i, x):
-            b, n_in = x.shape
-            n_out, n_seg = spec.layers[i].n_out, n_segs[i]
-            xp = jnp.pad(x, ((0, 0), (0, n_seg * seg_w - n_in)))
-            xin = xp.reshape(b, n_seg, seg_w)
-            xin = jnp.broadcast_to(xin[:, None], (b, n_out, n_seg, seg_w)
-                                   ).reshape(-1, seg_w)
-            pall = jnp.broadcast_to(seg_params[i][None],
-                                    (b, *seg_params[i].shape)
-                                    ).reshape(-1, seg_w + 1)
-            n_rows = xin.shape[0]
-            if backend == "golden":
-                _, obs = circ.step(jnp.zeros((n_rows, 1)), xin, pall)
-                v, e, l = obs["output"], obs["energy"], obs["latency"]
-            elif backend == "behavioral":
-                _, v = circ.behavioral_step(jnp.zeros((n_rows,)), xin, pall)
-                e = jnp.zeros((n_rows,))
-                l = jnp.zeros((n_rows,))
-            else:
-                st = init_state(n_rows, pall)
-                # rows are combinational: evaluated fresh each layer event,
-                # t == t_last + clock so no E2 catch-up fires
-                known = None
-                if mode == "annotation":
-                    _, known = circ.behavioral_step(
-                        jnp.zeros((n_rows,)), xin, pall)
-                _, e, l, v = lasana_step(bank, st, jnp.ones((n_rows,), bool),
-                                         xin, circ.clock_ns, circ.clock_ns,
-                                         known_out=known)
-                if known is not None:
-                    v = known
-            # 8-bit ADC over [-v_sat, v_sat], then digital gain compensation
-            v = (jnp.round((v + circ.v_sat) / (2 * circ.v_sat) * levels)
-                 / levels * 2 * circ.v_sat - circ.v_sat)
-            out = v.reshape(b, n_out, n_seg).sum(-1) / gain
-            return out, jnp.sum(e), jnp.max(l), n_rows
-
-        def sim(x):
-            es, ls, evs = [], [], []
-            for i in range(spec.n_layers):
-                x, e, l, n_rows = layer_eval(i, x)
-                es.append(e)
-                ls.append(l)
-                evs.append(jnp.asarray(float(n_rows)))
-                if i < spec.n_layers - 1:
-                    if spec.activation == "tanh":
-                        x = jnp.tanh(x)
-                    x = x * (-circ.input_lo)          # DAC back to volts
-            e_l, l_l, ev_l = jnp.stack(es), jnp.stack(ls), jnp.stack(evs)
-            if sharded:
-                e_l = jax.lax.psum(e_l, axes)
-                l_l = jax.lax.pmax(l_l, axes)
-                ev_l = jax.lax.psum(ev_l, axes)
-            return x, e_l, l_l, ev_l
-
-        if not sharded:
-            return jax.jit(sim)
-        bspec = batch_spec(self.mesh, ndim=2)
-        return shard_over_batch(sim, self.mesh, in_specs=(bspec,),
-                                out_specs=(bspec, P_REPL, P_REPL, P_REPL))
-
-    def _run_crossbar(self, x) -> NetworkRun:
-        if "xbar" not in self._sim_cache:
-            self._sim_cache["xbar"] = self._build_crossbar_sim()
-        sim = self._sim_cache["xbar"]
-        t0 = time.time()
-        logits, e_l, l_l, ev_l = jax.block_until_ready(sim(x))
-        wall = time.time() - t0
-        n_layers = self.spec.n_layers
-        return NetworkRun(
-            backend=self.backend, mode=self.mode,
-            outputs=np.asarray(logits), out_spikes=None, layer_spikes=None,
-            energy=np.asarray(e_l)[None],         # (1, L): one event wave
-            latency=np.asarray(l_l)[None],
-            events=np.asarray(ev_l, np.float64)[None],
-            flush_energy=np.zeros((n_layers,)),
-            n_circuits=np.asarray(ev_l, np.int64) // max(x.shape[0], 1),
-            clock_ns=self.circ.clock_ns, wall_seconds=wall)
+            n_circuits=np.asarray([l.n_circuits(b) for l in spec.layers]),
+            clock_ns=self.clock_ns, wall_seconds=wall,
+            circuits=spec.circuits)

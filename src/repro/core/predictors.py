@@ -20,6 +20,7 @@ from typing import Any, Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.circuits import get_circuit
 from repro.core.events import EventKind, EventSet
 from repro.core.models import MODEL_FAMILIES, SurrogateModel
 
@@ -95,6 +96,29 @@ class PredictorBank:
         self.results: dict[str, dict[str, FitResult]] = {}
         self.selected: dict[str, SurrogateModel] = {}
         self.scales = {k: d["scale"] for k, d in PREDICTOR_DEFS.items()}
+        try:
+            self._circuit = get_circuit(circuit_name)
+        except KeyError:
+            self._circuit = None
+
+    def augment_features(self, feats):
+        """Append the circuit's physics-informed derived interface features.
+
+        Circuits may expose ``surrogate_features(x, params)`` (see
+        circuits.py): derived columns computed purely from interface
+        signals, e.g. the crossbar row current w . x. The bank applies the
+        augmentation symmetrically at fit and predict time, so callers
+        (wrapper.py's Algorithm 1, the network engine) keep passing raw
+        (x, v, tau, params[, o_prev, o_new]) feature rows."""
+        fn = getattr(self._circuit, "surrogate_features", None)
+        if fn is None:
+            return feats
+        n_in, n_p = self._circuit.n_inputs, self._circuit.n_params
+        x = feats[:, :n_in]
+        p = feats[:, n_in + 2: n_in + 2 + n_p]
+        extra = fn(x, p)
+        xp = np if isinstance(feats, np.ndarray) else jnp
+        return xp.concatenate([feats, extra], axis=1)
 
     def fit(self, dataset, *, families: Optional[tuple[str, ...]] = None,
             verbose: bool = False) -> "PredictorBank":
@@ -104,11 +128,14 @@ class PredictorBank:
             va = dataset.val.of_kind(*d["kinds"])
             te = dataset.test.of_kind(*d["kinds"])
             chain = d.get("chain_out", False)
-            xtr = build_features(tr, prev_out=d["prev_out"], chain_out=chain)
+            xtr = self.augment_features(
+                build_features(tr, prev_out=d["prev_out"], chain_out=chain))
             ytr = build_target(tr, d["target"], d["scale"])
-            xva = build_features(va, prev_out=d["prev_out"], chain_out=chain)
+            xva = self.augment_features(
+                build_features(va, prev_out=d["prev_out"], chain_out=chain))
             yva = build_target(va, d["target"], d["scale"])
-            xte = build_features(te, prev_out=d["prev_out"], chain_out=chain)
+            xte = self.augment_features(
+                build_features(te, prev_out=d["prev_out"], chain_out=chain))
             yte = build_target(te, d["target"], d["scale"])
             self.results[pname] = {}
             for fam in families:
@@ -138,12 +165,16 @@ class PredictorBank:
     # --- inference (jit-friendly) -------------------------------------------
 
     def predict(self, pname: str, feats):
-        """JAX prediction in physical units (energy back to joules)."""
-        y = self.selected[pname].jax_predict(feats)
+        """JAX prediction in physical units (energy back to joules).
+
+        ``feats`` are the raw (x, v, tau, params[, ...]) rows; the circuit's
+        derived interface features are appended here (augment_features)."""
+        y = self.selected[pname].jax_predict(self.augment_features(feats))
         return y / self.scales[pname]
 
     def predict_np(self, pname: str, feats: np.ndarray) -> np.ndarray:
-        return self.selected[pname].predict(feats) / self.scales[pname]
+        return (self.selected[pname].predict(self.augment_features(feats))
+                / self.scales[pname])
 
     # --- reporting ------------------------------------------------------------
 

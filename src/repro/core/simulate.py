@@ -180,24 +180,27 @@ def drive_to_circuit_inputs(drive):
 
 
 def run_snn_lasana(bank, weights: list, spike_seq, params_per_layer, *,
-                   clock_ns=5.0, mode="standalone"):
+                   clock_ns=5.0, mode="standalone", edges=()):
     """Feed-forward SNN via the network engine's LASANA backend.
 
-    weights[i]: (n_in_i, n_out_i). Returns (spike counts (B, n_cls),
-    total energy incl. the end-of-run idle flush).
+    weights[i]: (n_in_i, n_out_i); ``edges`` are optional one-tick-delayed
+    recurrent connections (network.EdgeSpec / network.recurrent_edge).
+    Returns (spike counts (B, n_cls), total energy incl. the end-of-run
+    idle flush).
     """
     from repro.core.network import NetworkEngine, snn_spec
-    eng = NetworkEngine(snn_spec(weights, params_per_layer),
+    eng = NetworkEngine(snn_spec(weights, params_per_layer, edges=edges),
                         backend="lasana", bank=bank, mode=mode,
                         record_hidden=False)
     run = eng.run(spike_seq)
     return run.outputs, run.energy.sum() + run.flush_energy.sum()
 
 
-def run_snn_golden(circuit, weights: list, spike_seq, params_per_layer):
+def run_snn_golden(circuit, weights: list, spike_seq, params_per_layer, *,
+                   edges=()):
     """Same network through the golden integrator (the SPICE reference)."""
     from repro.core.network import NetworkEngine, snn_spec
-    eng = NetworkEngine(snn_spec(weights, params_per_layer),
+    eng = NetworkEngine(snn_spec(weights, params_per_layer, edges=edges),
                         backend="golden", record_hidden=False)
     run = eng.run(spike_seq)
     return run.outputs, run.energy.sum()

@@ -14,6 +14,21 @@ tests/test_wrapper.py — and the two systems optimizations fall out for free:
 
 ``lasana_step`` is pure and jit/shard_map-friendly: circuits shard over the
 flattened mesh with zero cross-circuit communication.
+
+Public API
+----------
+:class:`LasanaState` / :func:`init_state`
+    per-circuit simulator state: predicted state ``v``, last output ``o``,
+    last-update time ``t_last``, fixed ``params``
+:func:`lasana_step`
+    one digital tick of Algorithm 1 for N circuits; ``known_out=`` switches
+    annotation mode (external behavioral outputs, LASANA energy/latency)
+:func:`lasana_step_reference`
+    literal per-circuit numpy transcription, the parity oracle for tests
+
+The network-level composition of this wrapper (event queues between
+layers, mixed circuit kinds, recurrent edges) lives in core/network.py;
+see docs/architecture.md for the full dataflow.
 """
 
 from __future__ import annotations

@@ -5,6 +5,11 @@ fixed seed, standalone-vs-annotation mode consistency, and network-level
 LASANA-vs-behavioral spike-train parity within the paper tolerance (<2%
 behavioral error) on a tiny 2-layer net — plus mesh batch-parallel parity
 and report aggregation invariants.
+
+ISSUE-2 adds the heterogeneous graph coverage: crossbar->LIF mixed-circuit
+parity, recurrent-edge one-tick delay semantics, typed inter-layer adapter
+shape/dtype round-trips, edge validation, and per-layer circuit/backend
+attribution in the report.
 """
 
 import jax
@@ -13,7 +18,10 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
-from repro.core.network import (NetworkEngine, crossbar_mlp_spec, snn_spec)
+from repro.core.network import (EdgeSpec, NetworkEngine, adapt_signal,
+                                crossbar_layer, crossbar_mlp_spec,
+                                event_threshold, graph_spec, lif_layer,
+                                recurrent_edge, snn_spec)
 from repro.core.simulate import run_snn_golden, run_snn_lasana
 
 T_STEPS, BATCH = 40, 4
@@ -185,3 +193,162 @@ def test_crossbar_lasana_smoke(xbar_net, crossbar_dataset):
     # one row evaluation per segment per output per sample
     assert rep["layers"][0]["events"] == 4 * 8 * 2    # B * n_out * n_seg
     assert rep["layers"][1]["events"] == 4 * 4 * 1
+
+
+# --- heterogeneous mixed-circuit graphs (ISSUE-2) -----------------------------
+
+T_MIX, B_MIX = 25, 4
+
+
+@pytest.fixture(scope="module")
+def xbar_bank_q():
+    """Quality crossbar bank (gbdt rides the physics-informed row-current
+    feature; see circuits.CrossbarRow.surrogate_features)."""
+    from repro.core.dataset import TestbenchConfig, build_dataset
+    from repro.core.predictors import PredictorBank
+    ds = build_dataset("crossbar",
+                       TestbenchConfig(n_runs=150, n_steps=80, seed=2))
+    return PredictorBank("crossbar",
+                         families=("linear", "gbdt", "mlp")).fit(ds)
+
+
+@pytest.fixture(scope="module")
+def mixed_net():
+    """Crossbar MAC front-end -> LIF bank with a recurrent inhibition
+    self-edge, driven by time-varying ternary DAC patterns."""
+    rng = np.random.default_rng(3)
+    xw = rng.integers(-1, 2, (20, 8)).astype(np.float32)
+    lw = (rng.normal(0, 0.5, (8, 6)) * 2.2).astype(np.float32)
+    params = jnp.asarray([0.58, 0.5, 0.5, 0.5], jnp.float32)
+    inhib = -0.6 * (1 - np.eye(6, dtype=np.float32))
+    spec = graph_spec([crossbar_layer(xw), lif_layer(lw, params)],
+                      edges=[recurrent_edge(1, 1, inhib)])
+    seq = np.empty((T_MIX, B_MIX, 20), np.float32)
+    cur = rng.integers(-1, 2, (B_MIX, 20)).astype(np.float32)
+    for t in range(T_MIX):          # re-draw ~20% of the DAC lines per tick
+        flip = rng.random((B_MIX, 20)) < 0.2
+        cur = np.where(flip, rng.integers(-1, 2, (B_MIX, 20)), cur)
+        seq[t] = cur * 0.8
+    return spec, jnp.asarray(seq)
+
+
+def test_mixed_crossbar_lif_parity(net_bank, xbar_bank_q, mixed_net):
+    """Crossbar->LIF recurrent graph: all three backends run from ONE spec
+    and LASANA standalone tracks behavioral spikes within the paper's 2%."""
+    spec, seq = mixed_net
+    banks = {"lif": net_bank, "crossbar": xbar_bank_q}
+    gold = NetworkEngine(spec, backend="golden").run(seq)
+    behav = NetworkEngine(spec, backend="behavioral").run(seq)
+    las = NetworkEngine(spec, backend="lasana", bank=banks).run(seq)
+    assert np.all(np.isfinite(gold.outputs))
+    assert np.all(np.isfinite(las.outputs))
+    # crossbar codes: surrogate tracks the behavioral DC solve closely
+    code_err = np.abs(las.layer_spikes[0] - behav.layer_spikes[0])
+    assert code_err.mean() < 0.1, code_err.mean()
+    # LIF spikes: <2% mismatch across the spiking layer
+    mism = np.mean((las.layer_spikes[1] > 0.75)
+                   != (behav.layer_spikes[1] > 0.75))
+    assert mism < 0.02, f"mixed-graph spike mismatch {mism:.4f}"
+    # energy is attributed to every layer of a mixed graph
+    rep = las.report()
+    assert all(l["energy_j"] > 0 for l in rep["layers"])
+
+
+def test_mixed_annotation_reproduces_behavioral(net_bank, xbar_bank_q,
+                                                mixed_net):
+    """Annotation mode on a mixed graph: exact behavioral outputs on every
+    layer (codes AND spikes), energies filled in by LASANA."""
+    spec, seq = mixed_net
+    banks = {"lif": net_bank, "crossbar": xbar_bank_q}
+    behav = NetworkEngine(spec, backend="behavioral").run(seq)
+    annot = NetworkEngine(spec, backend="lasana", bank=banks,
+                          mode="annotation").run(seq)
+    for a, b in zip(annot.layer_spikes, behav.layer_spikes):
+        np.testing.assert_array_equal(a, b)
+    assert behav.energy.sum() == 0.0
+    assert annot.energy.sum() > 0
+
+
+def test_recurrent_edge_one_tick_delay():
+    """A strong inhibitory self-loop must act exactly one tick late: the
+    first spike is unaffected, the *next* tick is suppressed, and the
+    deterministic behavioral trace alternates spike / silence."""
+    w = jnp.asarray([[2.5]], jnp.float32)          # supra-threshold drive
+    params = jnp.asarray([0.58, 0.5, 0.5, 0.5], jnp.float32)
+    spikes = jnp.full((12, 1, 1), 1.5, jnp.float32)   # input spike every tick
+    base_spec = graph_spec([lif_layer(w, params)])
+    rec_spec = graph_spec([lif_layer(w, params)],
+                          edges=[recurrent_edge(0, 0,
+                                                jnp.asarray([[-10.0]]))])
+    base = NetworkEngine(base_spec, backend="behavioral").run(spikes)
+    rec = NetworkEngine(rec_spec, backend="behavioral").run(spikes)
+    b = (base.out_spikes[:, 0, 0] > 0.75)
+    r = (rec.out_spikes[:, 0, 0] > 0.75)
+    assert b.all()                       # without the edge: fires every tick
+    assert r[0] == b[0]                  # delayed edge can't touch tick 0
+    assert not r[1]                      # ...but suppresses tick 1
+    np.testing.assert_array_equal(r, np.arange(12) % 2 == 0)   # alternation
+
+
+def test_adapter_shape_dtype_round_trips():
+    """Every (src, dst) adapter preserves shape + float32 and lands in the
+    destination's native range."""
+    amp = 1.5
+    spikes = jnp.asarray(np.random.default_rng(0)
+                         .choice([0.0, amp], (3, 5)), jnp.float32)
+    codes = jnp.asarray(np.random.default_rng(1)
+                        .normal(0, 2.0, (3, 5)), jnp.float32)
+    for y in (spikes, codes):
+        for src, dst in (("lif", "lif"), ("lif", "crossbar"),
+                         ("crossbar", "lif"), ("crossbar", "crossbar"),
+                         ("input", "lif"), ("input", "crossbar")):
+            u = adapt_signal(src, dst, y, spike_amp=amp)
+            assert u.shape == y.shape
+            assert u.dtype == jnp.float32
+    # range contracts
+    v = adapt_signal("lif", "crossbar", spikes, spike_amp=amp)
+    assert float(jnp.abs(v).max()) <= 0.8 + 1e-6          # DAC rails
+    u = adapt_signal("crossbar", "lif", codes, spike_amp=amp)
+    assert float(jnp.abs(u).max()) <= amp + 1e-6          # rate-encoded amps
+    x = adapt_signal("crossbar", "crossbar", codes, spike_amp=amp)
+    assert float(jnp.abs(x).max()) <= 0.8 + 1e-6
+    # "none" activation passes codes through linearly (scaled only)
+    lin = adapt_signal("crossbar", "crossbar", codes, spike_amp=amp,
+                       activation="none")
+    np.testing.assert_allclose(np.asarray(lin), np.asarray(codes) * 0.8,
+                               rtol=1e-6)
+    with pytest.raises(ValueError, match="adapter"):
+        adapt_signal("lif", "spice", spikes)
+    # event discrimination: spikes at half-amplitude, analog at 5%
+    assert event_threshold("lif", amp) == pytest.approx(0.75)
+    assert event_threshold("crossbar", amp) == pytest.approx(0.075)
+
+
+def test_report_attributes_circuit_kinds(mixed_net):
+    spec, seq = mixed_net
+    run = NetworkEngine(spec, backend="behavioral").run(seq)
+    rep = run.report()
+    assert [l["circuit"] for l in rep["layers"]] == ["crossbar", "lif"]
+    assert all(l["backend"] == "behavioral" for l in rep["layers"])
+    assert set(rep["by_circuit"]) == {"crossbar", "lif"}
+    assert rep["by_circuit"]["lif"]["events"] == sum(
+        l["events"] for l in rep["layers"] if l["circuit"] == "lif")
+
+
+def test_edge_and_bank_validation(mixed_net):
+    spec, _ = mixed_net
+    # mixed graph with a single bank (not a mapping) is rejected
+    with pytest.raises(ValueError, match="mixed-circuit"):
+        NetworkEngine(spec, backend="lasana", bank=object())
+    with pytest.raises(ValueError, match="missing a.*PredictorBank"):
+        NetworkEngine(spec, backend="lasana", bank={"lif": object()})
+    # edge shape validation: lif dst wants (n_out[src], n_out[dst])
+    w = jnp.ones((4, 3), jnp.float32)
+    p = jnp.asarray([0.58, 0.5, 0.5, 0.5], jnp.float32)
+    bad = graph_spec([lif_layer(w, p)],
+                     edges=[EdgeSpec(0, 0, jnp.ones((3, 2)))])
+    with pytest.raises(ValueError, match="weight shape"):
+        NetworkEngine(bad, backend="behavioral")
+    oob = graph_spec([lif_layer(w, p)], edges=[EdgeSpec(0, 5, jnp.ones((3, 3)))])
+    with pytest.raises(ValueError, match="out of range"):
+        NetworkEngine(oob, backend="behavioral")

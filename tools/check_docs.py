@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Docs checker: execute fenced python snippets + verify intra-repo links.
+
+Scans README.md and docs/*.md for:
+
+  * fenced ```python blocks — each is executed in a subprocess with
+    PYTHONPATH=src (cwd = repo root). A block is skipped iff its info
+    string or first line contains ``no-run`` (for illustrative fragments
+    that aren't self-contained).
+  * markdown links [text](target) — http(s)/mailto/anchor links are
+    ignored; everything else must resolve to an existing file/dir
+    relative to the containing document (fragments stripped).
+
+Exit status is nonzero on any snippet failure or broken link, so the CI
+``docs`` leg fails when documentation drifts from the code.
+
+    PYTHONPATH=src python tools/check_docs.py [files...]
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FENCE_RE = re.compile(r"^```(?P<info>[^\n]*)\n(?P<body>.*?)^```\s*$",
+                      re.MULTILINE | re.DOTALL)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SNIPPET_TIMEOUT = 600
+
+
+def doc_files(argv):
+    if argv:
+        return [pathlib.Path(a) for a in argv]
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def iter_snippets(text):
+    for m in FENCE_RE.finditer(text):
+        info = m.group("info").strip().lower()
+        body = m.group("body")
+        lang = info.split()[0] if info else ""
+        if lang != "python":
+            continue
+        first = body.lstrip().splitlines()[0] if body.strip() else ""
+        if "no-run" in info or "no-run" in first:
+            continue
+        yield m.start(), body
+
+
+def run_snippet(body, label):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(body)
+        path = f.name
+    try:
+        proc = subprocess.run([sys.executable, path], cwd=ROOT, env=env,
+                              capture_output=True, text=True,
+                              timeout=SNIPPET_TIMEOUT)
+    finally:
+        os.unlink(path)
+    if proc.returncode != 0:
+        return (f"{label}: snippet failed (exit {proc.returncode})\n"
+                f"--- stderr ---\n{proc.stderr.strip()[-2000:]}")
+    return None
+
+
+def check_links(doc, text):
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        resolved = (doc.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{doc.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main(argv):
+    failures = []
+    n_snippets = 0
+    for doc in doc_files(argv):
+        text = doc.read_text()
+        failures += check_links(doc, text)
+        for pos, body in iter_snippets(text):
+            n_snippets += 1
+            line = text[:pos].count("\n") + 1
+            label = f"{doc.relative_to(ROOT)}:{line}"
+            print(f"running {label} ...", flush=True)
+            err = run_snippet(body, label)
+            if err:
+                failures.append(err)
+    if failures:
+        print("\n".join(["", "DOCS CHECK FAILED:"] + failures))
+        return 1
+    print(f"docs check OK: {n_snippets} snippets executed, links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
