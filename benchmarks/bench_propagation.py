@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import SCALE, FULL_SCALE, bank, emit, save_json
+from benchmarks.common import SCALE, FULL_SCALE, emit, save_json, surrogate
 from repro.core.simulate import make_stimulus, run_golden, run_lasana
 
 
@@ -41,7 +41,7 @@ def _metrics(golden, sim, spiking=True):
 def run(full: bool = False):
     sc = FULL_SCALE if full else SCALE
     n, t = sc["prop_neurons"], sc["prop_steps"]
-    b = bank("lif", full)
+    b = surrogate("lif", full)
     active, x, params = make_stimulus("lif", n, t, seed=42)
     golden = run_golden("lif", active, x, params)
     lasana_p = run_lasana(b, "lif", active, x, params)

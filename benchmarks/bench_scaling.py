@@ -2,7 +2,9 @@
 
 Columns mirror the paper: golden transient sim (the SPICE stand-in),
 behavioral (SV-RNM stand-in), behavioral + ML energy/latency annotation,
-standalone LASANA. Wall times exclude compilation (one warmup tick).
+standalone LASANA. Wall times exclude compilation: every runner reports
+``compile_seconds`` and ``wall_seconds`` separately (LayerRun), so no
+external warmup calls are needed.
 
 Honesty note (EXPERIMENTS §Paper-validation): our golden integrator is a
 vectorized JAX program, orders of magnitude faster than a real SPICE solve,
@@ -13,36 +15,33 @@ reproducible claim.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
-from benchmarks.common import SCALE, FULL_SCALE, bank, emit, save_json
+from benchmarks.common import SCALE, FULL_SCALE, emit, save_json, surrogate
 from repro.core.simulate import (make_stimulus, run_behavioral, run_golden,
                                  run_lasana)
 
 
-def _timed(fn, *args, **kw):
-    fn(*args, **kw)                       # warmup/compile
-    t0 = time.time()
-    out = fn(*args, **kw)
-    return out, time.time() - t0
-
-
 def run(full: bool = False):
     sc = FULL_SCALE if full else SCALE
-    b = bank("lif", full)
+    b = surrogate("lif", full)
     rows = []
     for n in sc["scaling_ns"]:
         active, x, params = make_stimulus("lif", n, sc["scaling_steps"],
                                           seed=n)
-        g, t_gold = _timed(run_golden, "lif", active, x, params)
-        bh, t_beh = _timed(run_behavioral, "lif", active, x, params)
-        lz, t_las = _timed(run_lasana, b, "lif", active, x, params)
-        # annotation mode: behavioral states drive energy/latency predictors
-        an, t_ann = _timed(run_lasana, b, "lif", active, x, params,
-                           oracle_states=bh.states)
+        g = run_golden("lif", active, x, params)
+        t_gold = g.wall_seconds
+        bh = run_behavioral("lif", active, x, params)
+        t_beh = bh.wall_seconds
+        lz = run_lasana(b, "lif", active, x, params)
+        t_las = lz.wall_seconds
+        # annotation mode: behavioral outputs AND states are supplied,
+        # LASANA only adds the energy/latency annotation
+        an = run_lasana(b, "lif", active, x, params,
+                        oracle_states=bh.states,
+                        annotate_outputs=bh.outputs)
+        t_ann = an.wall_seconds
         row = dict(n=n, golden_s=t_gold, behavioral_s=t_beh,
                    annotation_extra_s=t_ann, lasana_s=t_las,
                    speedup_vs_golden=t_gold / max(t_las, 1e-9),

@@ -1,4 +1,12 @@
-"""Shared benchmark plumbing: dataset/bank caching, CSV emission."""
+"""Shared benchmark plumbing: dataset/bank/surrogate caching, CSV emission,
+and compile-vs-steady-state timing.
+
+Timing contract: benchmark numbers NEVER include first-call jit
+compilation. Either use artifacts that already separate the two
+(``NetworkRun.compile_seconds`` / ``LayerRun.compile_seconds``) or wrap
+the measured callable in :func:`warm_timed`, which performs one explicit
+warmup call (reported as ``cold_seconds``) before timing steady state.
+"""
 
 from __future__ import annotations
 
@@ -33,6 +41,21 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
+def warm_timed(fn, *args, repeats: int = 1, **kw):
+    """Explicit-warmup timing: (last_result, cold_seconds, steady_seconds).
+
+    ``cold_seconds`` is the first call (trace + compile + execute);
+    ``steady_seconds`` is the mean of ``repeats`` subsequent calls. Use for
+    any measured callable that jit-compiles lazily on first call."""
+    t0 = time.time()
+    out = fn(*args, **kw)
+    cold = time.time() - t0
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return out, cold, (time.time() - t0) / max(repeats, 1)
+
+
 def save_json(name: str, obj):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
@@ -64,3 +87,10 @@ def bank(circuit: str, full: bool = False,
     MODEL_FAMILIES["gbdt"] = G
     MODEL_FAMILIES["mlp"] = M
     return b
+
+
+@functools.lru_cache(maxsize=None)
+def surrogate(circuit: str, full: bool = False,
+              families: tuple = ("mean", "table", "linear", "gbdt", "mlp")):
+    """The frozen deployable artifact for ``bank(...)`` (cached)."""
+    return bank(circuit, full, families).to_surrogate()

@@ -8,10 +8,9 @@ modern LM workloads; see DESIGN.md §2.3).
 
 import argparse
 
+import repro.lasana as lasana
 from repro.configs import ARCH_IDS, get_config, reduced_config
-from repro.core.dataset import TestbenchConfig, build_dataset
 from repro.core.explore import explore_arch
-from repro.core.predictors import PredictorBank
 
 
 def main():
@@ -22,14 +21,13 @@ def main():
     args = ap.parse_args()
 
     print("== training crossbar surrogates ==")
-    ds = build_dataset("crossbar", TestbenchConfig(n_runs=args.bank_runs,
-                                                   n_steps=100))
-    bank = PredictorBank("crossbar", families=("linear", "gbdt")).fit(ds)
+    surrogate = lasana.train("crossbar", lasana.TrainConfig(
+        n_runs=args.bank_runs, n_steps=100, families=("linear", "gbdt")))
 
     print("== mapping architectures onto analog CiM macros ==\n")
     get = reduced_config if args.reduced else get_config
     for arch in ARCH_IDS:
-        rep = explore_arch(get(arch), bank)
+        rep = explore_arch(get(arch), surrogate)
         print("  " + rep.summary())
 
 

@@ -3,11 +3,12 @@
 A crossbar MAC front-end feeds a spiking LIF classifier bank with lateral
 (recurrent, one-tick-delayed) inhibition — the mixed-signal composition of
 MENAGE-class accelerators (analog in-memory MACs + event-driven neuron
-banks), expressed as ONE ``NetworkSpec`` and run on all three backends:
+banks), expressed as ONE ``NetworkSpec`` and run on all three backends
+through the ``repro.lasana`` facade:
 
   golden      — full transient ODE integration of every row/neuron
   behavioral  — ideal discrete update (no energy/latency)
-  lasana      — Algorithm 1 over the per-circuit-kind PredictorBanks
+  lasana      — Algorithm 1 over a per-circuit-kind ``SurrogateLibrary``
                 ({"crossbar": ..., "lif": ...})
 
 The graph:  pixels (DAC volts, held per tick)
@@ -28,10 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dataset import TestbenchConfig, build_dataset
-from repro.core.network import (NetworkEngine, crossbar_layer, graph_spec,
-                                lif_layer, recurrent_edge)
-from repro.core.predictors import PredictorBank
+import repro.lasana as lasana
+from repro.core.network import (crossbar_layer, graph_spec, lif_layer,
+                                recurrent_edge)
 from repro.data.mnist import make_digits
 
 SIZE = 12                       # 12x12 synthetic digits -> 144 DAC lines
@@ -92,23 +92,22 @@ def main():
     seq = jnp.asarray(np.broadcast_to(x_volts, (T_STEPS, *x_volts.shape)))
 
     print("== golden (SPICE stand-in) simulation ==")
-    run_g = NetworkEngine(spec, backend="golden").run(seq)
+    run_g = lasana.simulate(spec, seq, backend="golden")
     print("== behavioral simulation ==")
-    run_b = NetworkEngine(spec, backend="behavioral").run(seq)
+    run_b = lasana.simulate(spec, seq, backend="behavioral")
 
-    print("== training per-circuit surrogate banks ==")
-    ds_l = build_dataset("lif", TestbenchConfig(n_runs=args.lif_runs,
-                                                n_steps=100))
-    ds_x = build_dataset("crossbar", TestbenchConfig(n_runs=args.xbar_runs,
-                                                     n_steps=100))
-    banks = {
-        "lif": PredictorBank("lif", families=("linear", "mlp")).fit(ds_l),
-        "crossbar": PredictorBank(
-            "crossbar", families=("linear", "gbdt", "mlp")).fit(ds_x),
-    }
+    print("== training the per-circuit-kind surrogate library ==")
+    library = lasana.SurrogateLibrary({
+        "lif": lasana.train("lif", lasana.TrainConfig(
+            n_runs=args.lif_runs, n_steps=100,
+            families=("linear", "mlp"))),
+        "crossbar": lasana.train("crossbar", lasana.TrainConfig(
+            n_runs=args.xbar_runs, n_steps=100,
+            families=("linear", "gbdt", "mlp"))),
+    })
 
-    print("== LASANA simulation (one spec, two surrogate banks) ==")
-    run_l = NetworkEngine(spec, backend="lasana", bank=banks).run(seq)
+    print("== LASANA simulation (one spec, one surrogate library) ==")
+    run_l = lasana.simulate(spec, seq, surrogates=library)
 
     accs = {name: float(np.mean(np.argmax(r.outputs, -1) == labels))
             for name, r in (("golden", run_g), ("behavioral", run_b),

@@ -17,9 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dataset import TestbenchConfig, build_dataset
-from repro.core.network import NetworkEngine, crossbar_mlp_spec
-from repro.core.predictors import PredictorBank
+import repro.lasana as lasana
+from repro.core.network import crossbar_mlp_spec
 from repro.data.mnist import make_digits
 
 LAYERS = (400, 120, 84, 10)
@@ -76,10 +75,10 @@ def main():
     n_tiles = sum((-(-w.shape[0] // 32)) * w.shape[1] for w in ws) / 32
     print(f"   {n_tiles:.0f} 32x32-crossbar equivalents")
 
-    print("== training crossbar surrogate bank ==")
-    ds = build_dataset("crossbar", TestbenchConfig(n_runs=args.bank_runs,
-                                                   n_steps=100))
-    bank = PredictorBank("crossbar", families=("linear", "gbdt", "mlp")).fit(ds)
+    print("== training crossbar surrogate artifact ==")
+    surrogate = lasana.train("crossbar", lasana.TrainConfig(
+        n_runs=args.bank_runs, n_steps=100,
+        families=("linear", "gbdt", "mlp")))
 
     x_volts = imgs * 1.6 - 0.8
 
@@ -95,12 +94,12 @@ def main():
     acc_d = float(np.mean(infer_digital() == labels))
     print(f"   digital ternary-net reference accuracy: {acc_d:.2%}")
 
-    print("== golden (SPICE stand-in) inference (network engine) ==")
-    run_g = NetworkEngine(spec, backend="golden").run(x_volts)
+    print("== golden (SPICE stand-in) inference (lasana.simulate) ==")
+    run_g = lasana.simulate(spec, x_volts, backend="golden")
     acc_g = float(np.mean(np.argmax(run_g.outputs, -1) == labels))
 
-    print("== LASANA inference (network engine) ==")
-    run_l = NetworkEngine(spec, backend="lasana", bank=bank).run(x_volts)
+    print("== LASANA inference (lasana.simulate) ==")
+    run_l = lasana.simulate(spec, x_volts, surrogates=surrogate)
     acc_l = float(np.mean(np.argmax(run_l.outputs, -1) == labels))
 
     rep_g, rep_l = run_g.report(), run_l.report()

@@ -2,31 +2,37 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. golden-simulate a randomized LIF testbench (the SPICE stand-in)
-2. extract E1/E2/E3 events, train the five surrogate predictors
+1. ``lasana.train``: golden-simulate a randomized LIF testbench (the SPICE
+   stand-in), extract E1/E2/E3 events, fit + select the five predictors,
+   and freeze them into a deployable ``Surrogate`` artifact
+2. persist the artifact (``save``/``load`` round-trip — what a serving
+   fleet would deploy)
 3. replay a fresh 1,000-neuron layer through Algorithm 1
 4. compare LASANA vs golden: spike accuracy, energy error, runtime
 """
 
 import numpy as np
 
-from repro.core.dataset import TestbenchConfig, build_dataset
-from repro.core.predictors import PredictorBank
+import repro.lasana as lasana
 from repro.core.simulate import make_stimulus, run_golden, run_lasana
 
 
 def main():
-    print("== 1/4: dataset generation (golden transient sim) ==")
-    ds = build_dataset("lif", TestbenchConfig(n_runs=300, n_steps=100))
-    print(f"   events: {ds.counts()}  ({ds.gen_seconds:.1f}s)")
+    print("== 1/4: train a surrogate (golden sim -> events -> predictors) ==")
+    surrogate = lasana.train(
+        "lif", lasana.TrainConfig(n_runs=300, n_steps=100,
+                                  families=("linear", "mlp")),
+        verbose=True)
 
-    print("== 2/4: training surrogate predictors ==")
-    bank = PredictorBank("lif", families=("linear", "mlp")).fit(ds, verbose=True)
+    print("== 2/4: persist + reload the artifact ==")
+    surrogate.save("results/quickstart_lif.npz")
+    surrogate = lasana.load("results/quickstart_lif.npz")
+    print(f"   {surrogate}")
 
     print("== 3/4: Algorithm 1 over a 1,000-neuron layer, 100 ticks ==")
     active, x, params = make_stimulus("lif", 1000, 100, seed=123)
     golden = run_golden("lif", active, x, params)
-    surro = run_lasana(bank, "lif", active, x, params)
+    surro = run_lasana(surrogate, "lif", active, x, params)
 
     print("== 4/4: LASANA vs golden ==")
     acc = float(np.mean((golden.outputs > 0.75) == (surro.outputs > 0.75)))
@@ -34,7 +40,9 @@ def main():
     print(f"   spike accuracy : {acc:.2%}")
     print(f"   total-energy err: {e_err:.2%}")
     print(f"   wall: golden {golden.wall_seconds:.2f}s vs "
-          f"LASANA {surro.wall_seconds:.2f}s")
+          f"LASANA {surro.wall_seconds:.2f}s "
+          f"(compile excluded: {golden.compile_seconds:.2f}s / "
+          f"{surro.compile_seconds:.2f}s)")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,8 @@
 """Spiking MNIST case study (paper §V-E, second half).
 
 A 784-128-10 SNN (ANN-to-SNN conversion, Poisson rate coding, 100 ticks)
-runs through the network-level event-driven engine (core/network.py) once
-per backend: golden LIF integration vs. LASANA surrogates wired by the same
+runs through the ``repro.lasana`` facade once per backend: golden LIF
+integration vs. a trained LASANA ``Surrogate`` wired by the same
 connectivity. Reported: MNIST-style accuracy of both, spike-level
 agreement, total-energy error, per-layer report, wall time.
 
@@ -15,9 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dataset import TestbenchConfig, build_dataset
-from repro.core.network import NetworkEngine, snn_spec
-from repro.core.predictors import PredictorBank
+import repro.lasana as lasana
+from repro.core.network import snn_spec
 from repro.data.mnist import make_digits, poisson_encode
 
 LAYERS = (784, 128, 10)
@@ -77,17 +76,16 @@ def main():
     params = [jnp.asarray([0.58, 0.5, 0.5, 0.5], jnp.float32) for _ in ws]
     spec = snn_spec([jnp.asarray(w) for w in ws], params)
 
-    print("== golden SNN simulation (network engine) ==")
-    run_g = NetworkEngine(spec, backend="golden").run(spikes)
+    print("== golden SNN simulation (lasana.simulate) ==")
+    run_g = lasana.simulate(spec, spikes, backend="golden")
     acc_g = float(np.mean(np.argmax(run_g.outputs, -1) == labels))
 
-    print("== training LIF surrogate bank ==")
-    ds = build_dataset("lif", TestbenchConfig(n_runs=args.bank_runs,
-                                              n_steps=100))
-    bank = PredictorBank("lif", families=("linear", "mlp")).fit(ds)
+    print("== training LIF surrogate artifact ==")
+    surrogate = lasana.train("lif", lasana.TrainConfig(
+        n_runs=args.bank_runs, n_steps=100, families=("linear", "mlp")))
 
-    print("== LASANA SNN simulation (network engine) ==")
-    run_l = NetworkEngine(spec, backend="lasana", bank=bank).run(spikes)
+    print("== LASANA SNN simulation (lasana.simulate) ==")
+    run_l = lasana.simulate(spec, spikes, surrogates=surrogate)
     acc_l = float(np.mean(np.argmax(run_l.outputs, -1) == labels))
 
     rep_g, rep_l = run_g.report(), run_l.report()

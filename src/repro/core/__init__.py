@@ -1,6 +1,67 @@
-# LASANA: event-level ML surrogate modeling of analog sub-blocks
-# (the paper's primary contribution), implemented as a composable JAX module.
+"""LASANA core: event-level ML surrogate modeling of analog sub-blocks
+(the paper's primary contribution), implemented as composable JAX modules.
 
+This package namespace is the curated public surface. The high-level
+pipeline (train -> persist -> simulate) is the ``repro.lasana`` facade,
+re-exported here; graph construction and the circuit registry come from
+the core submodules. Everything else under ``repro.core.*`` is composable
+but considered internal plumbing (import the submodule explicitly if you
+need it).
+"""
+
+# the deployable artifact (repro.lasana re-exports these as well)
+from repro.core.surrogate import Manifest, Surrogate, SurrogateLibrary
+
+# circuit registry (golden transient models, the SPICE stand-in)
 from repro.core.circuits import CIRCUITS, CrossbarRow, LIFNeuron, get_circuit
 
-__all__ = ["CIRCUITS", "CrossbarRow", "LIFNeuron", "get_circuit"]
+# graph construction + the engine behind lasana.simulate
+from repro.core.network import (EdgeSpec, LayerSpec, NetworkEngine,
+                                NetworkRun, NetworkSpec, crossbar_layer,
+                                crossbar_mlp_spec, graph_spec, lif_layer,
+                                recurrent_edge, snn_spec)
+
+# facade callables (train/engine/save/load/TrainConfig) are re-exported
+# lazily: repro.lasana itself imports repro.core.network, so a top-level
+# import here would be circular (PEP 562 keeps the surface flat). The
+# ``simulate`` entry point is deliberately NOT re-exported by name — the
+# ``repro.core.simulate`` *submodule* would shadow it; reach it as
+# ``repro.core.lasana.simulate`` or (canonically) ``repro.lasana.simulate``.
+_FACADE = ("TrainConfig", "engine", "lasana", "load", "save", "train")
+
+__all__ = [
+    # facade (repro.lasana; ``lasana`` is the module itself)
+    "Manifest",
+    "Surrogate",
+    "SurrogateLibrary",
+    "TrainConfig",
+    "engine",
+    "lasana",
+    "load",
+    "save",
+    "train",
+    # circuits
+    "CIRCUITS",
+    "CrossbarRow",
+    "LIFNeuron",
+    "get_circuit",
+    # network graphs
+    "EdgeSpec",
+    "LayerSpec",
+    "NetworkEngine",
+    "NetworkRun",
+    "NetworkSpec",
+    "crossbar_layer",
+    "crossbar_mlp_spec",
+    "graph_spec",
+    "lif_layer",
+    "recurrent_edge",
+    "snn_spec",
+]
+
+
+def __getattr__(name):
+    if name in _FACADE:
+        import repro.lasana as _lasana
+        return _lasana if name == "lasana" else getattr(_lasana, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -291,3 +291,27 @@ def get_circuit(name: str):
     if isinstance(name, str):
         return CIRCUITS[name]
     return name
+
+
+def augment_features(circuit, feats):
+    """Append ``circuit``'s derived interface features to raw feature rows.
+
+    THE single implementation of the fit/predict feature-symmetry
+    contract: ``PredictorBank`` applies it when fitting and
+    ``Surrogate.predict`` when serving, so the two can never drift apart.
+    ``circuit`` is an instance from :data:`CIRCUITS` (or None /
+    featureless, in which case ``feats`` pass through untouched); rows are
+    ``(x[:n_inputs], v, tau, params[:n_params], ...)`` and the derived
+    columns are computed from the interface slices only."""
+    import numpy as np
+    if circuit is None:
+        return feats
+    fn = getattr(circuit, "surrogate_features", None)
+    if fn is None:
+        return feats
+    n_in, n_p = circuit.n_inputs, circuit.n_params
+    x = feats[:, :n_in]
+    p = feats[:, n_in + 2: n_in + 2 + n_p]
+    extra = fn(x, p)
+    xp = np if isinstance(feats, np.ndarray) else jnp
+    return xp.concatenate([feats, extra], axis=1)

@@ -6,6 +6,11 @@ axis flattened (pod x data x model = 512 ways). ``shard_map`` makes the
 locality explicit — the per-shard body is exactly ``lasana_step`` on N/512
 circuits — and diagnostics (total energy, spike counts) are the only psums.
 
+The trained :class:`Surrogate` enters the sharded program as a *traced
+pytree argument* with replicated (``P()``) specs: one compiled step serves
+every retrained surrogate whose manifest and array shapes match, and the
+predictor weights participate in the mesh like any other arrays.
+
 This module also provides the LASANA dry-run used in EXPERIMENTS §Dry-run:
 lowering one simulation tick for 2^20..2^27 circuits on the production mesh.
 """
@@ -13,6 +18,7 @@ lowering one simulation tick for 2^20..2^27 circuits on the production mesh.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -21,6 +27,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.surrogate import Surrogate, as_surrogate
 from repro.core.wrapper import LasanaState, lasana_step
 
 
@@ -42,19 +49,25 @@ def shard_over_batch(fn, mesh: Mesh, in_specs, out_specs):
 
     ``fn`` must be batch-local except for explicit psum/pmax collectives
     (Algorithm 1 has zero cross-circuit communication, so a whole network
-    tick is batch-local; only diagnostics reduce)."""
+    tick is batch-local; only diagnostics reduce). Pytree arguments whose
+    in_spec leaves are ``P()`` — e.g. a :class:`Surrogate` — replicate
+    across the mesh while remaining traced (swap-without-recompile)."""
     return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs))
 
 
-def make_distributed_step(bank, mesh: Mesh, *, clock_ns: float,
-                          spiking: bool = False):
-    """(state, changed, x, t) -> (state, e_total, spikes_total) shard-mapped."""
+def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
+                  spiking: bool = False):
+    """jit(shard_map) of one Algorithm-1 tick; surrogate is argument 0.
+
+    ``surrogate_template`` supplies only the pytree *structure* for the
+    replicated in_specs."""
     cspec = circuit_spec(mesh)
     state_spec = LasanaState(v=cspec, o=cspec, t_last=cspec, params=cspec)
+    sur_spec = jax.tree.map(lambda _: P(), surrogate_template)
 
-    def body(state, changed, x, t):
-        new_state, e, l, o = lasana_step(bank, state, changed, x, t[0],
+    def body(surrogate, state, changed, x, t):
+        new_state, e, l, o = lasana_step(surrogate, state, changed, x, t[0],
                                          clock_ns, spiking=spiking)
         e_tot = jax.lax.psum(jnp.sum(e), tuple(mesh.axis_names))
         n_out = jax.lax.psum(jnp.sum((o > 0.75).astype(jnp.float32)),
@@ -62,9 +75,58 @@ def make_distributed_step(bank, mesh: Mesh, *, clock_ns: float,
         return new_state, e_tot, n_out
 
     sm = shard_map(body, mesh=mesh,
-                   in_specs=(state_spec, cspec, cspec, P()),
+                   in_specs=(sur_spec, state_spec, cspec, cspec, P()),
                    out_specs=(state_spec, P(), P()))
     return jax.jit(sm)
+
+
+def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
+                          spiking: bool = False):
+    """(surrogate, state, changed, x, t) -> (state, e_total, spikes_total).
+
+    Returns a callable that shard_maps one tick over ``mesh``. The
+    surrogate rides along as a traced, replicated pytree: calls with
+    retrained surrogates of identical structure reuse one compiled program
+    (the program cache is keyed on the surrogate's treedef).
+
+    Legacy call style ``make_distributed_step(bank, mesh, ...)`` (surrogate
+    closed over, returned callable takes ``(state, changed, x, t)``) is
+    still accepted, with a DeprecationWarning.
+    """
+    if _legacy_mesh is None and not isinstance(mesh, Mesh):
+        raise TypeError(
+            "make_distributed_step expects a jax.sharding.Mesh as its "
+            f"first argument, got {type(mesh).__name__}; the surrogate is "
+            "passed to the returned step, not here")
+    if _legacy_mesh is not None:
+        if not isinstance(_legacy_mesh, Mesh):
+            raise TypeError("legacy make_distributed_step(bank, mesh, ...) "
+                            "call: second argument must be a "
+                            f"jax.sharding.Mesh, got "
+                            f"{type(_legacy_mesh).__name__}")
+        warnings.warn(
+            "make_distributed_step(bank, mesh, ...) is deprecated; call "
+            "make_distributed_step(mesh, ...) and pass the Surrogate as "
+            "the step's first argument", DeprecationWarning, stacklevel=2)
+        surrogate = as_surrogate(mesh)
+        fn = _sharded_step(_legacy_mesh, surrogate, clock_ns=clock_ns,
+                           spiking=spiking)
+        return lambda state, changed, x, t: fn(surrogate, state, changed,
+                                               x, t)
+
+    cache: dict = {}
+
+    def step(surrogate, state, changed, x, t):
+        surrogate = as_surrogate(surrogate)
+        sdef = jax.tree.structure(surrogate)
+        fn = cache.get(sdef)
+        if fn is None:
+            fn = _sharded_step(mesh, surrogate, clock_ns=clock_ns,
+                               spiking=spiking)
+            cache[sdef] = fn
+        return fn(surrogate, state, changed, x, t)
+
+    return step
 
 
 def abstract_sim_inputs(n_circuits: int, n_in: int, n_params: int):
@@ -81,12 +143,16 @@ def abstract_sim_inputs(n_circuits: int, n_in: int, n_params: int):
     return state, changed, x, t
 
 
-def lower_distributed_step(bank, mesh: Mesh, n_circuits: int, n_in: int,
+def lower_distributed_step(surrogate, mesh: Mesh, n_circuits: int, n_in: int,
                            n_params: int, *, clock_ns: float,
                            spiking: bool = False):
-    """Lower one sharded simulation tick from ShapeDtypeStructs (dry-run)."""
-    step = make_distributed_step(bank, mesh, clock_ns=clock_ns,
-                                 spiking=spiking)
+    """Lower one sharded simulation tick from ShapeDtypeStructs (dry-run).
+
+    ``surrogate`` may be a Surrogate or a legacy PredictorBank; its arrays
+    stay concrete (they are the weights), the simulation inputs are
+    abstract."""
+    surrogate = as_surrogate(surrogate)
+    step = _sharded_step(mesh, surrogate, clock_ns=clock_ns, spiking=spiking)
     args = abstract_sim_inputs(n_circuits, n_in, n_params)
     with mesh:
-        return step.lower(*args)
+        return step.lower(surrogate, *args)

@@ -28,11 +28,14 @@ Algorithm 1 across the whole graph:
   * one unified ``_build_sim`` for every graph and all three backends:
       golden      — sub-step ODE integration of every circuit every tick
       behavioral  — SV-RNM ideal discrete update (no energy/latency)
-      lasana      — Algorithm 1 over trained PredictorBanks (one per circuit
+      lasana      — Algorithm 1 over trained :class:`Surrogate` artifacts
+                    (a :class:`SurrogateLibrary` with one per circuit
                     kind), in ``standalone`` mode (surrogate predicts output
                     + state + energy/latency) or ``annotation`` mode
                     (behavioral model supplies outputs, LASANA adds
-                    energy/latency);
+                    energy/latency). Surrogates enter the compiled program
+                    as traced pytree arguments: retraining or hot-swapping
+                    a surrogate never recompiles the network program;
   * ``shard_map`` batch parallelism over the device mesh via
     core/distributed.py — circuits are batch-local, so a whole network tick
     shards over the flattened mesh with only diagnostic psums;
@@ -54,14 +57,16 @@ Public API
 :class:`NetworkEngine` / :class:`NetworkRun`
     the simulator and its run record / report
 
-Usage::
+Usage (the facade ``repro.lasana`` wraps this in one documented entry
+point — ``lasana.train`` / ``lasana.simulate``)::
 
     from repro.core.network import (NetworkEngine, crossbar_layer, graph_spec,
                                     lif_layer, recurrent_edge, snn_spec)
 
     spec = snn_spec(weights, params_per_layer)        # homogeneous LIF net
     golden = NetworkEngine(spec, backend="golden").run(spike_seq)
-    lasana = NetworkEngine(spec, backend="lasana", bank=bank).run(spike_seq)
+    lasana = NetworkEngine(spec, backend="lasana",
+                           surrogates=surrogate).run(spike_seq)
     print(lasana.report()["network"])                 # energy, events/s, ...
 
     mixed = graph_spec(                               # MENAGE-style graph
@@ -69,7 +74,7 @@ Usage::
          lif_layer(readout_w, lif_params)],           # spiking readout
         edges=[recurrent_edge(1, 1, inhibit_w)])      # lateral inhibition
     run = NetworkEngine(mixed, backend="lasana",
-                        bank={"crossbar": xbank, "lif": lbank}).run(x_seq)
+                        surrogates={"crossbar": xsur, "lif": lsur}).run(x_seq)
 
 Spiking inputs are (T, B, n_in) spike amplitudes; a 2-D (B, n_in) input is
 promoted to one combinational wave (T=1, the pure-crossbar MLP case).
@@ -80,6 +85,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -89,6 +95,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.circuits import CrossbarRow, LIFNeuron, get_circuit
 from repro.core.distributed import batch_spec, shard_over_batch
+from repro.core.surrogate import Surrogate, SurrogateLibrary, as_surrogate
 from repro.core.wrapper import LasanaState, init_state, lasana_step
 
 P_REPL = P()                     # replicated diagnostics spec
@@ -182,6 +189,16 @@ class NetworkSpec:
     layers: tuple
     edges: tuple = ()
     spike_amp: float = 1.5      # V_dd spike amplitude on the event queues
+
+    # repro.lasana attaches its compiled-engine cache to the spec (so the
+    # executables die with it); that runtime state — holding unpicklable
+    # XLA executables — is not spec data and must not serialize
+    def __getstate__(self):
+        return {k: v for k, v in self.__dict__.items()
+                if not k.startswith("_lasana")}
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
 
     @property
     def n_layers(self) -> int:
@@ -332,8 +349,9 @@ class NetworkRun:
     flush_energy: np.ndarray      # (L,) end-of-run idle static energy
     n_circuits: np.ndarray        # (L,) circuits per layer (B-included)
     clock_ns: float
-    wall_seconds: float
+    wall_seconds: float           # steady-state execution only (no compile)
     circuits: tuple = ()          # (L,) per-layer circuit kind
+    compile_seconds: float = 0.0  # one-time trace+compile of this program
 
     def report(self) -> dict:
         """Aggregate per-layer energy/latency/events + network totals.
@@ -375,6 +393,7 @@ class NetworkRun:
                 "events": total_events,
                 "events_per_sec": total_events / max(self.wall_seconds, 1e-9),
                 "wall_seconds": self.wall_seconds,
+                "compile_seconds": self.compile_seconds,
             },
         }
 
@@ -388,16 +407,23 @@ class NetworkEngine:
     mode     lasana only: "standalone" (surrogate closes the loop) or
              "annotation" (behavioral supplies outputs/state, LASANA adds
              energy/latency)
-    bank     backend="lasana": a PredictorBank (homogeneous graphs) or a
-             {circuit kind: PredictorBank} mapping (mixed graphs)
+    surrogates  backend="lasana": a trained :class:`Surrogate` (homogeneous
+             graphs) or a :class:`SurrogateLibrary` / ``{circuit kind:
+             Surrogate}`` mapping (mixed graphs). Surrogates enter the
+             compiled network program as a *traced pytree argument*, so one
+             program serves every retrained surrogate with matching
+             manifest/shapes — swap at :meth:`run` time with zero
+             recompiles. May be omitted here and supplied per ``run()``.
+    bank     deprecated alias of ``surrogates``; legacy ``PredictorBank``
+             values (single or mapping) are frozen into Surrogates.
     mesh     optional jax Mesh: shard the batch axis over every mesh axis
     record_hidden  keep per-layer output traces (tests/parity); disable for
              large sweeps to save host memory
     """
 
     def __init__(self, spec: NetworkSpec, backend: str = "lasana", *,
-                 bank=None, mode: str = "standalone", mesh=None,
-                 record_hidden: bool = True):
+                 surrogates=None, bank=None, mode: str = "standalone",
+                 mesh=None, record_hidden: bool = True):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
         if mode not in MODES:
@@ -412,28 +438,20 @@ class NetworkEngine:
         self.mesh = mesh
         self.record_hidden = record_hidden
         self.circs = tuple(get_circuit(l.circuit) for l in spec.layers)
-        kinds = set(spec.circuits)
-        if backend == "lasana":
-            if bank is None:
-                raise ValueError(
-                    "backend='lasana' requires a PredictorBank (or a "
-                    "{circuit: PredictorBank} mapping for mixed graphs)")
-            if isinstance(bank, dict):
-                missing = kinds - set(bank)
-                if missing:
-                    raise ValueError("backend='lasana' is missing a "
-                                     f"PredictorBank for circuit kind(s) "
-                                     f"{sorted(missing)}")
-                self.banks = dict(bank)
-            else:
-                if len(kinds) > 1:
-                    raise ValueError(
-                        "mixed-circuit graphs need a {circuit: "
-                        "PredictorBank} mapping, got a single bank for "
-                        f"kinds {sorted(kinds)}")
-                self.banks = {next(iter(kinds)): bank}
-        else:
-            self.banks = {}
+        if bank is not None:
+            warnings.warn(
+                "NetworkEngine(bank=...) is deprecated; pass surrogates= "
+                "(repro.lasana.train / Surrogate.from_bank)",
+                DeprecationWarning, stacklevel=2)
+            if surrogates is None:
+                surrogates = bank
+        if surrogates is not None and backend != "lasana":
+            # same guard run() applies: never silently ignore a surrogate
+            raise ValueError(
+                f"backend={backend!r} does not use surrogates; pass "
+                "surrogates= only with backend='lasana'")
+        self.surrogates = (self._normalize_surrogates(surrogates)
+                           if surrogates is not None else None)
         for i, (layer, circ) in enumerate(zip(spec.layers, self.circs)):
             if isinstance(circ, LIFNeuron) and spec.spike_amp != circ.vdd:
                 # spike amplitude IS the circuit's V_dd: the wrapper's spike
@@ -453,6 +471,38 @@ class NetworkEngine:
         # features/timestamps use each circuit's native clock (see _lif_tick)
         self.clock_ns = max(c.clock_ns for c in self.circs)
         self._sim_cache: dict = {}
+        self.compile_count = 0        # distinct compiled network programs
+        self._trace_count = 0         # times a sim body was (re)traced
+
+    def _normalize_surrogates(self, src) -> SurrogateLibrary:
+        """Coerce surrogates/bank input into a validated SurrogateLibrary."""
+        kinds = set(self.spec.circuits)
+        if isinstance(src, SurrogateLibrary):
+            mapping = dict(src.items())
+        elif isinstance(src, dict):
+            mapping = dict(src)
+        else:
+            if len(kinds) > 1:
+                raise ValueError(
+                    "mixed-circuit graphs need a {circuit: Surrogate} "
+                    "library (legacy {circuit: PredictorBank} mappings are "
+                    f"converted), got a single surrogate for kinds "
+                    f"{sorted(kinds)}")
+            mapping = {next(iter(kinds)): src}
+        missing = kinds - set(mapping)
+        if missing:
+            raise ValueError(
+                "backend='lasana' is missing a Surrogate (or legacy "
+                f"PredictorBank) for circuit kind(s) {sorted(missing)}")
+        lib = {}
+        for kind in sorted(kinds):
+            s = as_surrogate(mapping[kind])
+            if s.circuit != kind:
+                raise ValueError(
+                    f"surrogate trained for circuit {s.circuit!r} bound to "
+                    f"layer kind {kind!r}")
+            lib[kind] = s
+        return SurrogateLibrary(lib)
 
     def _validate_edges(self):
         spec = self.spec
@@ -472,17 +522,22 @@ class NetworkEngine:
 
     # --- public entry point ---------------------------------------------------
 
-    def run(self, inputs) -> NetworkRun:
+    def run(self, inputs, *, surrogates=None) -> NetworkRun:
         """inputs: (T, B, n_in) per-tick stimulus in the first layer's native
         units (spike amplitudes for lif, DAC volts for crossbar); a 2-D
-        (B, n_in) input is promoted to one combinational wave (T=1)."""
+        (B, n_in) input is promoted to one combinational wave (T=1).
+
+        ``surrogates`` overrides the engine-bound library for THIS run only:
+        because surrogates are traced arguments of the compiled program,
+        swapping a retrained library with identical manifests/shapes reuses
+        the cached executable (zero recompiles)."""
         x = jnp.asarray(inputs, jnp.float32)
         if x.ndim == 2:
             x = x[None]
         if x.shape[-1] != self.spec.layers[0].fan_in:
             raise ValueError(f"input width {x.shape[-1]} != layer-0 fan_in "
                              f"{self.spec.layers[0].fan_in}")
-        return self._run(x)
+        return self._run(x, surrogates=surrogates)
 
     # --- per-layer state ------------------------------------------------------
 
@@ -515,17 +570,18 @@ class NetworkEngine:
     # --- per-layer tick functions ---------------------------------------------
 
     def _lif_tick(self, i: int):
-        """Returns tick(carry, drive, changed, k) -> (carry', spikes (B, n),
-        e, l, events); ``drive`` is the pre-combined synaptic drive."""
+        """Returns tick(carry, drive, changed, k, bank) -> (carry', spikes
+        (B, n), e, l, events); ``drive`` is the pre-combined synaptic drive
+        and ``bank`` the layer kind's (traced) Surrogate, None outside the
+        lasana backend."""
         layer = self.spec.layers[i]
         amp = self.spec.spike_amp
         circ = self.circs[i]
-        bank = self.banks.get("lif")
         clock = circ.clock_ns
         n_out = layer.n_out
         backend, mode = self.backend, self.mode
 
-        def tick(carry, drive, changed, k):
+        def tick(carry, drive, changed, k, bank):
             # drive is (B_local, n_out): under shard_map the batch dim is
             # shard-local, so every shape below derives from the input
             t = (k + 1.0) * clock
@@ -566,15 +622,14 @@ class NetworkEngine:
         return tick
 
     def _xbar_tick(self, i: int):
-        """Returns tick(carry, x_volts (B, fan_in), k) -> (carry', codes
-        (B, n_out), e, l, events).
+        """Returns tick(carry, x_volts (B, fan_in), k, bank) -> (carry',
+        codes (B, n_out), e, l, events); ``bank`` as in :meth:`_lif_tick`.
 
         Rows are combinational with sample-and-hold inputs: a row-segment
         fires an input event iff any of its input lines is live (|x| > eps)
         this tick; event-less rows hold their previous settled output."""
         layer = self.spec.layers[i]
         circ = self.circs[i]
-        bank = self.banks.get("crossbar")
         seg_w, n_seg, n_out = layer.seg_width, layer.n_seg, layer.n_out
         fan_in = layer.fan_in
         clock = circ.clock_ns
@@ -582,7 +637,7 @@ class NetworkEngine:
         levels = 2 ** layer.adc_bits - 1
         backend, mode = self.backend, self.mode
 
-        def tick(carry, x, k):
+        def tick(carry, x, k, bank):
             # x is (B_local, fan_in) volts: under shard_map the batch dim is
             # shard-local, so every shape below derives from the input; row
             # params ride in the carry so they shard with the rows
@@ -630,7 +685,7 @@ class NetworkEngine:
 
         return tick
 
-    def _flush(self, carry, i: int, t_steps: int):
+    def _flush(self, carry, i: int, t_steps: int, bank):
         """Charge trailing-idle static energy (merged E2 to the run end).
 
         Only stateful event-driven kinds (lif) are flushed: combinational
@@ -642,7 +697,6 @@ class NetworkEngine:
         if self.spec.layers[i].circuit == "crossbar":
             return jnp.zeros(())
         circ = self.circs[i]
-        bank = self.banks[self.spec.layers[i].circuit]
         lst = carry
         tau = t_steps * circ.clock_ns - lst.t_last
         n_in = circ.n_inputs
@@ -654,7 +708,11 @@ class NetworkEngine:
 
     # --- the unified graph builder --------------------------------------------
 
-    def _build_sim(self, b: int):
+    def _build_sim(self, b: int, banks: SurrogateLibrary):
+        """Build the jitted network program for batch ``b``.
+
+        ``banks`` is used only for its pytree *structure* (shard specs);
+        the returned program takes the library as a traced argument."""
         spec = self.spec
         n_layers = spec.n_layers
         kinds = spec.circuits
@@ -687,7 +745,8 @@ class NetworkEngine:
                 return "tanh"
             return spec.layers[src_idx].activation
 
-        def sim(input_seq, carries, prev0):
+        def sim(input_seq, carries, prev0, banks):
+            self._trace_count += 1
             t_steps = input_seq.shape[0]
             ks = jnp.arange(t_steps, dtype=jnp.float32)
 
@@ -719,7 +778,8 @@ class NetworkEngine:
                             incoming = incoming | ((pr @ conn) > 0.5)
                         changed = incoming.reshape(-1)
                         carry, y, e, l, ev = ticks[i](carries[i], drive,
-                                                      changed, k)
+                                                      changed, k,
+                                                      banks.get(kinds[i]))
                     else:
                         circ = self.circs[i]
                         xv = adapt_signal(src_kind, "crossbar", cur,
@@ -731,7 +791,8 @@ class NetworkEngine:
                                 spike_amp=amp,
                                 activation=src_activation(src)) @ we
                         xv = jnp.clip(xv, circ.input_lo, circ.input_hi)
-                        carry, y, e, l, ev = ticks[i](carries[i], xv, k)
+                        carry, y, e, l, ev = ticks[i](carries[i], xv, k,
+                                                      banks.get(kinds[i]))
                     new_carries.append(carry)
                     new_ys.append(y)
                     es.append(jnp.sum(e))
@@ -750,7 +811,8 @@ class NetworkEngine:
                 primary = jnp.sum(out_seq > 0.5 * amp, axis=0)
             else:
                 primary = out_seq[-1]
-            flush = jnp.stack([self._flush(carries[i], i, t_steps)
+            flush = jnp.stack([self._flush(carries[i], i, t_steps,
+                                           banks.get(kinds[i]))
                                for i in range(n_layers)])
             if sharded:        # diagnostics are the only collectives
                 e_tl = jax.lax.psum(e_tl, axes)
@@ -773,11 +835,44 @@ class NetworkEngine:
             if self.record_hidden else ()
         out_specs = (bspec2, seq_spec, hidden_spec,
                      P_REPL, P_REPL, P_REPL, P_REPL)
+        # predictor weights replicate across the mesh (batch is the only
+        # sharded axis); they still enter as traced arguments
+        bank_specs = jax.tree.map(lambda _: P_REPL, banks)
         return shard_over_batch(
-            sim, mesh, in_specs=(seq_spec, carry_specs, prev_specs),
+            sim, mesh,
+            in_specs=(seq_spec, carry_specs, prev_specs, bank_specs),
             out_specs=out_specs)
 
-    def _run(self, x) -> NetworkRun:
+    def _runtime_banks(self, surrogates) -> SurrogateLibrary:
+        if self.backend != "lasana":
+            if surrogates is not None:
+                raise ValueError(
+                    f"backend={self.backend!r} does not use surrogates; "
+                    "pass surrogates= only with backend='lasana' (or drop "
+                    "the argument to run the reference backend)")
+            return SurrogateLibrary()
+        banks = (self._normalize_surrogates(surrogates)
+                 if surrogates is not None else self.surrogates)
+        if banks is None:
+            raise ValueError(
+                "backend='lasana' requires surrogates: pass surrogates= (a "
+                "Surrogate or {circuit: Surrogate} library; legacy "
+                "PredictorBank values are converted) to NetworkEngine or "
+                "run()")
+        return banks
+
+    @staticmethod
+    def _program_key(b: int, t_steps: int, banks) -> tuple:
+        """Cache key of a compiled program: shapes + surrogate structure.
+
+        Two libraries with equal treedefs (manifests included) and equal
+        leaf shapes/dtypes share one executable — a retrained surrogate is
+        a weight swap, not a recompile."""
+        leaves, treedef = jax.tree.flatten(banks)
+        return (b, t_steps, treedef,
+                tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+    def _run(self, x, *, surrogates=None) -> NetworkRun:
         spec = self.spec
         t_steps, b, _ = x.shape
         if self.mesh is not None:
@@ -786,15 +881,26 @@ class NetworkEngine:
             if b % n_dev:
                 raise ValueError(f"batch {b} not divisible by mesh size "
                                  f"{n_dev}")
-        if b not in self._sim_cache:
-            self._sim_cache[b] = self._build_sim(b)
-        sim = self._sim_cache[b]
+        banks = self._runtime_banks(surrogates)
         carries = [self._init_carry(i, b) for i in range(spec.n_layers)]
         prev0 = [jnp.zeros((b, l.n_out), jnp.float32) for l in spec.layers]
 
+        key = self._program_key(b, t_steps, banks)
+        entry = self._sim_cache.get(key)
+        if entry is None:
+            # AOT-compile once per (shapes, surrogate structure): later runs
+            # — including runs with swapped surrogate weights — only execute
+            sim = self._build_sim(b, banks)
+            t0 = time.time()
+            compiled = sim.lower(x, carries, prev0, banks).compile()
+            entry = (compiled, time.time() - t0)
+            self._sim_cache[key] = entry
+            self.compile_count += 1
+        compiled, compile_s = entry
+
         t0 = time.time()
         primary, out_seq, hidden, e_tl, l_tl, ev_tl, flush = \
-            jax.block_until_ready(sim(x, carries, prev0))
+            jax.block_until_ready(compiled(x, carries, prev0, banks))
         wall = time.time() - t0
         last_lif = spec.circuits[-1] == "lif"
         return NetworkRun(
@@ -808,4 +914,4 @@ class NetworkEngine:
             flush_energy=np.asarray(flush),
             n_circuits=np.asarray([l.n_circuits(b) for l in spec.layers]),
             clock_ns=self.clock_ns, wall_seconds=wall,
-            circuits=spec.circuits)
+            circuits=spec.circuits, compile_seconds=compile_s)

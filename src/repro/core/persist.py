@@ -1,103 +1,80 @@
-"""Predictor-bank persistence.
+"""Deprecated predictor-bank persistence shims.
 
-A trained ``PredictorBank`` is LASANA's deployable artifact (the paper ships
-C++ inference models; we ship the selected models' arrays). Format: one
-``.npz`` per bank with a JSON manifest — loadable without retraining, e.g.
-on the serving fleet that annotates a digital simulator.
+The deployable artifact is now :class:`repro.core.surrogate.Surrogate`
+(one versioned ``.npz`` of pytree leaves + a JSON manifest) — created by
+``repro.lasana.train`` and persisted with ``Surrogate.save`` /
+``Surrogate.load``. The old per-family ``isinstance`` chain that lived
+here was replaced by the surrogate's pytree serialization.
+
+:func:`save_bank` / :func:`load_bank` remain as thin shims: saving freezes
+the bank into a surrogate first, and loading returns a :class:`Surrogate`
+(drop-in at inference time — it exposes the same ``predict`` /
+``predict_np`` surface the bank did). ``load_bank`` also still reads
+artifacts written by the PRE-facade ``save_bank`` (manifest with a
+``predictors`` key and no ``format_version``), migrating them to a
+:class:`Surrogate` in memory — re-``save`` to upgrade the file on disk.
 """
 
 from __future__ import annotations
 
-import io
 import json
-import os
+import warnings
 
 import numpy as np
 
-from repro.core.models import (GBDTModel, LinearModel, MLPModel, MeanModel,
-                               Standardizer, TableModel)
-from repro.core.predictors import PredictorBank
+from repro.core.surrogate import (FORMAT_VERSION, Manifest, Surrogate,
+                                  _feature_names, as_surrogate)
 
 
-def _dump_model(m) -> dict:
-    """-> (meta dict, arrays dict) folded together with 'arrays' keys."""
-    if isinstance(m, MeanModel):
-        return {"family": "mean", "mu": m.mu}
-    if isinstance(m, LinearModel):
-        return {"family": "linear",
-                "arrays": {"w": m.w, "mu": m.sx.mu, "sd": m.sx.sd}}
-    if isinstance(m, TableModel):
-        return {"family": "table",
-                "arrays": {"tx": m.tx, "ty": m.ty, "mu": m.sx.mu,
-                           "sd": m.sx.sd}}
-    if isinstance(m, GBDTModel):
-        return {"family": "gbdt", "base": m.base, "max_depth": m.max_depth,
-                "arrays": {"feat": m.feat, "thr": m.thr, "leaf": m.leaf,
-                           "edges": m.edges}}
-    if isinstance(m, MLPModel):
-        arrays = {}
-        for i, lyr in enumerate(m.params):
-            arrays[f"w{i}"] = np.asarray(lyr["w"])
-            arrays[f"b{i}"] = np.asarray(lyr["b"])
-        arrays.update({"x_mu": m.sx.mu, "x_sd": m.sx.sd,
-                       "y_mu": m.sy.mu, "y_sd": m.sy.sd})
-        return {"family": "mlp", "n_layers": len(m.params), "arrays": arrays}
-    raise TypeError(type(m))
+def save_bank(bank, path: str) -> None:
+    """Deprecated: freeze ``bank`` into a Surrogate and save that."""
+    warnings.warn("persist.save_bank is deprecated; use "
+                  "Surrogate.from_bank(bank).save(path) (repro.lasana)",
+                  DeprecationWarning, stacklevel=2)
+    as_surrogate(bank).save(path)
 
 
-def _load_model(meta: dict, arrays: dict):
-    fam = meta["family"]
-    if fam == "mean":
-        m = MeanModel()
-        m.mu = float(meta["mu"])
-        return m
-    if fam == "linear":
-        m = LinearModel()
-        m.w = arrays["w"]
-        m.sx = Standardizer(arrays["mu"], arrays["sd"])
-        return m
-    if fam == "table":
-        m = TableModel()
-        m.tx, m.ty = arrays["tx"], arrays["ty"]
-        m.sx = Standardizer(arrays["mu"], arrays["sd"])
-        return m
-    if fam == "gbdt":
-        m = GBDTModel(max_depth=int(meta["max_depth"]))
-        m.base = float(meta["base"])
-        m.feat, m.thr, m.leaf = arrays["feat"], arrays["thr"], arrays["leaf"]
-        m.edges = arrays["edges"]
-        return m
-    if fam == "mlp":
-        m = MLPModel()
-        m.params = [{"w": arrays[f"w{i}"], "b": arrays[f"b{i}"]}
-                    for i in range(int(meta["n_layers"]))]
-        m.sx = Standardizer(arrays["x_mu"], arrays["x_sd"])
-        m.sy = Standardizer(arrays["y_mu"], arrays["y_sd"])
-        return m
-    raise ValueError(fam)
+def _load_legacy(z, meta: dict) -> Surrogate:
+    """Migrate a pre-facade ``save_bank`` npz into a :class:`Surrogate`.
+
+    The old manifest stored per-predictor family metadata under
+    ``predictors`` and no unit scales (the old loader rebuilt them from
+    ``PREDICTOR_DEFS``, which we mirror here); scalar model state (mean
+    ``mu``, gbdt ``base``) lived in the manifest instead of the arrays.
+    ``z`` is the already-open npz file."""
+    import jax.numpy as jnp
+
+    from repro.core.predictors import PREDICTOR_DEFS
+
+    families, scales, params = [], [], {}
+    for pname, m in sorted(meta["predictors"].items()):
+        arrays = {k.split("/", 1)[1]: z[k] for k in z.files
+                  if k.startswith(pname + "/")}
+        if m["family"] == "mean":
+            arrays = {"mu": np.float32(m["mu"])}
+        elif m["family"] == "gbdt":
+            arrays["base"] = np.float32(m["base"])
+            arrays.pop("edges", None)              # training-only state
+        families.append((pname, m["family"]))
+        scales.append((pname, float(PREDICTOR_DEFS[pname]["scale"])))
+        params[pname] = {k: jnp.asarray(v) for k, v in arrays.items()}
+    manifest = Manifest(circuit=meta["circuit"],
+                        format_version=FORMAT_VERSION,
+                        families=tuple(families), scales=tuple(scales),
+                        features=_feature_names(meta["circuit"]))
+    return Surrogate(manifest=manifest, params=params)
 
 
-def save_bank(bank: PredictorBank, path: str) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    manifest = {"circuit": bank.circuit_name, "predictors": {}}
-    arrays: dict[str, np.ndarray] = {}
-    for pname, model in bank.selected.items():
-        meta = _dump_model(model)
-        arrs = meta.pop("arrays", {})
-        manifest["predictors"][pname] = meta
-        for k, v in arrs.items():
-            arrays[f"{pname}/{k}"] = np.asarray(v)
-    arrays["__manifest__"] = np.frombuffer(
-        json.dumps(manifest).encode(), dtype=np.uint8)
-    np.savez_compressed(path, **arrays)
+def load_bank(path: str) -> Surrogate:
+    """Deprecated: load the artifact at ``path`` as a :class:`Surrogate`.
 
-
-def load_bank(path: str) -> PredictorBank:
+    Reads both current-format surrogates and legacy ``save_bank`` files."""
+    warnings.warn("persist.load_bank is deprecated; use "
+                  "Surrogate.load(path) (repro.lasana)",
+                  DeprecationWarning, stacklevel=2)
     with np.load(path) as z:
-        manifest = json.loads(bytes(z["__manifest__"].tobytes()).decode())
-        bank = PredictorBank(manifest["circuit"], families=())
-        for pname, meta in manifest["predictors"].items():
-            arrays = {k.split("/", 1)[1]: z[k] for k in z.files
-                      if k.startswith(pname + "/")}
-            bank.selected[pname] = _load_model(meta, arrays)
-    return bank
+        meta = (json.loads(bytes(z["__manifest__"].tobytes()).decode())
+                if "__manifest__" in z.files else {})
+        if "predictors" in meta and "format_version" not in meta:
+            return _load_legacy(z, meta)
+    return Surrogate.load(path)

@@ -17,7 +17,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.circuits import get_circuit
@@ -106,19 +105,13 @@ class PredictorBank:
 
         Circuits may expose ``surrogate_features(x, params)`` (see
         circuits.py): derived columns computed purely from interface
-        signals, e.g. the crossbar row current w . x. The bank applies the
-        augmentation symmetrically at fit and predict time, so callers
-        (wrapper.py's Algorithm 1, the network engine) keep passing raw
-        (x, v, tau, params[, o_prev, o_new]) feature rows."""
-        fn = getattr(self._circuit, "surrogate_features", None)
-        if fn is None:
-            return feats
-        n_in, n_p = self._circuit.n_inputs, self._circuit.n_params
-        x = feats[:, :n_in]
-        p = feats[:, n_in + 2: n_in + 2 + n_p]
-        extra = fn(x, p)
-        xp = np if isinstance(feats, np.ndarray) else jnp
-        return xp.concatenate([feats, extra], axis=1)
+        signals, e.g. the crossbar row current w . x. The augmentation is
+        ONE shared implementation (``circuits.augment_features``) applied
+        here at fit time and inside ``Surrogate.predict`` at serving time,
+        so callers (wrapper.py's Algorithm 1, the network engine) keep
+        passing raw (x, v, tau, params[, o_prev, o_new]) feature rows."""
+        from repro.core.circuits import augment_features
+        return augment_features(self._circuit, feats)
 
     def fit(self, dataset, *, families: Optional[tuple[str, ...]] = None,
             verbose: bool = False) -> "PredictorBank":
@@ -162,13 +155,26 @@ class PredictorBank:
                 print(f"  {pname}: selected {best.family}")
         return self
 
-    # --- inference (jit-friendly) -------------------------------------------
+    def to_surrogate(self):
+        """Freeze the selected predictors into an immutable, pytree
+        :class:`repro.core.surrogate.Surrogate` — the deployable artifact
+        served by ``repro.lasana.simulate`` (and the only form that passes
+        through jit as a traced argument)."""
+        from repro.core.surrogate import Surrogate
+        return Surrogate.from_bank(self)
+
+    # --- inference (jit-friendly; deprecated in favor of Surrogate) ---------
 
     def predict(self, pname: str, feats):
         """JAX prediction in physical units (energy back to joules).
 
         ``feats`` are the raw (x, v, tau, params[, ...]) rows; the circuit's
-        derived interface features are appended here (augment_features)."""
+        derived interface features are appended here (augment_features).
+
+        Deprecated for serving: prefer ``to_surrogate().predict`` — the
+        surrogate computes the identical result but is swappable through a
+        compiled program without retracing (a bank is a mutable Python
+        closure; a surrogate is a traced pytree argument)."""
         y = self.selected[pname].jax_predict(self.augment_features(feats))
         return y / self.scales[pname]
 

@@ -1,22 +1,26 @@
-"""Event-driven simulation of circuit banks and spiking networks.
+"""Event-driven simulation of single circuit banks (layer-level runners).
 
 Three simulation backends over identical stimuli (the paper's comparison
-set):
+set), unified at network level by :func:`repro.lasana.simulate`:
 
   golden      — sub-step ODE integration (the SPICE stand-in; slow, exact)
   behavioral  — SV-RNM-style ideal discrete update (fast, no energy/latency)
-  lasana      — Algorithm 1 over the trained PredictorBank; standalone
+  lasana      — Algorithm 1 over a trained :class:`Surrogate`; standalone
                 surrogate or annotation mode (energy/latency on top of the
                 behavioral state), LASANA-P (predicted state feedback) or
                 LASANA-O (oracle state from golden, for Table III)
 
-All are (T, N)-vectorized and jit-compiled; the LASANA path is the one that
-shard_maps to the production mesh (core/distributed.py).
+All are (T, N)-vectorized and jit-compiled. The LASANA program takes the
+surrogate as a *traced pytree argument*, so sweeping retrained surrogates
+reuses one compiled program. Every runner reports compile and steady-state
+wall time separately (``LayerRun.compile_seconds`` / ``wall_seconds``) —
+benchmark numbers never include first-call compilation.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Optional
 
@@ -25,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.circuits import LIFNeuron, get_circuit
+from repro.core.surrogate import Surrogate, as_surrogate
 from repro.core.wrapper import LasanaState, init_state, lasana_step
 
 
@@ -36,7 +41,8 @@ class LayerRun:
     states: np.ndarray     # (T, N)
     energy: np.ndarray     # (T, N) joules
     latency: np.ndarray    # (T, N) ns (0 when no output event)
-    wall_seconds: float
+    wall_seconds: float    # steady-state execution time (compile excluded)
+    compile_seconds: float = 0.0   # trace+compile time (0 on cache hits)
 
 
 def make_stimulus(circuit, n: int, t_steps: int, *, alpha=0.8, seed=0):
@@ -60,13 +66,47 @@ def make_stimulus(circuit, n: int, t_steps: int, *, alpha=0.8, seed=0):
     return active, x, params
 
 
+def _timed_aot(jitted, *args):
+    """AOT-compile a jitted closure, then execute: (out, compile_s, wall_s).
+
+    The explicit ``lower().compile()`` warmup is what keeps compile time
+    out of every benchmark's steady-state number."""
+    t0 = time.time()
+    compiled = jitted.lower(*args).compile()
+    compile_s = time.time() - t0
+    t0 = time.time()
+    out = jax.block_until_ready(compiled(*args))
+    return out, compile_s, time.time() - t0
+
+
+def _timed_cached(jitted, *args, **static):
+    """Execute a module-level jitted fn, separating compile from steady.
+
+    If this call populated the jit cache (first time this program shape is
+    seen), the call is repeated once so the reported wall time is pure
+    steady-state execution. ``_cache_size`` is private jax API; when a jax
+    upgrade removes it we can no longer DETECT first-call compilation, so
+    we must assume it and always re-time — never silently fold compile
+    time into the steady-state number."""
+    size = getattr(jitted, "_cache_size", None)
+    n0 = size() if size else -1
+    t0 = time.time()
+    out = jax.block_until_ready(jitted(*args, **static))
+    t_first = time.time() - t0
+    if size is not None and size() == n0:     # provably a cache hit
+        return out, 0.0, t_first
+    t0 = time.time()
+    out = jax.block_until_ready(jitted(*args, **static))
+    wall = time.time() - t0
+    return out, max(t_first - wall, 0.0), wall
+
+
 # --- golden -------------------------------------------------------------------
 
 def run_golden(circuit, active, x, params) -> LayerRun:
     circuit = get_circuit(circuit)
     n = params.shape[0]
 
-    @jax.jit
     def sim(active, x, params):
         def step(state, xs):
             x_t = xs
@@ -76,14 +116,12 @@ def run_golden(circuit, active, x, params) -> LayerRun:
         _, out = jax.lax.scan(step, circuit.init_state(n), x)
         return out
 
-    t0 = time.time()
-    outputs, states, energy, latency, spiked = jax.block_until_ready(
-        sim(active, x, params))
-    wall = time.time() - t0
+    out, compile_s, wall = _timed_aot(jax.jit(sim), active, x, params)
+    outputs, states, energy, latency, spiked = out
     lat = np.where(np.asarray(spiked), np.asarray(latency), 0.0)
     return LayerRun(outputs=np.asarray(outputs), states=np.asarray(states),
                     energy=np.asarray(energy), latency=lat,
-                    wall_seconds=wall)
+                    wall_seconds=wall, compile_seconds=compile_s)
 
 
 # --- behavioral (SV-RNM stand-in) ------------------------------------------------
@@ -94,7 +132,6 @@ def run_behavioral(circuit, active, x, params) -> LayerRun:
     n = params.shape[0]
     is_lif = isinstance(circuit, LIFNeuron)
 
-    @jax.jit
     def sim(active, x, params):
         def step(v, xs):
             a, xi = xs
@@ -106,25 +143,66 @@ def run_behavioral(circuit, active, x, params) -> LayerRun:
         _, (outs, states) = jax.lax.scan(step, jnp.zeros((n,)), (active, x))
         return outs, states
 
-    t0 = time.time()
-    outs, states = jax.block_until_ready(sim(active, x, params))
-    wall = time.time() - t0
+    (outs, states), compile_s, wall = _timed_aot(jax.jit(sim),
+                                                 active, x, params)
     z = np.zeros_like(np.asarray(outs))
     return LayerRun(outputs=np.asarray(outs), states=np.asarray(states),
-                    energy=z, latency=z, wall_seconds=wall)
+                    energy=z, latency=z, wall_seconds=wall,
+                    compile_seconds=compile_s)
 
 
 # --- LASANA -----------------------------------------------------------------------
 
-def run_lasana(bank, circuit, active, x, params, *,
+@functools.partial(jax.jit,
+                   static_argnames=("clock", "spiking", "oracle", "annotate"))
+def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
+                clock, spiking, oracle, annotate):
+    """Algorithm 1 over T ticks; ``surrogate`` is a traced pytree argument.
+
+    One compiled program per (shapes, manifest, flags): sweeping retrained
+    surrogates through this entry point never recompiles."""
+    state0 = init_state(params.shape[0], params)
+
+    def step(state, xs):
+        a, xi, t, v_o, k_o = xs
+        if oracle or annotate:
+            state = state._replace(v=v_o)
+        new_state, e, l, o = lasana_step(surrogate, state, a, xi, t, clock,
+                                         spiking=spiking,
+                                         known_out=k_o if annotate else None)
+        if annotate:
+            # the behavioral model owns outputs AND state; LASANA only
+            # annotates energy/latency (cf. the network engine's _lif_tick)
+            new_state = new_state._replace(o=k_o)
+            o = k_o
+        return new_state, (o, new_state.v, e, l)
+
+    _, out = jax.lax.scan(step, state0,
+                          (active, x, times, v_oracle, known_out))
+    return out
+
+
+def run_lasana(surrogate, circuit, active, x, params, *,
                oracle_states: Optional[np.ndarray] = None,
                annotate_outputs: Optional[np.ndarray] = None) -> LayerRun:
     """Algorithm 1 over T ticks.
 
+    surrogate        — a trained :class:`Surrogate` (legacy ``PredictorBank``
+                       values are frozen with ``Surrogate.from_bank``)
     oracle_states    — LASANA-O (Table III): feed golden state as v' each tick
-    annotate_outputs — annotation mode: behavioral model supplies outputs &
-                       states, LASANA only adds energy/latency estimates
+    annotate_outputs — annotation mode: a behavioral model supplies outputs,
+                       LASANA adds energy/latency estimates. The matching
+                       behavioral states MUST be passed via
+                       ``oracle_states`` (annotation has no staleness to
+                       predict; running it at v=0 would silently corrupt
+                       the energy/latency features, so that is an error).
     """
+    if annotate_outputs is not None and oracle_states is None:
+        raise ValueError(
+            "annotate_outputs requires the behavioral states as "
+            "oracle_states= (annotation mode predicts energy/latency at "
+            "the externally supplied state, not at v=0)")
+    surrogate = as_surrogate(surrogate)
     circuit = get_circuit(circuit)
     n = params.shape[0]
     spiking = isinstance(circuit, LIFNeuron)
@@ -132,46 +210,33 @@ def run_lasana(bank, circuit, active, x, params, *,
     t_steps = active.shape[0]
     times = (jnp.arange(t_steps, dtype=jnp.float32) + 1.0) * clock
 
-    oracle = None
-    if oracle_states is not None:
+    oracle = oracle_states is not None
+    annotate = annotate_outputs is not None
+    if oracle:
         # state BEFORE tick t = golden state at boundary t (prepend 0)
-        oracle = jnp.asarray(
+        v_oracle = jnp.asarray(
             np.concatenate([np.zeros((1, n), np.float32),
                             oracle_states[:-1]], axis=0))
+    else:
+        v_oracle = jnp.zeros((t_steps, n), jnp.float32)
+    known = (jnp.asarray(annotate_outputs, jnp.float32) if annotate
+             else jnp.zeros((t_steps, n), jnp.float32))
 
-    @jax.jit
-    def sim(active, x, params, oracle):
-        state0 = init_state(n, params)
-
-        def step(state, xs):
-            if oracle is None:
-                a, xi, t = xs
-            else:
-                a, xi, t, v_oracle = xs
-                state = state._replace(v=v_oracle)
-            new_state, e, l, o = lasana_step(bank, state, a, xi, t, clock,
-                                             spiking=spiking)
-            return new_state, (o, new_state.v, e, l)
-
-        xs = (active, x, times) if oracle is None else (active, x, times, oracle)
-        _, out = jax.lax.scan(step, state0, xs)
-        return out
-
-    t0 = time.time()
-    outs, states, energy, latency = jax.block_until_ready(
-        sim(active, x, params, oracle))
-    wall = time.time() - t0
+    out, compile_s, wall = _timed_cached(
+        _lasana_sim, surrogate, active, x, params, times, v_oracle, known,
+        clock=clock, spiking=spiking, oracle=oracle, annotate=annotate)
+    outs, states, energy, latency = out
     return LayerRun(outputs=np.asarray(outs), states=np.asarray(states),
                     energy=np.asarray(energy), latency=np.asarray(latency),
-                    wall_seconds=wall)
+                    wall_seconds=wall, compile_seconds=compile_s)
 
 
-# --- SNN network (compat wrappers over core/network.py) -----------------------
+# --- SNN network (deprecation shims over the repro.lasana facade) -------------
 #
 # The hand-rolled per-layer loops that used to live here moved into the
-# network-level event-driven engine (core/network.py); these wrappers keep
-# the historical (counts, total_energy) signature for callers that don't
-# need the full NetworkRun report.
+# network-level engine (core/network.py), now fronted by repro.lasana.
+# These wrappers keep the historical (counts, total_energy) signature for
+# callers that don't need the full NetworkRun report.
 
 def drive_to_circuit_inputs(drive):
     """Aggregate synaptic drive -> (w, x, n) circuit inputs (see DESIGN.md)."""
@@ -179,28 +244,42 @@ def drive_to_circuit_inputs(drive):
     return _impl(drive)
 
 
-def run_snn_lasana(bank, weights: list, spike_seq, params_per_layer, *,
+def run_snn_lasana(surrogate, weights: list, spike_seq, params_per_layer, *,
                    clock_ns=5.0, mode="standalone", edges=()):
-    """Feed-forward SNN via the network engine's LASANA backend.
+    """Deprecated shim: feed-forward SNN via ``repro.lasana.simulate``.
 
     weights[i]: (n_in_i, n_out_i); ``edges`` are optional one-tick-delayed
     recurrent connections (network.EdgeSpec / network.recurrent_edge).
     Returns (spike counts (B, n_cls), total energy incl. the end-of-run
-    idle flush).
+    idle flush). Prefer ``repro.lasana.simulate`` for new code.
     """
-    from repro.core.network import NetworkEngine, snn_spec
-    eng = NetworkEngine(snn_spec(weights, params_per_layer, edges=edges),
-                        backend="lasana", bank=bank, mode=mode,
-                        record_hidden=False)
-    run = eng.run(spike_seq)
+    import warnings
+
+    import repro.lasana as lasana
+    from repro.core.network import snn_spec
+    warnings.warn("run_snn_lasana is deprecated; use repro.lasana."
+                  "simulate(snn_spec(...), x, surrogates=...)",
+                  DeprecationWarning, stacklevel=2)
+    spec = snn_spec(weights, params_per_layer, edges=edges)
+    run = lasana.simulate(spec, spike_seq, backend="lasana", mode=mode,
+                          surrogates=as_surrogate(surrogate),
+                          record_hidden=False)
     return run.outputs, run.energy.sum() + run.flush_energy.sum()
 
 
 def run_snn_golden(circuit, weights: list, spike_seq, params_per_layer, *,
                    edges=()):
-    """Same network through the golden integrator (the SPICE reference)."""
-    from repro.core.network import NetworkEngine, snn_spec
-    eng = NetworkEngine(snn_spec(weights, params_per_layer, edges=edges),
-                        backend="golden", record_hidden=False)
-    run = eng.run(spike_seq)
+    """Deprecated shim: same network through the golden integrator.
+
+    Prefer ``repro.lasana.simulate(spec, x, backend="golden")``."""
+    import warnings
+
+    import repro.lasana as lasana
+    from repro.core.network import snn_spec
+    warnings.warn("run_snn_golden is deprecated; use repro.lasana."
+                  "simulate(snn_spec(...), x, backend='golden')",
+                  DeprecationWarning, stacklevel=2)
+    spec = snn_spec(weights, params_per_layer, edges=edges)
+    run = lasana.simulate(spec, spike_seq, backend="golden",
+                          record_hidden=False)
     return run.outputs, run.energy.sum()

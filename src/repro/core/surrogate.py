@@ -1,0 +1,418 @@
+"""The deployable LASANA artifact: an immutable pytree of predictor arrays.
+
+A :class:`Surrogate` is what the facade (``repro.lasana``) trains, persists,
+and serves. It replaces the mutable :class:`~repro.core.predictors.
+PredictorBank` at inference time: the five selected predictors are frozen
+into flat arrays (one dict per predictor) plus a *static* :class:`Manifest`
+(circuit kind, feature schema, per-predictor model family, unit scales,
+format version). Because the arrays are pytree leaves and the manifest is
+pytree aux data, a surrogate passes straight through ``jax.jit`` /
+``shard_map`` **as a traced argument**:
+
+  * one compiled simulation program serves any retrained surrogate whose
+    manifest and array shapes match — swapping banks is a weight swap, not
+    a recompile (see tests/test_facade.py);
+  * predictor weights shard/donate like any other pytree of arrays.
+
+Pytree layout (what ``jax.tree.leaves`` sees)::
+
+    Surrogate
+    ├─ aux:    Manifest(circuit, format_version, families, scales, features)
+    └─ leaves: params["M_O"]["w0"], params["M_O"]["b0"], ...   # per family
+               params["M_V"][...], params["M_ED"][...], ...
+
+Per-family array schemas (mirrors ``models.SurrogateModel`` inference):
+
+    mean    mu ()                       constant
+    linear  w (F+1,), mu (F,), sd (F,)  standardized affine
+    table   tx (R,F), ty (R,), mu, sd   1-nearest-neighbor
+    gbdt    feat (T,N), thr (T,N), leaf (T,L), base ()   complete trees
+    mlp     w0,b0,...  x_mu,x_sd (F,), y_mu,y_sd (1,)    MLP(100, 50)
+
+Persistence is one ``.npz`` per surrogate: arrays keyed ``{pname}/{key}``
+plus a JSON ``__manifest__`` carrying :data:`FORMAT_VERSION`; loading a
+file with a different version raises (no silent misinterpretation of
+arrays). :class:`SurrogateLibrary` maps circuit kinds to surrogates for
+heterogeneous graphs and is itself a pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.circuits import get_circuit
+
+FORMAT_VERSION = 1
+
+
+# --- static manifest ------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Manifest:
+    """Static (hashable) description of a :class:`Surrogate`.
+
+    This is the pytree *aux data*: two surrogates with equal manifests and
+    equal leaf shapes share one compiled program. Fields:
+
+    circuit         registered circuit kind the predictors were trained for
+    format_version  on-disk format tag (see :data:`FORMAT_VERSION`)
+    families        ((predictor, model family), ...) sorted by predictor
+    scales          ((predictor, training-unit scale), ...); predictions are
+                    divided by the scale back into physical units (energies
+                    are trained in femtojoules for conditioning)
+    features        names of the raw feature columns every predictor sees
+                    ("x0..", "v", "tau", "p0.."); transition-aware heads
+                    append o_prev/o_new, and the circuit's derived
+                    ``surrogate_features`` columns are appended at predict
+                    time (identically to fit time)
+    """
+
+    circuit: str
+    format_version: int
+    families: tuple
+    scales: tuple
+    features: tuple
+
+    def family_of(self, pname: str) -> str:
+        """Model family serving predictor ``pname``."""
+        return dict(self.families)[pname]
+
+    def scale_of(self, pname: str) -> float:
+        """Training-unit scale of predictor ``pname`` (1.0 = physical)."""
+        return dict(self.scales)[pname]
+
+    @property
+    def predictors(self) -> tuple:
+        """Predictor names carried by this surrogate, sorted."""
+        return tuple(p for p, _ in self.families)
+
+
+def _feature_names(circuit_name: str) -> tuple:
+    try:
+        circ = get_circuit(circuit_name)
+    except KeyError:
+        return ()
+    return (tuple(f"x{i}" for i in range(circ.n_inputs)) + ("v", "tau")
+            + tuple(f"p{i}" for i in range(circ.n_params)))
+
+
+# --- per-family inference (pure functions of (arrays, features)) ---------------
+
+def _predict_mean(a, x):
+    return jnp.broadcast_to(jnp.asarray(a["mu"], jnp.float32).reshape(()),
+                            (x.shape[0],))
+
+
+def _predict_linear(a, x):
+    xs = (x - a["mu"]) / a["sd"]
+    return xs @ a["w"][:-1] + a["w"][-1]
+
+
+def _predict_table(a, x):
+    xs = (x - a["mu"]) / a["sd"]
+    tx = a["tx"]
+    d = jnp.sum(jnp.square(tx), -1)[None, :] - 2.0 * (xs @ tx.T)
+    return a["ty"][jnp.argmin(d, axis=1)]
+
+
+def _predict_gbdt(a, x):
+    feat, thr, leaf = a["feat"], a["thr"], a["leaf"]
+    max_depth = int(np.log2(feat.shape[1] + 1))        # nodes = 2^d - 1
+    n_t = feat.shape[0]
+    tree_ix = jnp.arange(n_t)[None, :]
+    node = jnp.zeros((x.shape[0], n_t), jnp.int32)
+    for _ in range(max_depth):
+        nf = feat[tree_ix, node]
+        th = thr[tree_ix, node]
+        xv = jnp.take_along_axis(x, nf, axis=1)
+        node = 2 * node + 1 + (xv > th).astype(jnp.int32)
+    leaf_idx = node - (2 ** max_depth - 1)
+    return a["base"] + jnp.sum(leaf[tree_ix, leaf_idx], axis=-1)
+
+
+def _predict_mlp(a, x):
+    h = (x - a["x_mu"]) / a["x_sd"]
+    n_layers = sum(1 for k in a if k.startswith("w"))
+    for i in range(n_layers):
+        h = h @ a[f"w{i}"] + a[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0] * a["y_sd"][0] + a["y_mu"][0]
+
+
+FAMILY_PREDICT = {
+    "mean": _predict_mean,
+    "linear": _predict_linear,
+    "table": _predict_table,
+    "gbdt": _predict_gbdt,
+    "mlp": _predict_mlp,
+}
+
+
+def _model_arrays(model) -> tuple:
+    """Freeze a fitted ``models.SurrogateModel`` -> (family, arrays dict).
+
+    Only inference state is kept (e.g. the GBDT's training-time bin edges
+    are dropped); every entry is an array so the whole predictor is pytree
+    leaves."""
+    from repro.core.models import (GBDTModel, LinearModel, MLPModel,
+                                   MeanModel, TableModel)
+    if isinstance(model, MeanModel):
+        return "mean", {"mu": np.float32(model.mu)}
+    if isinstance(model, LinearModel):
+        return "linear", {"w": model.w, "mu": model.sx.mu, "sd": model.sx.sd}
+    if isinstance(model, TableModel):
+        return "table", {"tx": model.tx, "ty": model.ty,
+                         "mu": model.sx.mu, "sd": model.sx.sd}
+    if isinstance(model, GBDTModel):
+        return "gbdt", {"feat": model.feat, "thr": model.thr,
+                        "leaf": model.leaf, "base": np.float32(model.base)}
+    if isinstance(model, MLPModel):
+        arrays = {}
+        for i, lyr in enumerate(model.params):
+            arrays[f"w{i}"] = np.asarray(lyr["w"])
+            arrays[f"b{i}"] = np.asarray(lyr["b"])
+        arrays.update({"x_mu": model.sx.mu, "x_sd": model.sx.sd,
+                       "y_mu": model.sy.mu, "y_sd": model.sy.sd})
+        return "mlp", arrays
+    raise TypeError(f"cannot freeze {type(model).__name__} into a Surrogate")
+
+
+def _augment(circuit_name: str, feats):
+    """Append the circuit's derived interface features — the SAME
+    ``circuits.augment_features`` call ``PredictorBank`` applies at fit
+    time, so fit and serving can never drift apart."""
+    from repro.core.circuits import augment_features
+    try:
+        circ = get_circuit(circuit_name)
+    except KeyError:
+        circ = None
+    return augment_features(circ, feats)
+
+
+# --- the artifact ---------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False, repr=False)
+class Surrogate:
+    """Immutable inference artifact: selected-predictor arrays + manifest.
+
+    Treat instances as frozen — mutating ``params`` in place invalidates
+    jit caches keyed on leaf identity. Build one with
+    :meth:`from_bank` (or ``repro.lasana.train``), persist with
+    :meth:`save` / :meth:`load`, and pass it *as an argument* through
+    jitted simulation entry points (``lasana.simulate``,
+    ``wrapper.lasana_step``, ``distributed.make_distributed_step``).
+
+    ``fit_info`` carries optional training metrics (per-predictor val/test
+    MSE); it is not a pytree leaf and not part of the compiled-program
+    cache key, but it is persisted in the manifest JSON.
+    """
+
+    manifest: Manifest
+    params: dict
+    fit_info: Optional[dict] = None
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        """Leaves: the predictor arrays dict. Aux: the static manifest."""
+        return (self.params,), self.manifest
+
+    @classmethod
+    def tree_unflatten(cls, manifest, children):
+        """Rebuild from (manifest, (params,)); fit_info does not survive."""
+        return cls(manifest=manifest, params=children[0])
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_bank(cls, bank) -> "Surrogate":
+        """Freeze a fitted ``PredictorBank``'s selected models.
+
+        Array shapes (and thus the compiled-program cache key) depend only
+        on the selected family and its fitted dimensions, not on the
+        training data."""
+        families, scales, params = [], [], {}
+        for pname in sorted(bank.selected):
+            fam, arrays = _model_arrays(bank.selected[pname])
+            families.append((pname, fam))
+            scales.append((pname, float(bank.scales[pname])))
+            params[pname] = {k: jnp.asarray(v) for k, v in arrays.items()}
+        fit_info = None
+        if bank.results:
+            fit_info = {
+                p: {f: {"val_mse": r.val_mse, "test_mse": r.test_mse,
+                        "test_mape": r.test_mape}
+                    for f, r in fams.items()}
+                for p, fams in bank.results.items()}
+        manifest = Manifest(
+            circuit=bank.circuit_name, format_version=FORMAT_VERSION,
+            families=tuple(families), scales=tuple(scales),
+            features=_feature_names(bank.circuit_name))
+        return cls(manifest=manifest, params=params, fit_info=fit_info)
+
+    # -- inference ----------------------------------------------------------
+    @property
+    def circuit(self) -> str:
+        """Registered circuit kind this surrogate was trained for."""
+        return self.manifest.circuit
+
+    def predict(self, pname: str, feats):
+        """JAX prediction in physical units (energies back to joules).
+
+        ``feats`` are raw ``(x, v, tau, params[, o_prev, o_new])`` rows;
+        the circuit's derived interface features are appended here. Pure in
+        the pytree leaves — traceable with ``self`` as a jit argument."""
+        feats = _augment(self.manifest.circuit, jnp.asarray(feats))
+        y = FAMILY_PREDICT[self.manifest.family_of(pname)](
+            self.params[pname], feats)
+        return y / self.manifest.scale_of(pname)
+
+    def predict_np(self, pname: str, feats) -> np.ndarray:
+        """Host-side convenience wrapper around :meth:`predict`."""
+        return np.asarray(self.predict(pname, np.asarray(feats)))
+
+    def __repr__(self):
+        fams = ", ".join(f"{p}:{f}" for p, f in self.manifest.families)
+        return f"Surrogate({self.manifest.circuit!r}, {fams})"
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Write one versioned ``.npz``: arrays + JSON ``__manifest__``."""
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        arrays = {f"{p}/{k}": np.asarray(v)
+                  for p, d in self.params.items() for k, v in d.items()}
+        manifest = {
+            "format_version": self.manifest.format_version,
+            "circuit": self.manifest.circuit,
+            "families": dict(self.manifest.families),
+            "scales": dict(self.manifest.scales),
+            "features": list(self.manifest.features),
+            "fit_info": self.fit_info,
+        }
+        arrays["__manifest__"] = np.frombuffer(
+            json.dumps(manifest).encode(), dtype=np.uint8)
+        np.savez_compressed(path, **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "Surrogate":
+        """Load a surrogate saved by :meth:`save`.
+
+        Raises ``ValueError`` if the file's format version differs from
+        :data:`FORMAT_VERSION` — array schemas are version-specific, so a
+        mismatched file must be regenerated, never reinterpreted."""
+        with np.load(path) as z:
+            if "__manifest__" not in z.files:
+                raise ValueError(f"{path}: not a Surrogate artifact "
+                                 "(missing __manifest__)")
+            meta = json.loads(bytes(z["__manifest__"].tobytes()).decode())
+            version = meta.get("format_version")
+            if version != FORMAT_VERSION:
+                raise ValueError(
+                    f"{path}: surrogate format version {version!r} is not "
+                    f"supported (this build reads version {FORMAT_VERSION}); "
+                    "regenerate the artifact with Surrogate.save")
+            params = {}
+            for pname in meta["families"]:
+                params[pname] = {
+                    k.split("/", 1)[1]: jnp.asarray(z[k]) for k in z.files
+                    if k.startswith(pname + "/")}
+        manifest = Manifest(
+            circuit=meta["circuit"], format_version=version,
+            families=tuple(sorted(meta["families"].items())),
+            scales=tuple(sorted(meta["scales"].items())),
+            features=tuple(meta.get("features", ())))
+        return cls(manifest=manifest, params=params,
+                   fit_info=meta.get("fit_info"))
+
+
+def as_surrogate(obj) -> Surrogate:
+    """Coerce a legacy ``PredictorBank`` (or pass through a Surrogate)."""
+    if isinstance(obj, Surrogate):
+        return obj
+    from repro.core.predictors import PredictorBank
+    if isinstance(obj, PredictorBank):
+        return Surrogate.from_bank(obj)
+    raise ValueError(
+        f"cannot use {type(obj).__name__!r} as a surrogate; pass a "
+        "repro.lasana.Surrogate (or a legacy fitted PredictorBank)")
+
+
+# --- per-circuit-kind library ---------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class SurrogateLibrary:
+    """Circuit kind -> :class:`Surrogate` mapping for heterogeneous graphs.
+
+    Itself a pytree (kinds are aux data, surrogates are subtrees), so a
+    whole library passes through jitted simulation programs as one traced
+    argument — mixed crossbar/LIF graphs stop sharing a single ``bank=``.
+    """
+
+    def __init__(self, surrogates=()):
+        self._by_kind = dict(surrogates)
+        for kind, s in self._by_kind.items():
+            if isinstance(s, Surrogate) and s.circuit != kind:
+                raise ValueError(
+                    f"surrogate trained for circuit {s.circuit!r} registered "
+                    f"under kind {kind!r}")
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        """Leaves: the surrogates (sorted by kind). Aux: the kind names."""
+        kinds = tuple(sorted(self._by_kind))
+        return tuple(self._by_kind[k] for k in kinds), kinds
+
+    @classmethod
+    def tree_unflatten(cls, kinds, surrogates):
+        """Rebuild the mapping from sorted kinds + surrogate subtrees."""
+        lib = cls.__new__(cls)          # skip kind validation on tracers
+        lib._by_kind = dict(zip(kinds, surrogates))
+        return lib
+
+    # -- mapping surface ----------------------------------------------------
+    def __getitem__(self, kind: str) -> Surrogate:
+        return self._by_kind[kind]
+
+    def get(self, kind: str, default=None):
+        """Surrogate registered for ``kind``, or ``default``."""
+        return self._by_kind.get(kind, default)
+
+    def __contains__(self, kind: str) -> bool:
+        return kind in self._by_kind
+
+    def __len__(self) -> int:
+        return len(self._by_kind)
+
+    def kinds(self) -> tuple:
+        """Registered circuit kinds, sorted."""
+        return tuple(sorted(self._by_kind))
+
+    def items(self):
+        """(kind, surrogate) pairs, sorted by kind."""
+        return tuple((k, self._by_kind[k]) for k in sorted(self._by_kind))
+
+    def __repr__(self):
+        return f"SurrogateLibrary({', '.join(self.kinds()) or 'empty'})"
+
+    # -- persistence --------------------------------------------------------
+    def save(self, directory: str) -> None:
+        """Write one ``{kind}.npz`` per surrogate into ``directory``."""
+        os.makedirs(directory, exist_ok=True)
+        for kind, s in self._by_kind.items():
+            s.save(os.path.join(directory, f"{kind}.npz"))
+
+    @classmethod
+    def load(cls, directory: str) -> "SurrogateLibrary":
+        """Load every ``*.npz`` in ``directory`` saved by :meth:`save`."""
+        lib = {}
+        for name in sorted(os.listdir(directory)):
+            if name.endswith(".npz"):
+                lib[name[:-4]] = Surrogate.load(os.path.join(directory, name))
+        return cls(lib)

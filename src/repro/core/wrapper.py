@@ -67,12 +67,18 @@ def _features(x, v, tau, params, o_prev=None, o_new=None):
     return jnp.concatenate(cols, axis=1)
 
 
-def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
+def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
                 out_eps: float = 0.02, spiking: bool = False,
                 known_out=None):
     """One digital tick for N circuits (Algorithm 1).
 
-    bank     PredictorBank (selected models embedded as jit-able predictors)
+    surrogate  a :class:`repro.core.surrogate.Surrogate` — an immutable
+             pytree of selected-predictor arrays. Because it is a pytree,
+             it can (and should) be passed through ``jax.jit`` as a TRACED
+             ARGUMENT alongside ``state``: the compiled step then serves
+             any retrained surrogate with matching shapes without
+             recompiling. A legacy ``PredictorBank`` also works (duck-typed
+             ``.predict``) but only as a closed-over constant.
     state    LasanaState
     changed  (N,) bool — set S as a mask
     x        (N, n_in) inputs applied at t (rows of X)
@@ -93,11 +99,11 @@ def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
     stale = changed & (state.t_last < t - clock_ns)
     tau_idle = jnp.maximum(t - state.t_last - clock_ns, 0.0)
     feats_idle = _features(zeros_x, state.v, tau_idle, state.params)
-    e_s_idle = bank.predict("M_ES", feats_idle)
+    e_s_idle = surrogate.predict("M_ES", feats_idle)
     if annotate:
         v_cur = state.v            # behavioral state: never stale
     else:
-        v_hat = bank.predict("M_V", feats_idle)
+        v_hat = surrogate.predict("M_V", feats_idle)
         v_cur = jnp.where(stale, v_hat, state.v)
     e = jnp.where(stale, e_s_idle, 0.0)
 
@@ -110,8 +116,8 @@ def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
         o_hat = known_out
         v_new = v_cur              # caller overwrites with behavioral state
     else:
-        o_hat = bank.predict("M_O", feats)
-        v_new = bank.predict("M_V", feats)
+        o_hat = surrogate.predict("M_O", feats)
+        v_new = surrogate.predict("M_V", feats)
 
     # --- lines 23-29: select dynamic vs static by output behaviour
     if spiking:
@@ -124,9 +130,9 @@ def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
     # where spiking outputs are exactly V_dd) into the transition predictors
     feats_tr = _features(x, v_cur, tau_act, state.params, o_prev=state.o,
                          o_new=o_resolved)
-    e_d = bank.predict("M_ED", feats_tr)
-    e_s = bank.predict("M_ES", feats)
-    lat = bank.predict("M_L", feats_tr)
+    e_d = surrogate.predict("M_ED", feats_tr)
+    e_s = surrogate.predict("M_ES", feats)
+    lat = surrogate.predict("M_L", feats_tr)
     e_evt = jnp.where(out_changed, e_d, e_s)
     l_evt = jnp.where(out_changed, lat, 0.0)
     e = e + jnp.where(changed, e_evt, 0.0)
@@ -145,8 +151,9 @@ def lasana_step(bank, state: LasanaState, changed, x, t, clock_ns, *,
     return new_state, e, l, o_out
 
 
-def lasana_step_reference(bank, state: LasanaState, changed, x, t, clock_ns,
-                          *, out_eps: float = 0.02, spiking: bool = False):
+def lasana_step_reference(surrogate, state: LasanaState, changed, x, t,
+                          clock_ns, *, out_eps: float = 0.02,
+                          spiking: bool = False):
     """Literal per-circuit transcription of Algorithm 1 (numpy, for tests)."""
     import numpy as np
 
@@ -166,11 +173,11 @@ def lasana_step_reference(bank, state: LasanaState, changed, x, t, clock_ns,
         if t_last[i] < t - clock_ns:                      # lines 4-6
             tau = t - t_last[i] - clock_ns
             fi = np.concatenate([np.zeros_like(x[i]), [v[i]], [tau], params[i]])
-            v[i] = float(bank.predict_np("M_V", fi[None])[0])
-            e[i] += float(bank.predict_np("M_ES", fi[None])[0])
+            v[i] = float(surrogate.predict_np("M_V", fi[None])[0])
+            e[i] += float(surrogate.predict_np("M_ES", fi[None])[0])
         f = np.concatenate([x[i], [v[i]], [clock_ns], params[i]])
-        o_hat = float(bank.predict_np("M_O", f[None])[0])
-        v_new = float(bank.predict_np("M_V", f[None])[0])
+        o_hat = float(surrogate.predict_np("M_O", f[None])[0])
+        v_new = float(surrogate.predict_np("M_V", f[None])[0])
         if spiking:
             changed_out = o_hat > 0.75
             o_res = 1.5 if changed_out else 0.0
@@ -179,9 +186,9 @@ def lasana_step_reference(bank, state: LasanaState, changed, x, t, clock_ns,
             o_res = o_hat
         fp = np.concatenate([x[i], [v[i]], [clock_ns], params[i], [o[i]],
                              [o_res]])
-        e_d = float(bank.predict_np("M_ED", fp[None])[0])
-        e_s = float(bank.predict_np("M_ES", f[None])[0])
-        lat = float(bank.predict_np("M_L", fp[None])[0])
+        e_d = float(surrogate.predict_np("M_ED", fp[None])[0])
+        e_s = float(surrogate.predict_np("M_ES", f[None])[0])
+        lat = float(surrogate.predict_np("M_L", fp[None])[0])
         if changed_out:                                    # lines 24-27
             e[i] += e_d
             l[i] = lat

@@ -1,0 +1,183 @@
+"""``repro.lasana`` — the one documented LASANA entry point.
+
+The paper's pitch is surrogates as *deployable artifacts*: train once on
+golden (SPICE stand-in) traces, persist, then serve at scale inside a
+digital simulation backend. This facade is that pipeline in four calls::
+
+    import repro.lasana as lasana
+
+    sur = lasana.train("lif", lasana.TrainConfig(n_runs=300))   # Surrogate
+    sur.save("artifacts/lif.npz")                               # persist
+    sur = lasana.load("artifacts/lif.npz")                      # redeploy
+    run = lasana.simulate(spec, stimulus, surrogates=sur)       # NetworkRun
+
+Design contract — surrogates are **pytree arguments, not closures**: a
+:class:`Surrogate` is an immutable registered pytree of selected-predictor
+arrays plus a static manifest. ``lasana.simulate`` compiles one network
+program per (graph, stimulus shape, surrogate structure) and passes the
+surrogate *through* it as a traced argument, so retrained or hot-swapped
+surrogates — every point of an architecture sweep — reuse the compiled
+program with **zero recompiles** (see ``NetworkEngine.compile_count`` and
+tests/test_facade.py). Heterogeneous graphs bind one surrogate per circuit
+kind with a :class:`SurrogateLibrary`.
+
+Everything here re-exports or wraps the composable pieces in
+``repro.core.*`` (network engine, predictors, dataset generation); the old
+entry points (``NetworkEngine(bank=...)``, ``persist.save_bank``,
+``simulate.run_snn_*``) remain as deprecation shims that route through
+this facade. See docs/api.md for the full reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.core.network import NetworkEngine, NetworkRun, NetworkSpec
+from repro.core.surrogate import (FORMAT_VERSION, Manifest, Surrogate,
+                                  SurrogateLibrary)
+
+__all__ = [
+    "FORMAT_VERSION",
+    "Manifest",
+    "NetworkRun",
+    "Surrogate",
+    "SurrogateLibrary",
+    "TrainConfig",
+    "engine",
+    "load",
+    "save",
+    "simulate",
+    "train",
+]
+
+DEFAULT_FAMILIES = ("mean", "table", "linear", "gbdt", "mlp")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Configuration for :func:`train` (testbench scale + model families).
+
+    n_runs    randomized testbench runs golden-simulated for the dataset
+    n_steps   digital clock periods per run
+    alpha     P(timestep is active) in the randomized testbench (§IV-A)
+    seed      testbench RNG seed
+    families  model families fit per predictor; the best validation-MSE
+              family is selected (paper §IV-B). Fewer families = faster
+              training (e.g. ``("mean", "linear")`` for smoke tests).
+    """
+
+    n_runs: int = 1000
+    n_steps: int = 125
+    alpha: float = 0.8
+    seed: int = 0
+    families: tuple = DEFAULT_FAMILIES
+
+
+def train(circuit: str, cfg: Optional[TrainConfig] = None, *,
+          verbose: bool = False) -> Surrogate:
+    """Train a :class:`Surrogate` for one circuit kind (paper §IV end-to-end).
+
+    Runs the randomized testbench through the golden transient simulator,
+    extracts E1/E2/E3 events, fits every family in ``cfg.families`` per
+    predictor, selects by validation MSE, and freezes the winners into an
+    immutable pytree artifact. ``Surrogate.fit_info`` carries the
+    per-family fit metrics."""
+    from repro.core.dataset import TestbenchConfig, build_dataset
+    from repro.core.predictors import PredictorBank
+    cfg = cfg or TrainConfig()
+    ds = build_dataset(circuit, TestbenchConfig(
+        n_runs=cfg.n_runs, n_steps=cfg.n_steps, alpha=cfg.alpha,
+        seed=cfg.seed))
+    bank = PredictorBank(circuit, families=tuple(cfg.families))
+    bank.fit(ds, verbose=verbose)
+    return Surrogate.from_bank(bank)
+
+
+def save(surrogate, path: str) -> None:
+    """Persist a :class:`Surrogate` (one ``.npz`` file) or a
+    :class:`SurrogateLibrary` (a directory of ``{kind}.npz``) — alias of
+    the artifact's own ``save``."""
+    surrogate.save(path)
+
+
+def load(path: str):
+    """Load the artifact at ``path`` saved by :func:`save`.
+
+    A file loads as a :class:`Surrogate`; a directory loads as a
+    :class:`SurrogateLibrary` (the mixed-graph round trip mirrors the
+    single-surrogate one). Raises ``ValueError`` on a format-version
+    mismatch (artifacts are versioned; see
+    ``repro.core.surrogate.FORMAT_VERSION``)."""
+    import os
+    if os.path.isdir(path):
+        return SurrogateLibrary.load(path)
+    return Surrogate.load(path)
+
+
+# --- compiled-engine cache ------------------------------------------------------
+#
+# simulate() is stateless for the caller, but compiled network programs are
+# cached per live NetworkSpec object, so calling simulate() repeatedly with
+# retrained surrogates reuses one executable instead of recompiling per
+# call. The cache dict is attached to the spec itself (not a module-level
+# table): engines — and their compiled XLA executables — are released the
+# moment the spec is garbage-collected, so sweeps that build many specs
+# don't accumulate programs.
+
+_ENGINE_ATTR = "_lasana_engine_cache"
+
+
+def engine(spec: NetworkSpec, *, backend: str = "lasana",
+           mode: str = "standalone", mesh=None,
+           record_hidden: bool = True) -> NetworkEngine:
+    """The cached :class:`NetworkEngine` serving ``spec`` for :func:`simulate`.
+
+    One engine (and therefore one set of compiled programs) exists per live
+    ``(spec, backend, mode, mesh, record_hidden)`` combination; surrogates
+    are bound per ``run()``/``simulate()`` call, not per engine. Useful
+    directly when you want explicit control or to assert on
+    ``engine(spec).compile_count`` in tests."""
+    cache = getattr(spec, _ENGINE_ATTR, None)
+    if cache is None:
+        cache = {}
+        # NetworkSpec is frozen (dataclass __setattr__ is blocked), but a
+        # private cache slot is lifecycle bookkeeping, not spec state
+        object.__setattr__(spec, _ENGINE_ATTR, cache)
+    key = (backend, mode, id(mesh) if mesh is not None else None,
+           record_hidden)
+    eng = cache.get(key)
+    if eng is None:
+        eng = NetworkEngine(spec, backend=backend, mode=mode, mesh=mesh,
+                            record_hidden=record_hidden)
+        cache[key] = eng
+    return eng
+
+
+def simulate(spec: NetworkSpec, stimulus, *, backend: str = "lasana",
+             surrogates=None, mode: str = "standalone", mesh=None,
+             record_hidden: bool = True) -> NetworkRun:
+    """Simulate a circuit graph and return its :class:`NetworkRun` record.
+
+    One signature for all three backends (the paper's comparison set):
+
+    spec        the circuit graph (``network.snn_spec`` /
+                ``crossbar_mlp_spec`` / ``graph_spec``)
+    stimulus    (T, B, fan_in) per-tick drive in the first layer's native
+                units; (B, fan_in) is promoted to one combinational wave
+    backend     "golden" (ODE reference) | "behavioral" (ideal update) |
+                "lasana" (Algorithm 1 over trained surrogates)
+    surrogates  backend="lasana": a :class:`Surrogate` (homogeneous graphs)
+                or :class:`SurrogateLibrary` / ``{kind: Surrogate}`` dict
+                (mixed graphs); legacy ``PredictorBank`` values are frozen
+                automatically
+    mode        lasana only: "standalone" | "annotation"
+    mesh        optional ``jax.sharding.Mesh`` — shard the batch axis
+    record_hidden  keep per-layer output traces (memory-heavy at scale)
+
+    Surrogates pass through the compiled program as traced pytree
+    arguments: repeated calls with the same live ``spec`` and retrained
+    surrogates of identical structure reuse one compiled executable."""
+    return engine(spec, backend=backend, mode=mode, mesh=mesh,
+                  record_hidden=record_hidden).run(stimulus,
+                                                   surrogates=surrogates)

@@ -15,9 +15,8 @@ import time
 
 import jax
 
-from repro.core.dataset import TestbenchConfig, build_dataset
+import repro.lasana as lasana
 from repro.core.distributed import lower_distributed_step
-from repro.core.predictors import PredictorBank
 from repro.launch import hlo_cost
 from repro.launch import roofline as rf
 from repro.launch.mesh import make_production_mesh, mesh_info
@@ -33,19 +32,18 @@ def main():
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
-    print(f"[lasana-dryrun] training bank ({args.families}) ...")
-    ds = build_dataset("lif", TestbenchConfig(n_runs=args.bank_runs,
-                                              n_steps=80))
-    bank = PredictorBank(
-        "lif", families=tuple(args.families.split(","))).fit(ds)
+    print(f"[lasana-dryrun] training surrogate ({args.families}) ...")
+    surrogate = lasana.train("lif", lasana.TrainConfig(
+        n_runs=args.bank_runs, n_steps=80,
+        families=tuple(args.families.split(","))))
 
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     n_dev = mesh_info(mesh)["n_devices"]
     print(f"[lasana-dryrun] lowering one tick: {args.n:,} circuits on "
           f"{n_dev} devices ...")
     t0 = time.time()
-    lowered = lower_distributed_step(bank, mesh, args.n, 3, 4, clock_ns=5.0,
-                                     spiking=True)
+    lowered = lower_distributed_step(surrogate, mesh, args.n, 3, 4,
+                                     clock_ns=5.0, spiking=True)
     compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()

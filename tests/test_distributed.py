@@ -59,14 +59,14 @@ _SCRIPT = textwrap.dedent("""
     print("LOSS1", l1, "LOSS2", l2)
     assert abs(l1 - l2) / abs(l1) < 2e-2, (l1, l2)
 
-    # LASANA shard_map equivalence
-    from repro.core.dataset import build_dataset, TestbenchConfig
-    from repro.core.predictors import PredictorBank
+    # LASANA shard_map equivalence: the surrogate is a TRACED argument of
+    # the sharded step (swap-without-recompile serving contract)
+    import repro.lasana as lasana
     from repro.core.wrapper import init_state, lasana_step
     from repro.core.distributed import make_distributed_step
     from repro.core.circuits import LIFNeuron
-    ds = build_dataset("lif", TestbenchConfig(n_runs=40, n_steps=40))
-    bank = PredictorBank("lif", families=("linear",)).fit(ds)
+    surrogate = lasana.train("lif", lasana.TrainConfig(
+        n_runs=40, n_steps=40, families=("linear",)))
     circ = LIFNeuron()
     n = 64
     params = circ.sample_params(key, n)
@@ -74,10 +74,11 @@ _SCRIPT = textwrap.dedent("""
     changed = jax.random.bernoulli(key, 0.8, (n,))
     x = circ.sample_inputs(key, (n,))
     sm_mesh = make_mesh((8,), ("data",))
-    dstep = make_distributed_step(bank, sm_mesh, clock_ns=5.0, spiking=True)
+    dstep = make_distributed_step(sm_mesh, clock_ns=5.0, spiking=True)
     with sm_mesh:
-        st_d, e_tot, n_out = dstep(state, changed, x, jnp.asarray([5.0]))
-    st_l, e_l, _, o_l = lasana_step(bank, state, changed, x, 5.0, 5.0,
+        st_d, e_tot, n_out = dstep(surrogate, state, changed, x,
+                                   jnp.asarray([5.0]))
+    st_l, e_l, _, o_l = lasana_step(surrogate, state, changed, x, 5.0, 5.0,
                                     spiking=True)
     np.testing.assert_allclose(np.asarray(st_d.v), np.asarray(st_l.v),
                                rtol=1e-5, atol=1e-6)

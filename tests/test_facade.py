@@ -1,0 +1,261 @@
+"""repro.lasana facade: pytree Surrogate artifacts + one train->persist->
+simulate API.
+
+Covers the ISSUE-3 acceptance properties:
+
+  * compile-once serving: swapping two differently-trained Surrogates
+    through one jitted ``lasana.simulate`` program triggers ZERO
+    recompiles (surrogates are traced pytree arguments, not closures);
+  * deprecation shims (``run_snn_lasana``, ``PredictorBank.predict``,
+    ``NetworkEngine(bank=...)``) produce identical results to the new API;
+  * the curated ``repro.core`` surface re-exports the facade;
+  * SurrogateLibrary semantics (kind binding, persistence, pytree-ness).
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.lasana as lasana
+from repro.core.network import NetworkEngine, snn_spec
+from repro.core.surrogate import Surrogate, SurrogateLibrary
+
+T_STEPS, BATCH = 25, 4
+
+
+@pytest.fixture(scope="module")
+def two_surrogates():
+    """Two linear-family surrogates trained on different testbench seeds:
+    identical manifests + shapes (same compiled program), different
+    weights (observably different predictions)."""
+    cfg1 = lasana.TrainConfig(n_runs=60, n_steps=50, seed=1,
+                              families=("linear",))
+    cfg2 = lasana.TrainConfig(n_runs=60, n_steps=50, seed=2,
+                              families=("linear",))
+    return lasana.train("lif", cfg1), lasana.train("lif", cfg2)
+
+
+@pytest.fixture(scope="module")
+def small_net():
+    key = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(key, (12, 8)) * 0.8
+    w2 = jax.random.normal(jax.random.PRNGKey(1), (8, 4)) * 0.8
+    params = [jnp.asarray([0.58, 0.5, 0.5, 0.5])] * 2
+    spec = snn_spec([w1, w2], params)
+    spikes = (jax.random.bernoulli(jax.random.PRNGKey(2), 0.2,
+                                   (T_STEPS, BATCH, 12)) * 1.5
+              ).astype(jnp.float32)
+    return spec, spikes
+
+
+# --- compile-once serving (the tentpole contract) -----------------------------
+
+def test_surrogate_is_registered_pytree(two_surrogates):
+    s1, _ = two_surrogates
+    leaves, treedef = jax.tree.flatten(s1)
+    assert leaves and all(hasattr(l, "shape") for l in leaves)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, Surrogate)
+    assert rebuilt.manifest == s1.manifest
+    # tree.map over the artifact touches only arrays
+    doubled = jax.tree.map(lambda a: a * 2, s1)
+    assert isinstance(doubled, Surrogate)
+
+
+def test_swap_surrogates_zero_recompiles(two_surrogates, small_net):
+    """Two differently-trained surrogates through ONE engine: exactly one
+    trace + one compile, and the runs demonstrably use different weights."""
+    s1, s2 = two_surrogates
+    spec, spikes = small_net
+    eng = NetworkEngine(spec, backend="lasana")
+    r1 = eng.run(spikes, surrogates=s1)
+    r2 = eng.run(spikes, surrogates=s2)
+    r1b = eng.run(spikes, surrogates=s1)
+    assert eng.compile_count == 1
+    assert eng._trace_count == 1
+    # the swapped weights actually flowed through the compiled program
+    assert r1.energy.sum() != r2.energy.sum()
+    np.testing.assert_array_equal(r1.energy, r1b.energy)
+
+
+def test_facade_simulate_reuses_one_program(two_surrogates, small_net):
+    """lasana.simulate with the same live spec + retrained surrogates
+    shares one cached engine and zero extra compiles."""
+    s1, s2 = two_surrogates
+    spec, spikes = small_net
+    r1 = lasana.simulate(spec, spikes, surrogates=s1)
+    eng = lasana.engine(spec)
+    compiles_after_first = eng.compile_count
+    r2 = lasana.simulate(spec, spikes, surrogates=s2)
+    assert lasana.engine(spec) is eng
+    assert eng.compile_count == compiles_after_first == 1
+    assert r1.energy.sum() != r2.energy.sum()
+    assert r2.compile_seconds == r1.compile_seconds  # same cached program
+
+
+def test_different_structure_recompiles_cleanly(two_surrogates, small_net):
+    """A surrogate with a DIFFERENT structure (family mix) compiles a new
+    program instead of misusing the cached one."""
+    s1, _ = two_surrogates
+    spec, spikes = small_net
+    from repro.core.dataset import TestbenchConfig, build_dataset
+    from repro.core.predictors import PredictorBank
+    ds = build_dataset("lif", TestbenchConfig(n_runs=60, n_steps=50, seed=3))
+    s_mean = PredictorBank("lif", families=("mean",)).fit(ds).to_surrogate()
+    eng = NetworkEngine(spec, backend="lasana")
+    eng.run(spikes, surrogates=s1)
+    eng.run(spikes, surrogates=s_mean)
+    assert eng.compile_count == 2
+
+
+# --- deprecation shims produce identical results ------------------------------
+
+def test_run_snn_lasana_shim_matches_facade(lif_bank, small_net):
+    from repro.core.simulate import run_snn_lasana
+    spec, spikes = small_net
+    ws = [l.weight for l in spec.layers]
+    ps = [l.params for l in spec.layers]
+    counts, energy = run_snn_lasana(lif_bank, ws, spikes, ps)
+    run = lasana.simulate(snn_spec(ws, ps), spikes,
+                          surrogates=lif_bank.to_surrogate())
+    np.testing.assert_array_equal(counts, run.outputs)
+    np.testing.assert_allclose(
+        energy, run.energy.sum() + run.flush_energy.sum(), rtol=1e-6)
+
+
+def test_bank_kwarg_shim_matches_surrogates(lif_bank, small_net):
+    spec, spikes = small_net
+    with pytest.deprecated_call():
+        legacy = NetworkEngine(spec, backend="lasana", bank=lif_bank
+                               ).run(spikes)
+    new = NetworkEngine(spec, backend="lasana",
+                        surrogates=lif_bank.to_surrogate()).run(spikes)
+    np.testing.assert_array_equal(legacy.outputs, new.outputs)
+    np.testing.assert_array_equal(legacy.energy, new.energy)
+
+
+def test_predictor_bank_predict_matches_surrogate(lif_bank):
+    """PredictorBank.predict (legacy inference) == Surrogate.predict."""
+    sur = lif_bank.to_surrogate()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (32, 9)).astype(np.float32))
+    for pname in ("M_O", "M_V", "M_ES"):
+        np.testing.assert_array_equal(
+            np.asarray(lif_bank.predict(pname, x)),
+            np.asarray(sur.predict(pname, x)))
+
+
+# --- library + surface --------------------------------------------------------
+
+def test_surrogate_library_semantics(two_surrogates, tmp_path):
+    s1, _ = two_surrogates
+    lib = SurrogateLibrary({"lif": s1})
+    assert "lif" in lib and lib["lif"] is s1 and lib.kinds() == ("lif",)
+    # kind/circuit binding is validated
+    with pytest.raises(ValueError, match="registered under kind"):
+        SurrogateLibrary({"crossbar": s1})
+    # the library is itself a pytree
+    leaves, treedef = jax.tree.flatten(lib)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, SurrogateLibrary) and "lif" in rebuilt
+    # directory persistence — also through the facade save/load round trip
+    lasana.save(lib, str(tmp_path / "lib"))
+    loaded = lasana.load(str(tmp_path / "lib"))
+    assert isinstance(loaded, SurrogateLibrary)
+    assert loaded.kinds() == ("lif",)
+    assert loaded["lif"].manifest == s1.manifest
+
+
+def test_surrogate_kind_mismatch_rejected(two_surrogates, small_net):
+    import dataclasses
+    s1, _ = two_surrogates
+    spec, spikes = small_net
+    wrong_kind = Surrogate(
+        manifest=dataclasses.replace(s1.manifest, circuit="crossbar"),
+        params=s1.params)
+    with pytest.raises(ValueError, match="bound to layer kind"):
+        NetworkEngine(spec, backend="lasana",
+                      surrogates={"lif": wrong_kind})
+
+
+def test_core_namespace_reexports_facade():
+    import repro.core as core
+    for name in core.__all__:
+        assert getattr(core, name) is not None, name
+    assert core.train is lasana.train
+    assert core.Surrogate is lasana.Surrogate
+    # ``simulate`` is reachable via the facade module (the name itself
+    # would be shadowed by the repro.core.simulate submodule)
+    assert core.lasana.simulate is lasana.simulate
+    assert "simulate" not in core.__all__
+
+
+def test_facade_symbols_documented():
+    import inspect
+    for name in lasana.__all__:
+        obj = getattr(lasana, name)
+        if inspect.isclass(obj) or callable(obj):
+            assert inspect.getdoc(obj), f"{name} lacks a docstring"
+
+
+def test_misuse_raises_not_silently_ignores(two_surrogates, small_net):
+    """Guard rails: surrogates on a reference backend, annotation without
+    behavioral states, and a surrogate where a mesh belongs all raise."""
+    s1, _ = two_surrogates
+    spec, spikes = small_net
+    with pytest.raises(ValueError, match="does not use surrogates"):
+        lasana.simulate(spec, spikes, backend="golden", surrogates=s1)
+    from repro.core.simulate import make_stimulus, run_lasana
+    active, x, params = make_stimulus("lif", 8, 5, seed=0)
+    with pytest.raises(ValueError, match="oracle_states"):
+        run_lasana(s1, "lif", active, x, params,
+                   annotate_outputs=np.zeros((5, 8), np.float32))
+    from repro.core.distributed import make_distributed_step
+    with pytest.raises(TypeError, match="Mesh"):
+        make_distributed_step(s1, clock_ns=5.0)
+
+
+def test_simulated_spec_still_pickles(two_surrogates, small_net):
+    """The engine cache attached to a spec (compiled executables) must not
+    leak into pickling or deep-copying of the spec value object."""
+    import copy
+    import pickle
+    s1, _ = two_surrogates
+    spec, spikes = small_net
+    lasana.simulate(spec, spikes, surrogates=s1)
+    clone = pickle.loads(pickle.dumps(spec))
+    assert clone.n_layers == spec.n_layers
+    assert not hasattr(clone, "_lasana_engine_cache")
+    deep = copy.deepcopy(spec)
+    assert deep.n_layers == spec.n_layers
+
+
+def test_engine_cache_dies_with_spec(two_surrogates, small_net):
+    """Compiled-program caches are attached to the spec, not a module
+    table: dropping the spec releases the engines."""
+    import weakref
+    s1, _ = two_surrogates
+    _, spikes = small_net
+    w = jax.random.normal(jax.random.PRNGKey(5), (12, 4))
+    spec = snn_spec([w], [jnp.asarray([0.58, 0.5, 0.5, 0.5])])
+    lasana.simulate(spec, spikes, surrogates=s1)
+    ref = weakref.ref(lasana.engine(spec))
+    assert ref() is not None
+    del spec
+    import gc
+    gc.collect()
+    assert ref() is None
+
+
+def test_check_api_tool_passes():
+    """The CI API guard agrees with the committed snapshot."""
+    import pathlib
+    import subprocess
+    import sys
+    root = pathlib.Path(__file__).resolve().parent.parent
+    r = subprocess.run([sys.executable, str(root / "tools" / "check_api.py")],
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -53,10 +53,10 @@ def tiny_net():
 def test_scheduler_deterministic_under_fixed_seed(net_bank, tiny_net):
     """Same spec + same stimulus -> bit-identical runs, engine reuse or not."""
     spec, spikes = tiny_net
-    eng = NetworkEngine(spec, backend="lasana", bank=net_bank)
+    eng = NetworkEngine(spec, backend="lasana", surrogates=net_bank)
     r1 = eng.run(spikes)
     r2 = eng.run(spikes)                                   # cached jit
-    r3 = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    r3 = NetworkEngine(spec, backend="lasana", surrogates=net_bank).run(spikes)
     for other in (r2, r3):
         np.testing.assert_array_equal(r1.out_spikes, other.out_spikes)
         np.testing.assert_array_equal(r1.energy, other.energy)
@@ -69,9 +69,9 @@ def test_standalone_vs_annotation_consistency(net_bank, tiny_net):
     adds energy/latency) and its energy must land near standalone's."""
     spec, spikes = tiny_net
     behav = NetworkEngine(spec, backend="behavioral").run(spikes)
-    annot = NetworkEngine(spec, backend="lasana", bank=net_bank,
+    annot = NetworkEngine(spec, backend="lasana", surrogates=net_bank,
                           mode="annotation").run(spikes)
-    stand = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    stand = NetworkEngine(spec, backend="lasana", surrogates=net_bank).run(spikes)
     np.testing.assert_array_equal(annot.out_spikes, behav.out_spikes)
     for a, b in zip(annot.layer_spikes, behav.layer_spikes):
         np.testing.assert_array_equal(a, b)
@@ -87,7 +87,7 @@ def test_lasana_behavioral_spike_parity(net_bank, tiny_net):
     """Paper tolerance: <2% spike-train mismatch across the whole net."""
     spec, spikes = tiny_net
     behav = NetworkEngine(spec, backend="behavioral").run(spikes)
-    las = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    las = NetworkEngine(spec, backend="lasana", surrogates=net_bank).run(spikes)
     mism = sum(np.sum((b > 0.75) != (l > 0.75)) for b, l in
                zip(behav.layer_spikes, las.layer_spikes))
     total = sum(b.size for b in behav.layer_spikes)
@@ -98,7 +98,7 @@ def test_lasana_energy_tracks_golden(net_bank, tiny_net):
     """Event-driven totals (incl. idle flush) land near the golden sim."""
     spec, spikes = tiny_net
     gold = NetworkEngine(spec, backend="golden").run(spikes)
-    las = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    las = NetworkEngine(spec, backend="lasana", surrogates=net_bank).run(spikes)
     e_g = gold.report()["network"]["energy_j"]
     e_l = las.report()["network"]["energy_j"]
     assert abs(e_l - e_g) / e_g < 0.15, (e_l, e_g)
@@ -108,8 +108,8 @@ def test_mesh_batch_parallel_parity(net_bank, tiny_net):
     """shard_map over a 1-device mesh must not change any output."""
     spec, spikes = tiny_net
     mesh = Mesh(np.array(jax.devices()[:1]), ("batch",))
-    base = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
-    shard = NetworkEngine(spec, backend="lasana", bank=net_bank,
+    base = NetworkEngine(spec, backend="lasana", surrogates=net_bank).run(spikes)
+    shard = NetworkEngine(spec, backend="lasana", surrogates=net_bank,
                           mesh=mesh).run(spikes)
     np.testing.assert_array_equal(base.out_spikes, shard.out_spikes)
     np.testing.assert_allclose(base.energy, shard.energy, rtol=1e-6)
@@ -121,7 +121,7 @@ def test_mesh_batch_parallel_parity(net_bank, tiny_net):
 def test_report_aggregation(net_bank, tiny_net):
     """The network report must be consistent with the raw per-tick arrays."""
     spec, spikes = tiny_net
-    run = NetworkEngine(spec, backend="lasana", bank=net_bank).run(spikes)
+    run = NetworkEngine(spec, backend="lasana", surrogates=net_bank).run(spikes)
     rep = run.report()
     assert len(rep["layers"]) == spec.n_layers
     for i, layer in enumerate(rep["layers"]):
@@ -150,13 +150,15 @@ def test_golden_backend_matches_simulate_wrapper(tiny_net):
 
 
 def test_invalid_configuration_raises(tiny_net):
-    spec, _ = tiny_net
+    spec, spikes = tiny_net
     with pytest.raises(ValueError, match="backend"):
         NetworkEngine(spec, backend="spice")
+    # surrogates may be bound at run() time, but running without any raises
     with pytest.raises(ValueError, match="PredictorBank"):
-        NetworkEngine(spec, backend="lasana")
+        NetworkEngine(spec, backend="lasana").run(spikes)
     with pytest.raises(ValueError, match="mode"):
-        NetworkEngine(spec, backend="lasana", bank=object(), mode="oracle")
+        NetworkEngine(spec, backend="lasana", surrogates=object(),
+                      mode="oracle")
 
 
 # --- crossbar (combinational) path -------------------------------------------
@@ -186,7 +188,7 @@ def test_crossbar_lasana_smoke(xbar_net, crossbar_dataset):
     spec, x = xbar_net
     bank = PredictorBank("crossbar",
                          families=("mean", "linear")).fit(crossbar_dataset)
-    run = NetworkEngine(spec, backend="lasana", bank=bank).run(x)
+    run = NetworkEngine(spec, backend="lasana", surrogates=bank).run(x)
     assert np.all(np.isfinite(run.outputs))
     rep = run.report()
     assert rep["network"]["energy_j"] > 0
@@ -239,7 +241,7 @@ def test_mixed_crossbar_lif_parity(net_bank, xbar_bank_q, mixed_net):
     banks = {"lif": net_bank, "crossbar": xbar_bank_q}
     gold = NetworkEngine(spec, backend="golden").run(seq)
     behav = NetworkEngine(spec, backend="behavioral").run(seq)
-    las = NetworkEngine(spec, backend="lasana", bank=banks).run(seq)
+    las = NetworkEngine(spec, backend="lasana", surrogates=banks).run(seq)
     assert np.all(np.isfinite(gold.outputs))
     assert np.all(np.isfinite(las.outputs))
     # crossbar codes: surrogate tracks the behavioral DC solve closely
@@ -261,7 +263,7 @@ def test_mixed_annotation_reproduces_behavioral(net_bank, xbar_bank_q,
     spec, seq = mixed_net
     banks = {"lif": net_bank, "crossbar": xbar_bank_q}
     behav = NetworkEngine(spec, backend="behavioral").run(seq)
-    annot = NetworkEngine(spec, backend="lasana", bank=banks,
+    annot = NetworkEngine(spec, backend="lasana", surrogates=banks,
                           mode="annotation").run(seq)
     for a, b in zip(annot.layer_spikes, behav.layer_spikes):
         np.testing.assert_array_equal(a, b)
@@ -337,11 +339,11 @@ def test_report_attributes_circuit_kinds(mixed_net):
 
 def test_edge_and_bank_validation(mixed_net):
     spec, _ = mixed_net
-    # mixed graph with a single bank (not a mapping) is rejected
+    # mixed graph with a single surrogate (not a mapping) is rejected
     with pytest.raises(ValueError, match="mixed-circuit"):
-        NetworkEngine(spec, backend="lasana", bank=object())
+        NetworkEngine(spec, backend="lasana", surrogates=object())
     with pytest.raises(ValueError, match="missing a.*PredictorBank"):
-        NetworkEngine(spec, backend="lasana", bank={"lif": object()})
+        NetworkEngine(spec, backend="lasana", surrogates={"lif": object()})
     # edge shape validation: lif dst wants (n_out[src], n_out[dst])
     w = jnp.ones((4, 3), jnp.float32)
     p = jnp.asarray([0.58, 0.5, 0.5, 0.5], jnp.float32)

@@ -1,17 +1,141 @@
-"""Bank persistence roundtrip (deployable-artifact contract)."""
+"""Surrogate persistence (deployable-artifact contract).
+
+Round-trip property: for EVERY model family, ``Surrogate.save`` ->
+``load`` -> bit-identical ``predict`` on random feature batches. Plus the
+format-version guard (a mismatched artifact must refuse to load, never be
+reinterpreted) and the legacy ``persist.save_bank``/``load_bank`` shims.
+"""
+
+import json
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.persist import load_bank, save_bank
-from repro.core.predictors import PREDICTOR_DEFS, build_features
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # minimal CPU container
+    from _hyp_fallback import given, settings, st
+
+from repro.core.predictors import PREDICTOR_DEFS, PredictorBank, \
+    build_features
+from repro.core.surrogate import FORMAT_VERSION, Surrogate
+
+# one predictor per family: a single surrogate covers the whole registry
+FAMILY_PER_PREDICTOR = {
+    "M_O": "mlp",
+    "M_V": "linear",
+    "M_ED": "gbdt",
+    "M_ES": "table",
+    "M_L": "mean",
+}
 
 
-def test_bank_roundtrip(tmp_path, lif_bank_mlp, lif_dataset):
+@pytest.fixture(scope="module")
+def all_family_surrogate(lif_dataset):
+    """A surrogate whose five predictors span all five model families
+    (small family configs — persistence cares about arrays, not MSE)."""
+    from repro.core.models import (GBDTModel, LinearModel, MLPModel,
+                                   MeanModel, TableModel)
+    mk = {"mean": MeanModel, "linear": LinearModel,
+          "table": lambda: TableModel(max_rows=500),
+          "gbdt": lambda: GBDTModel(n_trees=6, max_depth=3),
+          "mlp": lambda: MLPModel(hidden=(8,), max_epochs=2)}
+    bank = PredictorBank("lif", families=())
+    for pname, fam in FAMILY_PER_PREDICTOR.items():
+        d = PREDICTOR_DEFS[pname]
+        chain = d.get("chain_out", False)
+        tr = lif_dataset.train.of_kind(*d["kinds"])
+        va = lif_dataset.val.of_kind(*d["kinds"])
+        xtr = bank.augment_features(
+            build_features(tr, prev_out=d["prev_out"], chain_out=chain))
+        xva = bank.augment_features(
+            build_features(va, prev_out=d["prev_out"], chain_out=chain))
+        ytr = (getattr(tr, d["target"]) * d["scale"]).astype(np.float32)
+        yva = (getattr(va, d["target"]) * d["scale"]).astype(np.float32)
+        model = mk[fam]()
+        model.fit(xtr, ytr, xva, yva)
+        bank.selected[pname] = model
+    return Surrogate.from_bank(bank), bank
+
+
+def _random_features(pname, seed, n=48):
+    d = PREDICTOR_DEFS[pname]
+    rng = np.random.default_rng(seed)
+    # lif raw schema: 3 inputs + v + tau + 4 params (+ o_prev [+ o_new])
+    dim = 3 + 1 + 1 + 4 + (1 if d["prev_out"] else 0) \
+        + (1 if d.get("chain_out", False) else 0)
+    return rng.normal(0.0, 1.0, (n, dim)).astype(np.float32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_roundtrip_bit_identical_every_family(tmp_path_factory,
+                                              all_family_surrogate, seed):
+    """save -> load -> predict must be BIT-identical for every family."""
+    sur, _ = all_family_surrogate
+    assert dict(sur.manifest.families) == FAMILY_PER_PREDICTOR
+    path = str(tmp_path_factory.mktemp("rt") / "sur.npz")
+    sur.save(path)
+    loaded = Surrogate.load(path)
+    assert loaded.manifest == sur.manifest
+    for pname in FAMILY_PER_PREDICTOR:
+        x = jnp.asarray(_random_features(pname, seed))
+        a = np.asarray(sur.predict(pname, x))
+        b = np.asarray(loaded.predict(pname, x))
+        np.testing.assert_array_equal(a, b, err_msg=pname)
+
+
+def test_surrogate_matches_bank_predictions(all_family_surrogate):
+    """The frozen artifact reproduces PredictorBank.predict exactly."""
+    sur, bank = all_family_surrogate
+    for pname in FAMILY_PER_PREDICTOR:
+        x = jnp.asarray(_random_features(pname, seed=7))
+        np.testing.assert_array_equal(np.asarray(bank.predict(pname, x)),
+                                      np.asarray(sur.predict(pname, x)))
+
+
+def test_format_version_mismatch_refuses_to_load(tmp_path,
+                                                 all_family_surrogate):
+    sur, _ = all_family_surrogate
+    path = str(tmp_path / "sur.npz")
+    sur.save(path)
+    # rewrite the manifest with a future format version
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    meta = json.loads(bytes(arrays["__manifest__"].tobytes()).decode())
+    meta["format_version"] = FORMAT_VERSION + 1
+    arrays["__manifest__"] = np.frombuffer(json.dumps(meta).encode(),
+                                           dtype=np.uint8)
+    np.savez_compressed(path, **arrays)
+    with pytest.raises(ValueError, match="format version"):
+        Surrogate.load(path)
+    # a non-artifact npz is rejected too
+    other = str(tmp_path / "junk.npz")
+    np.savez(other, a=np.zeros(3))
+    with pytest.raises(ValueError, match="__manifest__"):
+        Surrogate.load(other)
+
+
+def test_fit_info_survives_roundtrip(tmp_path, lif_bank):
+    sur = lif_bank.to_surrogate()
+    assert sur.fit_info and "M_O" in sur.fit_info
+    path = str(tmp_path / "bank.npz")
+    sur.save(path)
+    loaded = Surrogate.load(path)
+    assert loaded.fit_info == json.loads(json.dumps(sur.fit_info))
+
+
+def test_legacy_persist_shims(tmp_path, lif_bank_mlp, lif_dataset):
+    """persist.save_bank/load_bank still round-trip (as Surrogates)."""
+    from repro.core.persist import load_bank, save_bank
     path = str(tmp_path / "lif_bank.npz")
-    save_bank(lif_bank_mlp, path)
-    loaded = load_bank(path)
+    with pytest.deprecated_call():
+        save_bank(lif_bank_mlp, path)
+    with pytest.deprecated_call():
+        loaded = load_bank(path)
+    assert isinstance(loaded, Surrogate)
     for pname, d in PREDICTOR_DEFS.items():
         te = lif_dataset.test.of_kind(*d["kinds"])
         if len(te) == 0:
@@ -19,23 +143,55 @@ def test_bank_roundtrip(tmp_path, lif_bank_mlp, lif_dataset):
         x = jnp.asarray(build_features(
             te, prev_out=d["prev_out"],
             chain_out=d.get("chain_out", False))[:64])
-        a = np.asarray(lif_bank_mlp.predict(pname, x))
-        b = np.asarray(loaded.predict(pname, x))
-        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-20)
+        np.testing.assert_allclose(
+            np.asarray(lif_bank_mlp.predict(pname, x)),
+            np.asarray(loaded.predict(pname, x)), rtol=1e-6, atol=1e-20)
 
 
-def test_loaded_bank_runs_algorithm1(tmp_path, lif_bank_mlp):
+def test_load_bank_reads_prefacade_format(tmp_path, lif_bank):
+    """Artifacts written by the OLD save_bank (manifest {circuit,
+    predictors}, no format_version) still load, migrated to a Surrogate."""
+    from repro.core.models import LinearModel, MeanModel
+    from repro.core.persist import load_bank
+    # replicate the pre-facade on-disk format for the selected models
+    manifest = {"circuit": lif_bank.circuit_name, "predictors": {}}
+    arrays = {}
+    for pname, m in lif_bank.selected.items():
+        if isinstance(m, MeanModel):
+            manifest["predictors"][pname] = {"family": "mean", "mu": m.mu}
+        elif isinstance(m, LinearModel):
+            manifest["predictors"][pname] = {"family": "linear"}
+            arrays[f"{pname}/w"] = np.asarray(m.w)
+            arrays[f"{pname}/mu"] = np.asarray(m.sx.mu)
+            arrays[f"{pname}/sd"] = np.asarray(m.sx.sd)
+        else:                                    # lif_bank is mean+linear
+            raise AssertionError(type(m))
+    arrays["__manifest__"] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8)
+    path = str(tmp_path / "legacy.npz")
+    np.savez_compressed(path, **arrays)
+    with pytest.deprecated_call():
+        migrated = load_bank(path)
+    assert isinstance(migrated, Surrogate)
+    for pname in lif_bank.selected:
+        x = jnp.asarray(_random_features(pname, seed=11))
+        np.testing.assert_array_equal(
+            np.asarray(lif_bank.predict(pname, x)),
+            np.asarray(migrated.predict(pname, x)), err_msg=pname)
+
+
+def test_loaded_surrogate_runs_algorithm1(tmp_path, lif_bank_mlp):
     import jax
     from repro.core.circuits import LIFNeuron
     from repro.core.wrapper import init_state, lasana_step
     path = str(tmp_path / "bank2.npz")
-    save_bank(lif_bank_mlp, path)
-    bank = load_bank(path)
+    lif_bank_mlp.to_surrogate().save(path)
+    sur = Surrogate.load(path)
     circ = LIFNeuron()
     key = jax.random.PRNGKey(0)
     n = 16
     state = init_state(n, circ.sample_params(key, n))
     changed = jnp.ones((n,), bool)
     x = circ.sample_inputs(key, (n,))
-    s, e, l, o = lasana_step(bank, state, changed, x, 5.0, 5.0, spiking=True)
+    s, e, l, o = lasana_step(sur, state, changed, x, 5.0, 5.0, spiking=True)
     assert np.all(np.isfinite(np.asarray(e)))

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Public-API guard for the ``repro.lasana`` facade.
+
+Fails (nonzero exit) when:
+
+  * a symbol in ``repro.lasana.__all__`` — or a public method/property of
+    an exported class — is missing a docstring, or
+  * the generated API surface differs from the frozen snapshot
+    (``tests/data/api_surface.txt``) without the snapshot being
+    regenerated.
+
+The snapshot is one line per symbol: ``name [kind] signature``, with
+class members indented. Any intentional API change must ship with a
+regenerated snapshot (making API diffs visible in review):
+
+    PYTHONPATH=src python tools/check_api.py          # check (CI mode)
+    PYTHONPATH=src python tools/check_api.py --regen  # refresh snapshot
+"""
+
+from __future__ import annotations
+
+import argparse
+import inspect
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+SNAPSHOT = ROOT / "tests" / "data" / "api_surface.txt"
+
+
+def _signature(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (TypeError, ValueError):
+        return ""
+
+
+def _class_members(cls):
+    for name, member in sorted(vars(cls).items()):
+        if name.startswith("_"):
+            continue
+        yield name, member
+
+
+def build_surface():
+    """-> (lines, missing_docstrings) for repro.lasana.__all__."""
+    import repro.lasana as facade
+    lines, missing = [], []
+    for name in sorted(facade.__all__):
+        obj = getattr(facade, name)
+        if inspect.isclass(obj):
+            kind = "class"
+        elif inspect.isfunction(obj):
+            kind = "function"
+        else:
+            kind = type(obj).__name__
+        doc = inspect.getdoc(obj) if (inspect.isclass(obj) or callable(obj)) \
+            else True
+        if not doc:
+            missing.append(f"repro.lasana.{name}")
+        lines.append(f"{name} [{kind}]{_signature(obj) if kind != 'int' else ''}")
+        if inspect.isclass(obj):
+            for mname, member in _class_members(obj):
+                target = member
+                tag = "method"
+                if isinstance(member, property):
+                    target, tag = member.fget, "property"
+                elif isinstance(member, staticmethod):
+                    target, tag = member.__func__, "staticmethod"
+                elif isinstance(member, classmethod):
+                    target, tag = member.__func__, "classmethod"
+                if callable(target):
+                    if not inspect.getdoc(target):
+                        missing.append(f"repro.lasana.{name}.{mname}")
+                    lines.append(f"  .{mname} [{tag}]{_signature(target)}")
+                else:                            # dataclass field default etc.
+                    lines.append(f"  .{mname} [attribute]")
+    return lines, missing
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite the frozen snapshot from the live API")
+    args = ap.parse_args(argv)
+
+    lines, missing = build_surface()
+    text = "\n".join(lines) + "\n"
+
+    if missing:
+        print("API CHECK FAILED: missing docstrings on public symbols:")
+        for m in missing:
+            print(f"  {m}")
+        return 1
+
+    if args.regen:
+        SNAPSHOT.parent.mkdir(parents=True, exist_ok=True)
+        SNAPSHOT.write_text(text)
+        print(f"wrote {SNAPSHOT.relative_to(ROOT)} ({len(lines)} lines)")
+        return 0
+
+    if not SNAPSHOT.exists():
+        print(f"API CHECK FAILED: snapshot {SNAPSHOT.relative_to(ROOT)} "
+              "missing; run tools/check_api.py --regen and commit it")
+        return 1
+    frozen = SNAPSHOT.read_text()
+    if frozen != text:
+        import difflib
+        print("API CHECK FAILED: repro.lasana surface drifted from the "
+              "frozen snapshot. If intentional, regenerate with "
+              "tools/check_api.py --regen and commit the diff:")
+        print("".join(difflib.unified_diff(
+            frozen.splitlines(keepends=True), text.splitlines(keepends=True),
+            fromfile="tests/data/api_surface.txt", tofile="live API")))
+        return 1
+    print(f"api check OK: {len(lines)} surface lines match the snapshot, "
+          "all public symbols documented")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
