@@ -5,12 +5,14 @@
 Prints ``name,us_per_call,derived`` CSV lines and writes JSON records under
 results/benchmarks/.
 
-  table1   model training/testing times            (paper Table I)
-  table2   predictor accuracy MSE/MAPE             (paper Table II)
-  table3   error propagation LASANA-O vs -P + Fig8 (paper Table III)
-  table4   runtime scaling vs layer size           (paper Table IV)
-  network  network engine events/s vs naive loop   (§V-E system scale)
-  roofline dry-run roofline terms                  (EXPERIMENTS §Roofline)
+  table1    model training/testing times            (paper Table I)
+  table2    predictor accuracy MSE/MAPE             (paper Table II)
+  table3    error propagation LASANA-O vs -P + Fig8 (paper Table III)
+  table4    runtime scaling vs layer size           (paper Table IV)
+  network   network engine events/s vs naive loop   (§V-E system scale)
+  mixed     heterogeneous crossbar->LIF graph       (§V-E mixed-signal)
+  streaming chunked runs vs monolithic, T=10k       (ISSUE-4 tentpole)
+  roofline  dry-run roofline terms                  (EXPERIMENTS §Roofline)
 """
 
 from __future__ import annotations
@@ -26,17 +28,20 @@ def main() -> None:
                     help="paper-scale datasets/models (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: table1,table2,table3,table4,network,"
-                         "roofline")
+                         "mixed,streaming,roofline")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_models, bench_network,
-                            bench_propagation, bench_roofline, bench_scaling)
+    from benchmarks import (bench_accuracy, bench_mixed, bench_models,
+                            bench_network, bench_propagation,
+                            bench_roofline, bench_scaling, bench_streaming)
     suites = {
         "table1": bench_models.run,
         "table2": bench_accuracy.run,
         "table3": bench_propagation.run,
         "table4": bench_scaling.run,
         "network": bench_network.run,
+        "mixed": bench_mixed.run,
+        "streaming": bench_streaming.run,
         "roofline": bench_roofline.run,
     }
     only = [s for s in args.only.split(",") if s] or list(suites)

@@ -17,9 +17,10 @@ from repro.core.circuits import CIRCUITS, CrossbarRow, LIFNeuron, get_circuit
 
 # graph construction + the engine behind lasana.simulate
 from repro.core.network import (EdgeSpec, LayerSpec, NetworkEngine,
-                                NetworkRun, NetworkSpec, crossbar_layer,
-                                crossbar_mlp_spec, graph_spec, lif_layer,
-                                recurrent_edge, snn_spec)
+                                NetworkRun, NetworkSpec, StreamingRun,
+                                crossbar_layer, crossbar_mlp_spec,
+                                graph_spec, lif_layer, recurrent_edge,
+                                snn_spec)
 
 # facade callables (train/engine/save/load/TrainConfig) are re-exported
 # lazily: repro.lasana itself imports repro.core.network, so a top-level
@@ -27,7 +28,8 @@ from repro.core.network import (EdgeSpec, LayerSpec, NetworkEngine,
 # ``simulate`` entry point is deliberately NOT re-exported by name — the
 # ``repro.core.simulate`` *submodule* would shadow it; reach it as
 # ``repro.core.lasana.simulate`` or (canonically) ``repro.lasana.simulate``.
-_FACADE = ("TrainConfig", "engine", "lasana", "load", "save", "train")
+_FACADE = ("TrainConfig", "engine", "lasana", "load", "save",
+           "simulate_stream", "stream", "train")
 
 __all__ = [
     # facade (repro.lasana; ``lasana`` is the module itself)
@@ -39,6 +41,8 @@ __all__ = [
     "lasana",
     "load",
     "save",
+    "simulate_stream",
+    "stream",
     "train",
     # circuits
     "CIRCUITS",
@@ -51,6 +55,7 @@ __all__ = [
     "NetworkEngine",
     "NetworkRun",
     "NetworkSpec",
+    "StreamingRun",
     "crossbar_layer",
     "crossbar_mlp_spec",
     "graph_spec",

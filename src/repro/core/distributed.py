@@ -44,20 +44,26 @@ def batch_spec(mesh: Mesh, ndim: int = 1, axis: int = 0) -> P:
     return P(*spec)
 
 
-def shard_over_batch(fn, mesh: Mesh, in_specs, out_specs):
+def shard_over_batch(fn, mesh: Mesh, in_specs, out_specs,
+                     donate_argnums=()):
     """jit(shard_map(fn)) — the network engine's batch-parallel wrapper.
 
     ``fn`` must be batch-local except for explicit psum/pmax collectives
     (Algorithm 1 has zero cross-circuit communication, so a whole network
     tick is batch-local; only diagnostics reduce). Pytree arguments whose
     in_spec leaves are ``P()`` — e.g. a :class:`Surrogate` — replicate
-    across the mesh while remaining traced (swap-without-recompile)."""
+    across the mesh while remaining traced (swap-without-recompile).
+
+    ``donate_argnums`` is forwarded to ``jax.jit``: the network engine's
+    streaming path donates its chunk-to-chunk carries (and the surrogate
+    leaves) so XLA aliases them in place instead of copying per chunk."""
     return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs))
+                             out_specs=out_specs),
+                   donate_argnums=donate_argnums)
 
 
 def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
-                  spiking: bool = False):
+                  spiking: bool = False, vdd: float = 1.5):
     """jit(shard_map) of one Algorithm-1 tick; surrogate is argument 0.
 
     ``surrogate_template`` supplies only the pytree *structure* for the
@@ -68,9 +74,11 @@ def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
 
     def body(surrogate, state, changed, x, t):
         new_state, e, l, o = lasana_step(surrogate, state, changed, x, t[0],
-                                         clock_ns, spiking=spiking)
+                                         clock_ns, spiking=spiking, vdd=vdd)
         e_tot = jax.lax.psum(jnp.sum(e), tuple(mesh.axis_names))
-        n_out = jax.lax.psum(jnp.sum((o > 0.75).astype(jnp.float32)),
+        # spike counts are integers: fp32 accumulation silently loses
+        # whole events past 2^24 per tick at dry-run scales (2^27 circuits)
+        n_out = jax.lax.psum(jnp.sum(o > 0.5 * vdd, dtype=jnp.int32),
                              tuple(mesh.axis_names))
         return new_state, e_tot, n_out
 
@@ -81,13 +89,15 @@ def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
 
 
 def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
-                          spiking: bool = False):
+                          spiking: bool = False, vdd: float = 1.5):
     """(surrogate, state, changed, x, t) -> (state, e_total, spikes_total).
 
     Returns a callable that shard_maps one tick over ``mesh``. The
     surrogate rides along as a traced, replicated pytree: calls with
     retrained surrogates of identical structure reuse one compiled program
     (the program cache is keyed on the surrogate's treedef).
+    ``spikes_total`` is an exact int32 count; ``vdd`` is the spiking
+    circuit's supply voltage (spike resolution + discriminator level).
 
     Legacy call style ``make_distributed_step(bank, mesh, ...)`` (surrogate
     closed over, returned callable takes ``(state, changed, x, t)``) is
@@ -110,7 +120,7 @@ def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
             "the step's first argument", DeprecationWarning, stacklevel=2)
         surrogate = as_surrogate(mesh)
         fn = _sharded_step(_legacy_mesh, surrogate, clock_ns=clock_ns,
-                           spiking=spiking)
+                           spiking=spiking, vdd=vdd)
         return lambda state, changed, x, t: fn(surrogate, state, changed,
                                                x, t)
 
@@ -122,7 +132,7 @@ def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
         fn = cache.get(sdef)
         if fn is None:
             fn = _sharded_step(mesh, surrogate, clock_ns=clock_ns,
-                               spiking=spiking)
+                               spiking=spiking, vdd=vdd)
             cache[sdef] = fn
         return fn(surrogate, state, changed, x, t)
 
@@ -145,14 +155,15 @@ def abstract_sim_inputs(n_circuits: int, n_in: int, n_params: int):
 
 def lower_distributed_step(surrogate, mesh: Mesh, n_circuits: int, n_in: int,
                            n_params: int, *, clock_ns: float,
-                           spiking: bool = False):
+                           spiking: bool = False, vdd: float = 1.5):
     """Lower one sharded simulation tick from ShapeDtypeStructs (dry-run).
 
     ``surrogate`` may be a Surrogate or a legacy PredictorBank; its arrays
     stay concrete (they are the weights), the simulation inputs are
     abstract."""
     surrogate = as_surrogate(surrogate)
-    step = _sharded_step(mesh, surrogate, clock_ns=clock_ns, spiking=spiking)
+    step = _sharded_step(mesh, surrogate, clock_ns=clock_ns, spiking=spiking,
+                         vdd=vdd)
     args = abstract_sim_inputs(n_circuits, n_in, n_params)
     with mesh:
         return step.lower(surrogate, *args)

@@ -56,6 +56,10 @@ Public API
     the typed inter-layer signal adapters
 :class:`NetworkEngine` / :class:`NetworkRun`
     the simulator and its run record / report
+:meth:`NetworkEngine.run_stream` / :meth:`NetworkEngine.stream` /
+:class:`StreamingRun`
+    streaming chunked execution: donated chunk-to-chunk carries, async
+    host fetch, records bit-identical to the monolithic run
 
 Usage (the facade ``repro.lasana`` wraps this in one documented entry
 point — ``lasana.train`` / ``lasana.simulate``)::
@@ -303,12 +307,27 @@ def event_threshold(src_kind: str, spike_amp: float) -> float:
     return 0.05 * spike_amp
 
 
-def drive_to_circuit_inputs(drive):
-    """Aggregate synaptic drive -> (w, x, n) LIF circuit inputs."""
+def drive_to_circuit_inputs(drive, *, spike_amp: float = 1.5,
+                            n_spk: float = 5.0):
+    """Aggregate synaptic drive -> (w, x, n) LIF circuit inputs.
+
+    ``spike_amp`` is the presynaptic spike amplitude (the source circuit's
+    V_dd) and ``n_spk`` the spikes-per-period ceiling the LIF testbench
+    trains against; both used to be hardcoded at the 1.5-V_dd defaults,
+    which would silently mis-drive any future non-1.5-V_dd LIF circuit."""
     w = jnp.clip(drive, -1.0, 1.0)
-    x = jnp.full_like(drive, 1.5)
-    n = jnp.full_like(drive, 5.0)
+    x = jnp.full_like(drive, spike_amp)
+    n = jnp.full_like(drive, n_spk)
     return jnp.stack([w, x, n], axis=-1)
+
+
+def _count_events(changed) -> jax.Array:
+    """Exact integer count of a ``changed`` mask.
+
+    Event counts used to accumulate as fp32, which silently drops whole
+    events once a tick/layer exceeds 2^24 of them (dry-run scales reach
+    2^27 circuits); int32 keeps every count exact to 2^31."""
+    return jnp.sum(changed, dtype=jnp.int32)
 
 
 def _tile_params(p, b: int, n_out: int):
@@ -329,6 +348,54 @@ def _row_segments(w, seg_width: int):
             .transpose(2, 0, 1).reshape(-1, seg_width))
     return np.concatenate([segs, np.zeros((len(segs), 1))],
                           axis=1).astype(np.float32)
+
+
+def _iter_chunks(stimulus, chunk_ticks, fan_in: int):
+    """Yield (t_i, B, fan_in) stimulus chunks for the streaming path.
+
+    ``stimulus`` is either one (T, B, fan_in) array — sliced into
+    ``chunk_ticks``-tick chunks without ever putting more than one chunk
+    on device when it lives in host memory — or an iterator of
+    (t_i, B, fan_in) blocks, re-buffered to ``chunk_ticks`` ticks when a
+    chunk size is given (the last chunk may be short). 2-D (B, fan_in)
+    blocks promote to one tick."""
+    if chunk_ticks is not None and chunk_ticks <= 0:
+        raise ValueError(f"chunk_ticks must be positive: {chunk_ticks}")
+
+    def check(blk):
+        if blk.ndim == 2:
+            blk = blk[None]
+        if blk.ndim != 3:
+            raise ValueError(f"stimulus chunks must be (T, B, n_in), got "
+                             f"shape {tuple(blk.shape)}")
+        if blk.shape[-1] != fan_in:
+            raise ValueError(f"input width {blk.shape[-1]} != layer-0 "
+                             f"fan_in {fan_in}")
+        return blk
+
+    if hasattr(stimulus, "ndim"):              # one whole array
+        x = check(stimulus)
+        step = int(chunk_ticks) if chunk_ticks else x.shape[0]
+        for a in range(0, x.shape[0], step):
+            yield x[a:a + step]
+        return
+    parts, have = [], 0                        # iterator of blocks
+    for block in stimulus:
+        blk = check(np.asarray(block, np.float32))
+        if chunk_ticks is None:
+            yield blk
+            continue
+        parts.append(blk)
+        have += blk.shape[0]
+        while have >= chunk_ticks:             # one concat per emitted chunk
+            buf = parts[0] if len(parts) == 1 \
+                else np.concatenate(parts, axis=0)
+            yield buf[:chunk_ticks]
+            rest = buf[chunk_ticks:]
+            parts = [rest] if rest.shape[0] else []
+            have = rest.shape[0]
+    if have:
+        yield parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
 
 
 # --- run record ---------------------------------------------------------------
@@ -396,6 +463,108 @@ class NetworkRun:
                 "compile_seconds": self.compile_seconds,
             },
         }
+
+    @classmethod
+    def merge(cls, chunks) -> "NetworkRun":
+        """Merge consecutive per-chunk records into one whole-run record.
+
+        ``chunks`` is the sequence :meth:`NetworkEngine.stream` yields (in
+        order). The merged record is bit-identical to the monolithic
+        :meth:`NetworkEngine.run` over the concatenated stimulus: spike
+        counts sum exactly (integer chunk partials), per-tick diagnostics
+        concatenate, and the end-of-run flush — present only on the final
+        chunk — is applied exactly once. ``wall_seconds`` /
+        ``compile_seconds`` sum, which for records from one stream equals
+        the end-to-end steady/compile split."""
+        acc = StreamingRun()
+        for c in chunks:
+            acc.update(c)
+        return acc.result()
+
+
+class StreamingRun:
+    """Incremental accumulator of per-chunk :class:`NetworkRun` records.
+
+    The streaming counterpart of a monolithic run record:
+    :meth:`NetworkEngine.run_stream` feeds it one chunk at a time and
+    :meth:`result` freezes a :class:`NetworkRun` bit-identical to the
+    monolithic run (see :meth:`NetworkRun.merge`). Live totals —
+    :attr:`ticks`, :attr:`events`, :attr:`energy_j` — update as chunks
+    arrive, so a dashboard can read progress mid-stream.
+    """
+
+    def __init__(self):
+        self._first: Optional[NetworkRun] = None
+        self._last: Optional[NetworkRun] = None
+        self._counts = None            # lif last layer: running spike counts
+        self._out_chunks: list = []
+        self._hidden_chunks: list = []
+        self._energy: list = []
+        self._latency: list = []
+        self._events: list = []
+        self._flush = None
+        self.ticks = 0                 # ticks accumulated so far
+        self.events = 0                # input events accumulated so far
+        self.energy_j = 0.0            # joules accumulated so far (no flush)
+        self.wall_seconds = 0.0
+        self.compile_seconds = 0.0
+
+    def update(self, chunk: NetworkRun) -> "StreamingRun":
+        """Fold the next consecutive chunk record in; returns ``self``."""
+        if self._first is None:
+            self._first = chunk
+            self._flush = np.zeros_like(chunk.flush_energy)
+        elif (chunk.backend != self._first.backend
+                or chunk.mode != self._first.mode
+                or chunk.circuits != self._first.circuits):
+            raise ValueError("cannot merge chunks from different runs: "
+                             f"{chunk.backend}/{chunk.mode} vs "
+                             f"{self._first.backend}/{self._first.mode}")
+        self._last = chunk
+        if chunk.circuits and chunk.circuits[-1] == "lif":
+            c = np.asarray(chunk.outputs, np.int64)
+            self._counts = c if self._counts is None else self._counts + c
+            self._out_chunks.append(chunk.out_spikes)
+        if chunk.layer_spikes is not None:
+            self._hidden_chunks.append(chunk.layer_spikes)
+        self._energy.append(chunk.energy)
+        self._latency.append(chunk.latency)
+        self._events.append(chunk.events)
+        self._flush = self._flush + chunk.flush_energy
+        self.ticks += chunk.energy.shape[0]
+        self.events += int(chunk.events.sum())
+        self.energy_j += float(chunk.energy.sum())
+        self.wall_seconds += chunk.wall_seconds
+        self.compile_seconds += chunk.compile_seconds
+        return self
+
+    def result(self) -> NetworkRun:
+        """Freeze the accumulated chunks into one :class:`NetworkRun`."""
+        if self._first is None or self._last is None:
+            raise ValueError("StreamingRun.result() before any update()")
+        first, last = self._first, self._last
+        last_lif = first.circuits and first.circuits[-1] == "lif"
+        if last_lif:
+            outputs = self._counts.astype(first.outputs.dtype)
+            out_spikes = np.concatenate(self._out_chunks, axis=0)
+        else:
+            outputs = last.outputs
+            out_spikes = None
+        hidden = None
+        if self._hidden_chunks:
+            hidden = [np.concatenate([h[i] for h in self._hidden_chunks],
+                                     axis=0)
+                      for i in range(len(self._hidden_chunks[0]))]
+        return NetworkRun(
+            backend=first.backend, mode=first.mode,
+            outputs=outputs, out_spikes=out_spikes, layer_spikes=hidden,
+            energy=np.concatenate(self._energy, axis=0),
+            latency=np.concatenate(self._latency, axis=0),
+            events=np.concatenate(self._events, axis=0),
+            flush_energy=self._flush,
+            n_circuits=first.n_circuits, clock_ns=first.clock_ns,
+            wall_seconds=self.wall_seconds, circuits=first.circuits,
+            compile_seconds=self.compile_seconds)
 
 
 # --- the engine ----------------------------------------------------------------
@@ -539,6 +708,190 @@ class NetworkEngine:
                              f"{self.spec.layers[0].fan_in}")
         return self._run(x, surrogates=surrogates)
 
+    def run_stream(self, stimulus, *, chunk_ticks: Optional[int] = None,
+                   surrogates=None) -> NetworkRun:
+        """Streaming-chunked :meth:`run`: same record, bounded memory.
+
+        The T axis is cut into ``chunk_ticks``-tick chunks; each chunk
+        runs through one donated-carry compiled program (chunk-to-chunk
+        state and surrogate leaves are aliased in place, never copied)
+        while the PREVIOUS chunk's per-tick records stream to the host —
+        device compute and host fetch double-buffer. The merged
+        :class:`NetworkRun` is bit-identical to ``run()`` on the full
+        stimulus: identical per-tick energy/latency/events, identical
+        spike counts, and the end-of-run idle flush charged exactly once
+        at the true stream end. At most two chunk programs compile (full
+        chunk + remainder when ``T % chunk_ticks != 0``) regardless of
+        stream length, so unbounded-T simulation runs at steady-state
+        speed in bounded device memory.
+
+        stimulus    (T, B, fan_in) array — sliced into chunks — or an
+                    iterator of (t_i, B, fan_in) blocks (e.g. a host
+                    generator producing stimulus on the fly); blocks are
+                    re-buffered to ``chunk_ticks`` when it is given.
+        chunk_ticks ticks per chunk (default: one chunk = whole stimulus).
+        surrogates  as :meth:`run`; additionally an *iterator* of
+                    surrogate libraries hot-swaps predictor weights per
+                    chunk (``None`` entries / exhaustion hold the last) —
+                    equal-structure swaps reuse the compiled programs with
+                    zero recompiles.
+        """
+        acc = StreamingRun()
+        for chunk in self.stream(stimulus, chunk_ticks=chunk_ticks,
+                                 surrogates=surrogates):
+            acc.update(chunk)
+        return acc.result()
+
+    def stream(self, stimulus, *, chunk_ticks: Optional[int] = None,
+               surrogates=None):
+        """Generator variant of :meth:`run_stream` for live consumers.
+
+        Yields one :class:`NetworkRun` per chunk as its records land on
+        the host (chunk ``k`` is fetched while chunk ``k+1`` computes);
+        only the final chunk carries ``flush_energy``. Feed the records to
+        :class:`StreamingRun` / :meth:`NetworkRun.merge` for the exact
+        whole-run record, or consume them incrementally (dashboards,
+        online monitors). Arguments as :meth:`run_stream`.
+
+        Argument errors (bad ``chunk_ticks``, array-stimulus shape
+        mismatch, missing surrogates) raise HERE, not at the first
+        ``next()`` — a dropped or late-consumed generator must not hide
+        them."""
+        spec = self.spec
+        if chunk_ticks is not None and chunk_ticks <= 0:
+            raise ValueError(f"chunk_ticks must be positive: {chunk_ticks}")
+        if hasattr(stimulus, "ndim"):
+            if stimulus.ndim not in (2, 3):
+                raise ValueError("stimulus must be (T, B, n_in) or "
+                                 f"(B, n_in), got shape "
+                                 f"{tuple(stimulus.shape)}")
+            if stimulus.shape[-1] != spec.layers[0].fan_in:
+                raise ValueError(f"input width {stimulus.shape[-1]} != "
+                                 f"layer-0 fan_in "
+                                 f"{spec.layers[0].fan_in}")
+        sur_iter, static_banks = None, None
+        if surrogates is not None and hasattr(surrogates, "__next__"):
+            sur_iter = surrogates
+        else:
+            static_banks = self._runtime_banks(surrogates)
+        return self._stream_gen(stimulus, chunk_ticks, static_banks,
+                                sur_iter)
+
+    def _stream_gen(self, stimulus, chunk_ticks, static_banks, sur_iter):
+        spec = self.spec
+        chunks = _iter_chunks(stimulus, chunk_ticks,
+                              spec.layers[0].fan_in)
+
+        cur = next(chunks, None)
+        if cur is None:
+            raise ValueError("streaming run needs at least one stimulus "
+                             "tick")
+        b = cur.shape[1]
+        self._check_mesh_batch(b)
+        n_layers = spec.n_layers
+        last_lif = spec.circuits[-1] == "lif"
+        carries = [self._init_carry(i, b) for i in range(n_layers)]
+        prev_ys = [jnp.zeros((b, l.n_out), jnp.float32)
+                   for l in spec.layers]
+        banks_dev = None
+        if sur_iter is None:
+            banks_dev = self._donatable_banks(static_banks)
+
+        mark = time.time()             # segment boundary for wall split
+        comp_seg = 0.0                 # compile seconds in current segment
+        pending = None                 # prior chunk's device refs + meta
+        k0 = 0
+
+        def finalize(pend, flush):
+            nonlocal mark, comp_seg
+            primary, out_seq, hidden, e_tl, l_tl, ev_tl, comp_s = pend
+            if not last_lif:
+                out_seq = None       # unused (primary == last tick's codes):
+                                     # skip the per-chunk D2H of the trace
+            primary, out_seq, hidden, e_tl, l_tl, ev_tl = jax.device_get(
+                (primary, out_seq, hidden, e_tl, l_tl, ev_tl))
+            now = time.time()
+            wall = max(now - mark - comp_seg, 0.0)
+            mark, comp_seg = now, 0.0
+            return NetworkRun(
+                backend=self.backend, mode=self.mode,
+                outputs=np.asarray(primary),
+                out_spikes=np.asarray(out_seq) if last_lif else None,
+                layer_spikes=[np.asarray(h) for h in hidden]
+                if self.record_hidden else None,
+                energy=np.asarray(e_tl), latency=np.asarray(l_tl),
+                events=np.asarray(ev_tl, np.int64),
+                flush_energy=flush,
+                n_circuits=np.asarray([l.n_circuits(b)
+                                       for l in spec.layers]),
+                clock_ns=self.clock_ns, wall_seconds=wall,
+                circuits=spec.circuits, compile_seconds=comp_s)
+
+        while cur is not None:
+            x_chunk = jnp.asarray(cur, jnp.float32)
+            if x_chunk.shape[1] != b:
+                raise ValueError(f"stimulus chunk batch {x_chunk.shape[1]} "
+                                 f"!= first chunk batch {b}")
+            if sur_iter is not None:
+                swap = next(sur_iter, None)
+                if swap is not None:
+                    banks_dev = self._donatable_banks(
+                        self._runtime_banks(swap))
+                elif banks_dev is None:
+                    raise ValueError("surrogate iterator must yield a "
+                                     "library for the first chunk")
+            tc = x_chunk.shape[0]
+            k0_arr = jnp.asarray(k0, jnp.float32)
+            key = self._program_key("stream", b, tc, banks_dev)
+            compiled, comp_s = self._compiled(
+                key, lambda: self._build_stream_step(b, banks_dev),
+                (x_chunk, k0_arr, carries, prev_ys, banks_dev))
+            comp_seg += comp_s
+            # dispatch chunk k (async), then fetch chunk k-1's records —
+            # device compute and host transfer overlap (double buffering)
+            outs = compiled(x_chunk, k0_arr, carries, prev_ys, banks_dev)
+            carries, prev_ys, banks_dev = outs[6], outs[7], outs[8]
+            if pending is not None:
+                yield finalize(pending,
+                               np.zeros((n_layers,), np.float32))
+            pending = (*outs[:6], comp_s)
+            k0 += tc
+            if k0 > 2 ** 24 and k0 - tc <= 2 ** 24:
+                # the simulator's time axis (tick index, LasanaState.t_last)
+                # is f32: past 2^24 ticks consecutive tick times collide, so
+                # tau-dependent records (merged-E2 idle energy, flush) lose
+                # precision — the stream keeps running, but say so once
+                warnings.warn(
+                    f"stream passed tick 2^24 ({k0} ticks): f32 tick times "
+                    "can no longer distinguish consecutive ticks; "
+                    "tau-dependent energy records degrade beyond here",
+                    RuntimeWarning, stacklevel=2)
+            cur = next(chunks, None)
+
+        if self.backend == "lasana":
+            t_ends = jnp.asarray([np.float32(k0 * c.clock_ns)
+                                  for c in self.circs])
+            fkey = self._program_key("flush", b, None, banks_dev)
+            flush_fn, comp_s = self._compiled(
+                fkey, lambda: self._build_flush(b, banks_dev),
+                (carries, t_ends, banks_dev))
+            comp_seg += comp_s
+            flush = np.asarray(jax.device_get(
+                flush_fn(carries, t_ends, banks_dev)))
+        else:
+            flush = np.zeros((n_layers,), np.float32)
+        yield finalize(pending, flush)
+
+    @staticmethod
+    def _donatable_banks(banks):
+        """Private on-device copy of a surrogate library.
+
+        The streaming chunk program DONATES its surrogate leaves (they
+        alias straight through to the next chunk), and donation
+        invalidates the caller's buffers — so the stream works on its own
+        copy and the user's surrogate stays usable."""
+        return jax.tree.map(lambda a: jnp.array(a, copy=True), banks)
+
     # --- per-layer state ------------------------------------------------------
 
     def _xbar_row_params(self, i: int, b: int):
@@ -585,7 +938,8 @@ class NetworkEngine:
             # drive is (B_local, n_out): under shard_map the batch dim is
             # shard-local, so every shape below derives from the input
             t = (k + 1.0) * clock
-            xin = drive_to_circuit_inputs(drive).reshape(-1, 3)
+            xin = drive_to_circuit_inputs(drive, spike_amp=amp
+                                          ).reshape(-1, 3)
 
             if backend == "golden":
                 state, params = carry
@@ -607,17 +961,18 @@ class NetworkEngine:
                 v_new, out = circ.behavioral_step(carry.v, xin_m,
                                                   carry.params)
                 ns, e, l, _ = lasana_step(bank, carry, changed, xin, t,
-                                          clock, spiking=True, known_out=out)
+                                          clock, spiking=True, vdd=amp,
+                                          known_out=out)
                 spikes = out
                 carry = ns._replace(v=v_new, o=out)
             else:                                           # standalone
                 ns, e, l, o = lasana_step(bank, carry, changed, xin, t,
-                                          clock, spiking=True)
+                                          clock, spiking=True, vdd=amp)
                 spikes = jnp.where(changed, o, 0.0)
                 carry = ns
 
             spikes = spikes.reshape(-1, n_out)
-            return carry, spikes, e, l, jnp.sum(changed.astype(jnp.float32))
+            return carry, spikes, e, l, _count_events(changed)
 
         return tick
 
@@ -681,12 +1036,17 @@ class NetworkEngine:
             v_adc = (jnp.round((v + circ.v_sat) / (2 * circ.v_sat) * levels)
                      / levels * 2 * circ.v_sat - circ.v_sat)
             y = v_adc.reshape(-1, n_out, n_seg).sum(-1) / gain
-            return carry, y, e, l, jnp.sum(changed.astype(jnp.float32))
+            return carry, y, e, l, _count_events(changed)
 
         return tick
 
-    def _flush(self, carry, i: int, t_steps: int, bank):
+    def _flush(self, carry, i: int, t_end_ns, bank):
         """Charge trailing-idle static energy (merged E2 to the run end).
+
+        ``t_end_ns`` is the run-end time in the layer's native clock units
+        — a Python float in the monolithic program (baked constant), a
+        traced f32 scalar in the streaming flush program (one program
+        serves every total-T, so chunk-count changes never recompile).
 
         Only stateful event-driven kinds (lif) are flushed: combinational
         sample-and-hold crossbar rows charge nothing in the golden
@@ -698,7 +1058,7 @@ class NetworkEngine:
             return jnp.zeros(())
         circ = self.circs[i]
         lst = carry
-        tau = t_steps * circ.clock_ns - lst.t_last
+        tau = t_end_ns - lst.t_last
         n_in = circ.n_inputs
         feats = jnp.concatenate(
             [jnp.zeros((lst.v.shape[0], n_in), jnp.float32),
@@ -708,21 +1068,21 @@ class NetworkEngine:
 
     # --- the unified graph builder --------------------------------------------
 
-    def _build_sim(self, b: int, banks: SurrogateLibrary):
-        """Build the jitted network program for batch ``b``.
+    def _make_cascade(self):
+        """Build the one-network-tick cascade shared by every program.
 
-        ``banks`` is used only for its pytree *structure* (shard specs);
-        the returned program takes the library as a traced argument."""
+        Returns ``cascade(banks, carries, prev_ys, u_in, k) ->
+        (new_carries, new_ys, e (L,), l (L,), events (L,) int32)`` — the
+        exact per-tick dataflow (adapters, event detection, bank steps).
+        The monolithic program and the streaming chunk program both scan
+        THIS closure, which is what makes chunked runs bit-identical to
+        monolithic ones."""
         spec = self.spec
         n_layers = spec.n_layers
         kinds = spec.circuits
         amp = spec.spike_amp
         ticks = [self._lif_tick(i) if kinds[i] == "lif"
                  else self._xbar_tick(i) for i in range(n_layers)]
-        record_hidden = self.record_hidden
-        last_lif = kinds[-1] == "lif"
-        sharded = self.mesh is not None
-        axes = tuple(self.mesh.axis_names) if sharded else ()
 
         # pre-resolved connection tables (weights, connectivity masks,
         # adapter arguments) — one entry per incoming connection per layer
@@ -745,75 +1105,121 @@ class NetworkEngine:
                 return "tanh"
             return spec.layers[src_idx].activation
 
+        def cascade(banks, carries, prev_ys, u_in, k):
+            cur, src_kind, src_idx = u_in, "input", None
+            new_carries, new_ys = [], []
+            es, ls, evs = [], [], []
+            for i in range(n_layers):
+                layer = spec.layers[i]
+                if kinds[i] == "lif":
+                    # combine feed-forward + delayed-edge synaptic drive
+                    u = adapt_signal(src_kind, "lif", cur, spike_amp=amp,
+                                     activation=src_activation(src_idx))
+                    drive = (u @ layer.weight) / amp
+                    pre = (jnp.abs(u) > event_threshold(src_kind, amp)
+                           ).astype(jnp.float32)
+                    incoming = (pre @ ff_conn[i]) > 0.5
+                    for src, we, conn in rec[i]:
+                        ur = adapt_signal(
+                            kinds[src], "lif", prev_ys[src],
+                            spike_amp=amp,
+                            activation=src_activation(src))
+                        drive = drive + (ur @ we) / amp
+                        pr = (jnp.abs(ur)
+                              > event_threshold(kinds[src], amp)
+                              ).astype(jnp.float32)
+                        incoming = incoming | ((pr @ conn) > 0.5)
+                    changed = incoming.reshape(-1)
+                    carry, y, e, l, ev = ticks[i](carries[i], drive,
+                                                  changed, k,
+                                                  banks.get(kinds[i]))
+                else:
+                    circ = self.circs[i]
+                    xv = adapt_signal(src_kind, "crossbar", cur,
+                                      spike_amp=amp,
+                                      activation=src_activation(src_idx))
+                    for src, we, _ in rec[i]:
+                        xv = xv + adapt_signal(
+                            kinds[src], "crossbar", prev_ys[src],
+                            spike_amp=amp,
+                            activation=src_activation(src)) @ we
+                    xv = jnp.clip(xv, circ.input_lo, circ.input_hi)
+                    carry, y, e, l, ev = ticks[i](carries[i], xv, k,
+                                                  banks.get(kinds[i]))
+                new_carries.append(carry)
+                new_ys.append(y)
+                es.append(jnp.sum(e))
+                ls.append(jnp.max(l))
+                evs.append(ev)
+                cur, src_kind, src_idx = y, kinds[i], i
+            return (new_carries, new_ys, jnp.stack(es), jnp.stack(ls),
+                    jnp.stack(evs))
+
+        return cascade
+
+    def _scan_chunk(self, cascade, banks, carries, prev_ys, input_seq, ks):
+        """lax.scan the cascade over one contiguous block of ticks."""
+        record_hidden = self.record_hidden
+
+        def tick(state, xs):
+            carries, prev_ys = state
+            u_in, k = xs
+            new_carries, new_ys, es, ls, evs = cascade(
+                banks, carries, prev_ys, u_in, k)
+            out = (new_ys[-1],
+                   tuple(new_ys) if record_hidden else (),
+                   es, ls, evs)
+            return (new_carries, new_ys), out
+
+        return jax.lax.scan(tick, (list(carries), list(prev_ys)),
+                            (input_seq, ks))
+
+    def _shard_specs(self, b: int, banks):
+        """(carry, prev, seq, hidden, bank) PartitionSpecs for shard_map."""
+        mesh = self.mesh
+        cspec = batch_spec(mesh)                     # flattened (B*n,) arrays
+        carry_specs = [jax.tree.map(lambda _: cspec, self._init_carry(i, b))
+                       for i in range(self.spec.n_layers)]
+        bspec2 = batch_spec(mesh, ndim=2)
+        prev_specs = [bspec2 for _ in range(self.spec.n_layers)]
+        seq_spec = batch_spec(mesh, ndim=3, axis=1)
+        hidden_spec = tuple(seq_spec for _ in range(self.spec.n_layers)) \
+            if self.record_hidden else ()
+        # predictor weights replicate across the mesh (batch is the only
+        # sharded axis); they still enter as traced arguments
+        bank_specs = jax.tree.map(lambda _: P_REPL, banks)
+        return carry_specs, prev_specs, bspec2, seq_spec, hidden_spec, \
+            bank_specs
+
+    def _build_sim(self, b: int, banks: SurrogateLibrary):
+        """Build the jitted monolithic network program for batch ``b``.
+
+        ``banks`` is used only for its pytree *structure* (shard specs);
+        the returned program takes the library as a traced argument."""
+        spec = self.spec
+        n_layers = spec.n_layers
+        kinds = spec.circuits
+        amp = spec.spike_amp
+        cascade = self._make_cascade()
+        last_lif = kinds[-1] == "lif"
+        sharded = self.mesh is not None
+        axes = tuple(self.mesh.axis_names) if sharded else ()
+
         def sim(input_seq, carries, prev0, banks):
             self._trace_count += 1
             t_steps = input_seq.shape[0]
             ks = jnp.arange(t_steps, dtype=jnp.float32)
-
-            def tick(state, xs):
-                carries, prev_ys = state
-                u_in, k = xs
-                cur, src_kind, src_idx = u_in, "input", None
-                new_carries, new_ys = [], []
-                es, ls, evs = [], [], []
-                for i in range(n_layers):
-                    layer = spec.layers[i]
-                    if kinds[i] == "lif":
-                        # combine feed-forward + delayed-edge synaptic drive
-                        u = adapt_signal(src_kind, "lif", cur, spike_amp=amp,
-                                         activation=src_activation(src_idx))
-                        drive = (u @ layer.weight) / amp
-                        pre = (jnp.abs(u) > event_threshold(src_kind, amp)
-                               ).astype(jnp.float32)
-                        incoming = (pre @ ff_conn[i]) > 0.5
-                        for src, we, conn in rec[i]:
-                            ur = adapt_signal(
-                                kinds[src], "lif", prev_ys[src],
-                                spike_amp=amp,
-                                activation=src_activation(src))
-                            drive = drive + (ur @ we) / amp
-                            pr = (jnp.abs(ur)
-                                  > event_threshold(kinds[src], amp)
-                                  ).astype(jnp.float32)
-                            incoming = incoming | ((pr @ conn) > 0.5)
-                        changed = incoming.reshape(-1)
-                        carry, y, e, l, ev = ticks[i](carries[i], drive,
-                                                      changed, k,
-                                                      banks.get(kinds[i]))
-                    else:
-                        circ = self.circs[i]
-                        xv = adapt_signal(src_kind, "crossbar", cur,
-                                          spike_amp=amp,
-                                          activation=src_activation(src_idx))
-                        for src, we, _ in rec[i]:
-                            xv = xv + adapt_signal(
-                                kinds[src], "crossbar", prev_ys[src],
-                                spike_amp=amp,
-                                activation=src_activation(src)) @ we
-                        xv = jnp.clip(xv, circ.input_lo, circ.input_hi)
-                        carry, y, e, l, ev = ticks[i](carries[i], xv, k,
-                                                      banks.get(kinds[i]))
-                    new_carries.append(carry)
-                    new_ys.append(y)
-                    es.append(jnp.sum(e))
-                    ls.append(jnp.max(l))
-                    evs.append(ev)
-                    cur, src_kind, src_idx = y, kinds[i], i
-                out = (new_ys[-1],
-                       tuple(new_ys) if record_hidden else (),
-                       jnp.stack(es), jnp.stack(ls), jnp.stack(evs))
-                return (new_carries, new_ys), out
-
             (carries, _), (out_seq, hidden, e_tl, l_tl, ev_tl) = \
-                jax.lax.scan(tick, (list(carries), list(prev0)),
-                             (input_seq, ks))
+                self._scan_chunk(cascade, banks, carries, prev0,
+                                 input_seq, ks)
             if last_lif:
                 primary = jnp.sum(out_seq > 0.5 * amp, axis=0)
             else:
                 primary = out_seq[-1]
-            flush = jnp.stack([self._flush(carries[i], i, t_steps,
-                                           banks.get(kinds[i]))
-                               for i in range(n_layers)])
+            flush = jnp.stack([
+                self._flush(carries[i], i, t_steps * self.circs[i].clock_ns,
+                            banks.get(kinds[i]))
+                for i in range(n_layers)])
             if sharded:        # diagnostics are the only collectives
                 e_tl = jax.lax.psum(e_tl, axes)
                 l_tl = jax.lax.pmax(l_tl, axes)
@@ -824,24 +1230,98 @@ class NetworkEngine:
         if not sharded:
             return jax.jit(sim)
 
-        mesh = self.mesh
-        cspec = batch_spec(mesh)                     # flattened (B*n,) arrays
-        carry_specs = [jax.tree.map(lambda _: cspec, self._init_carry(i, b))
-                       for i in range(n_layers)]
-        bspec2 = batch_spec(mesh, ndim=2)
-        prev_specs = [bspec2 for _ in range(n_layers)]
-        seq_spec = batch_spec(mesh, ndim=3, axis=1)
-        hidden_spec = tuple(seq_spec for _ in range(n_layers)) \
-            if self.record_hidden else ()
+        carry_specs, prev_specs, bspec2, seq_spec, hidden_spec, bank_specs \
+            = self._shard_specs(b, banks)
         out_specs = (bspec2, seq_spec, hidden_spec,
                      P_REPL, P_REPL, P_REPL, P_REPL)
-        # predictor weights replicate across the mesh (batch is the only
-        # sharded axis); they still enter as traced arguments
-        bank_specs = jax.tree.map(lambda _: P_REPL, banks)
         return shard_over_batch(
-            sim, mesh,
+            sim, self.mesh,
             in_specs=(seq_spec, carry_specs, prev_specs, bank_specs),
             out_specs=out_specs)
+
+    def _build_stream_step(self, b: int, banks: SurrogateLibrary):
+        """Build the donated-carry chunk program for the streaming path.
+
+        ``step(input_seq, k0, carries, prev_ys, banks)`` runs one chunk of
+        ticks starting at global tick ``k0`` (a traced f32 scalar — chunk
+        position never recompiles) and returns
+
+            (primary, out_seq, hidden, e_tl, l_tl, ev_tl,
+             new_carries, new_prev_ys, banks)
+
+        with ``carries``/``prev_ys``/``banks`` DONATED: XLA aliases the
+        chunk-to-chunk state (and the surrogate leaves) in place, so an
+        unbounded-T stream runs in bounded device memory with zero
+        per-chunk copies of state or predictor weights. ``primary`` is the
+        chunk-local reduction of the monolithic program's primary output
+        (per-chunk spike counts for a spiking last layer, last-tick codes
+        otherwise) so :class:`StreamingRun` can merge exactly."""
+        spec = self.spec
+        amp = spec.spike_amp
+        cascade = self._make_cascade()
+        last_lif = spec.circuits[-1] == "lif"
+        sharded = self.mesh is not None
+        axes = tuple(self.mesh.axis_names) if sharded else ()
+
+        def step(input_seq, k0, carries, prev_ys, banks):
+            self._trace_count += 1
+            t_steps = input_seq.shape[0]
+            ks = k0 + jnp.arange(t_steps, dtype=jnp.float32)
+            (carries, prev_ys), (out_seq, hidden, e_tl, l_tl, ev_tl) = \
+                self._scan_chunk(cascade, banks, carries, prev_ys,
+                                 input_seq, ks)
+            if last_lif:
+                primary = jnp.sum(out_seq > 0.5 * amp, axis=0)
+            else:
+                primary = out_seq[-1]
+            if sharded:        # diagnostics are the only collectives
+                e_tl = jax.lax.psum(e_tl, axes)
+                l_tl = jax.lax.pmax(l_tl, axes)
+                ev_tl = jax.lax.psum(ev_tl, axes)
+            return (primary, out_seq, hidden, e_tl, l_tl, ev_tl,
+                    carries, prev_ys, banks)
+
+        donate = (2, 3, 4)             # carries, prev_ys, surrogate leaves
+        if not sharded:
+            return jax.jit(step, donate_argnums=donate)
+
+        carry_specs, prev_specs, bspec2, seq_spec, hidden_spec, bank_specs \
+            = self._shard_specs(b, banks)
+        return shard_over_batch(
+            step, self.mesh,
+            in_specs=(seq_spec, P_REPL, carry_specs, prev_specs, bank_specs),
+            out_specs=(bspec2, seq_spec, hidden_spec, P_REPL, P_REPL, P_REPL,
+                       carry_specs, prev_specs, bank_specs),
+            donate_argnums=donate)
+
+    def _build_flush(self, b: int, banks: SurrogateLibrary):
+        """Build the end-of-stream flush program.
+
+        ``flush_fn(carries, t_ends, banks) -> (L,)`` charges the trailing
+        idle static energy from the FINAL carries, with ``t_ends`` the
+        per-layer run-end times (f32, layer-native clocks) as traced
+        scalars — one compiled flush serves every stream length. Runs the
+        same :meth:`_flush` math the monolithic program embeds, applied
+        exactly once at the true end of the stream."""
+        spec = self.spec
+        kinds = spec.circuits
+        n_layers = spec.n_layers
+        sharded = self.mesh is not None
+
+        def flush_fn(carries, t_ends, banks):
+            flush = jnp.stack([self._flush(carries[i], i, t_ends[i],
+                                           banks.get(kinds[i]))
+                               for i in range(n_layers)])
+            if sharded:
+                flush = jax.lax.psum(flush, tuple(self.mesh.axis_names))
+            return flush
+
+        if not sharded:
+            return jax.jit(flush_fn)
+        carry_specs, _, _, _, _, bank_specs = self._shard_specs(b, banks)
+        return shard_over_batch(flush_fn, self.mesh,
+                                in_specs=(carry_specs, P_REPL, bank_specs),
+                                out_specs=P_REPL)
 
     def _runtime_banks(self, surrogates) -> SurrogateLibrary:
         if self.backend != "lasana":
@@ -862,41 +1342,61 @@ class NetworkEngine:
         return banks
 
     @staticmethod
-    def _program_key(b: int, t_steps: int, banks) -> tuple:
+    def _program_key(kind: str, b: int, t_steps, banks) -> tuple:
         """Cache key of a compiled program: shapes + surrogate structure.
 
-        Two libraries with equal treedefs (manifests included) and equal
-        leaf shapes/dtypes share one executable — a retrained surrogate is
-        a weight swap, not a recompile."""
+        ``kind`` separates the monolithic (``"mono"``), streaming-chunk
+        (``"stream"``) and stream-flush (``"flush"``) programs. Two
+        libraries with equal treedefs (manifests included) and equal leaf
+        shapes/dtypes share one executable — a retrained surrogate is a
+        weight swap, not a recompile."""
         leaves, treedef = jax.tree.flatten(banks)
-        return (b, t_steps, treedef,
+        return (kind, b, t_steps, treedef,
                 tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
 
-    def _run(self, x, *, surrogates=None) -> NetworkRun:
-        spec = self.spec
-        t_steps, b, _ = x.shape
+    def _compiled(self, key, build, example_args):
+        """AOT lower+compile ``build()`` once per cache key.
+
+        Returns ``(compiled, compile_seconds)`` where ``compile_seconds``
+        is 0.0 on cache hits; tick-scan programs (``mono``/``stream``)
+        count toward :attr:`compile_count`, the tiny flush helper does
+        not (it is streaming bookkeeping, not a network program)."""
+        entry = self._sim_cache.get(key)
+        if entry is not None:
+            return entry[0], 0.0
+        fn = build()
+        t0 = time.time()
+        compiled = fn.lower(*example_args).compile()
+        compile_s = time.time() - t0
+        self._sim_cache[key] = (compiled, compile_s)
+        if key[0] != "flush":
+            self.compile_count += 1
+        return compiled, compile_s
+
+    def _check_mesh_batch(self, b: int):
         if self.mesh is not None:
             n_dev = int(np.prod([self.mesh.shape[a]
                                  for a in self.mesh.axis_names]))
             if b % n_dev:
                 raise ValueError(f"batch {b} not divisible by mesh size "
                                  f"{n_dev}")
+
+    def _run(self, x, *, surrogates=None) -> NetworkRun:
+        spec = self.spec
+        t_steps, b, _ = x.shape
+        self._check_mesh_batch(b)
         banks = self._runtime_banks(surrogates)
         carries = [self._init_carry(i, b) for i in range(spec.n_layers)]
         prev0 = [jnp.zeros((b, l.n_out), jnp.float32) for l in spec.layers]
 
-        key = self._program_key(b, t_steps, banks)
-        entry = self._sim_cache.get(key)
-        if entry is None:
-            # AOT-compile once per (shapes, surrogate structure): later runs
-            # — including runs with swapped surrogate weights — only execute
-            sim = self._build_sim(b, banks)
-            t0 = time.time()
-            compiled = sim.lower(x, carries, prev0, banks).compile()
-            entry = (compiled, time.time() - t0)
-            self._sim_cache[key] = entry
-            self.compile_count += 1
-        compiled, compile_s = entry
+        # AOT-compile once per (shapes, surrogate structure): later runs
+        # — including runs with swapped surrogate weights — only execute
+        key = self._program_key("mono", b, t_steps, banks)
+        compiled, compile_s = self._compiled(
+            key, lambda: self._build_sim(b, banks),
+            (x, carries, prev0, banks))
+        if compile_s == 0.0:
+            compile_s = self._sim_cache[key][1]    # historical build time
 
         t0 = time.time()
         primary, out_seq, hidden, e_tl, l_tl, ev_tl, flush = \
@@ -910,7 +1410,7 @@ class NetworkEngine:
             layer_spikes=[np.asarray(h) for h in hidden]
             if self.record_hidden else None,
             energy=np.asarray(e_tl), latency=np.asarray(l_tl),
-            events=np.asarray(ev_tl, np.float64),
+            events=np.asarray(ev_tl, np.int64),
             flush_energy=np.asarray(flush),
             n_circuits=np.asarray([l.n_circuits(b) for l in spec.layers]),
             clock_ns=self.clock_ns, wall_seconds=wall,

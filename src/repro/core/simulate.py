@@ -154,9 +154,10 @@ def run_behavioral(circuit, active, x, params) -> LayerRun:
 # --- LASANA -----------------------------------------------------------------------
 
 @functools.partial(jax.jit,
-                   static_argnames=("clock", "spiking", "oracle", "annotate"))
+                   static_argnames=("clock", "spiking", "oracle", "annotate",
+                                    "vdd"))
 def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
-                clock, spiking, oracle, annotate):
+                clock, spiking, oracle, annotate, vdd=1.5):
     """Algorithm 1 over T ticks; ``surrogate`` is a traced pytree argument.
 
     One compiled program per (shapes, manifest, flags): sweeping retrained
@@ -168,7 +169,7 @@ def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
         if oracle or annotate:
             state = state._replace(v=v_o)
         new_state, e, l, o = lasana_step(surrogate, state, a, xi, t, clock,
-                                         spiking=spiking,
+                                         spiking=spiking, vdd=vdd,
                                          known_out=k_o if annotate else None)
         if annotate:
             # the behavioral model owns outputs AND state; LASANA only
@@ -224,7 +225,8 @@ def run_lasana(surrogate, circuit, active, x, params, *,
 
     out, compile_s, wall = _timed_cached(
         _lasana_sim, surrogate, active, x, params, times, v_oracle, known,
-        clock=clock, spiking=spiking, oracle=oracle, annotate=annotate)
+        clock=clock, spiking=spiking, oracle=oracle, annotate=annotate,
+        vdd=float(getattr(circuit, "vdd", 1.5)))
     outs, states, energy, latency = out
     return LayerRun(outputs=np.asarray(outs), states=np.asarray(states),
                     energy=np.asarray(energy), latency=np.asarray(latency),
@@ -238,10 +240,11 @@ def run_lasana(surrogate, circuit, active, x, params, *,
 # These wrappers keep the historical (counts, total_energy) signature for
 # callers that don't need the full NetworkRun report.
 
-def drive_to_circuit_inputs(drive):
+def drive_to_circuit_inputs(drive, *, spike_amp: float = 1.5,
+                            n_spk: float = 5.0):
     """Aggregate synaptic drive -> (w, x, n) circuit inputs (see DESIGN.md)."""
     from repro.core.network import drive_to_circuit_inputs as _impl
-    return _impl(drive)
+    return _impl(drive, spike_amp=spike_amp, n_spk=n_spk)
 
 
 def run_snn_lasana(surrogate, weights: list, spike_seq, params_per_layer, *,

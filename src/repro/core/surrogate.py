@@ -94,6 +94,17 @@ class Manifest:
         return tuple(p for p, _ in self.families)
 
 
+def _npz_path(path: str) -> str:
+    """Normalize a surrogate artifact path to its on-disk ``.npz`` name.
+
+    ``np.savez_compressed`` silently appends ``.npz`` to extension-less
+    paths, so ``save("foo")`` used to write ``foo.npz`` while
+    ``load("foo")`` looked for (and failed on) ``foo``. Both directions
+    now resolve to the same file whether or not the caller spells the
+    extension."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
 def _feature_names(circuit_name: str) -> tuple:
     try:
         circ = get_circuit(circuit_name)
@@ -284,7 +295,11 @@ class Surrogate:
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
-        """Write one versioned ``.npz``: arrays + JSON ``__manifest__``."""
+        """Write one versioned ``.npz``: arrays + JSON ``__manifest__``.
+
+        ``path`` may omit the ``.npz`` extension; it is normalized so the
+        :meth:`load` round trip works either way."""
+        path = _npz_path(path)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         arrays = {f"{p}/{k}": np.asarray(v)
                   for p, d in self.params.items() for k, v in d.items()}
@@ -304,9 +319,12 @@ class Surrogate:
     def load(cls, path: str) -> "Surrogate":
         """Load a surrogate saved by :meth:`save`.
 
+        ``path`` may omit the ``.npz`` extension (mirroring :meth:`save`).
         Raises ``ValueError`` if the file's format version differs from
         :data:`FORMAT_VERSION` — array schemas are version-specific, so a
         mismatched file must be regenerated, never reinterpreted."""
+        if not os.path.isfile(path):
+            path = _npz_path(path)
         with np.load(path) as z:
             if "__manifest__" not in z.files:
                 raise ValueError(f"{path}: not a Surrogate artifact "

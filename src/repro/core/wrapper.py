@@ -69,7 +69,7 @@ def _features(x, v, tau, params, o_prev=None, o_new=None):
 
 def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
                 out_eps: float = 0.02, spiking: bool = False,
-                known_out=None):
+                known_out=None, vdd: float = 1.5):
     """One digital tick for N circuits (Algorithm 1).
 
     surrogate  a :class:`repro.core.surrogate.Surrogate` — an immutable
@@ -89,6 +89,11 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
              energy/latency. Callers substitute the behavioral state into
              ``state.v`` each tick (there is no staleness to catch up, but
              the merged-E2 *energy* of idle gaps is still accounted).
+    vdd      spiking circuits only: the circuit's supply voltage. A fired
+             spike is resolved to exactly ``vdd`` volts and the spike
+             discriminator sits at ``vdd / 2`` — callers simulating a
+             non-1.5-V_dd circuit MUST thread the circuit's own supply
+             here or outputs silently diverge across backends.
     returns  (new_state, e (N,), l (N,), o (N,))
     """
     n = state.v.shape[0]
@@ -121,8 +126,8 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
 
     # --- lines 23-29: select dynamic vs static by output behaviour
     if spiking:
-        out_changed = o_hat > 0.5 * 1.5          # spike fired this tick
-        o_resolved = jnp.where(out_changed, 1.5, 0.0)
+        out_changed = o_hat > 0.5 * vdd          # spike fired this tick
+        o_resolved = jnp.where(out_changed, vdd, 0.0)
     else:
         out_changed = jnp.abs(o_hat - state.o) > out_eps
         o_resolved = o_hat
@@ -138,7 +143,7 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
     e = e + jnp.where(changed, e_evt, 0.0)
     l = jnp.where(changed, l_evt, 0.0)
     if spiking:
-        o_out = jnp.where(changed, jnp.where(out_changed, 1.5, 0.0), state.o)
+        o_out = jnp.where(changed, jnp.where(out_changed, vdd, 0.0), state.o)
     else:
         o_out = jnp.where(changed, o_hat, state.o)
 
@@ -153,7 +158,7 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
 
 def lasana_step_reference(surrogate, state: LasanaState, changed, x, t,
                           clock_ns, *, out_eps: float = 0.02,
-                          spiking: bool = False):
+                          spiking: bool = False, vdd: float = 1.5):
     """Literal per-circuit transcription of Algorithm 1 (numpy, for tests)."""
     import numpy as np
 
@@ -179,8 +184,8 @@ def lasana_step_reference(surrogate, state: LasanaState, changed, x, t,
         o_hat = float(surrogate.predict_np("M_O", f[None])[0])
         v_new = float(surrogate.predict_np("M_V", f[None])[0])
         if spiking:
-            changed_out = o_hat > 0.75
-            o_res = 1.5 if changed_out else 0.0
+            changed_out = o_hat > 0.5 * vdd
+            o_res = vdd if changed_out else 0.0
         else:
             changed_out = abs(o_hat - o[i]) > out_eps
             o_res = o_hat
@@ -196,7 +201,7 @@ def lasana_step_reference(surrogate, state: LasanaState, changed, x, t,
             e[i] += e_s
         v[i] = v_new
         if spiking:
-            o[i] = 1.5 if changed_out else 0.0
+            o[i] = vdd if changed_out else 0.0
         else:
             o[i] = o_hat
         t_last[i] = t

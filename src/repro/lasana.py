@@ -11,6 +11,10 @@ digital simulation backend. This facade is that pipeline in four calls::
     sur = lasana.load("artifacts/lif.npz")                      # redeploy
     run = lasana.simulate(spec, stimulus, surrogates=sur)       # NetworkRun
 
+Long-horizon workloads stream instead: :func:`simulate_stream` chunks the
+T axis with donated chunk-to-chunk carries (bit-identical record, bounded
+memory) and :func:`stream` yields per-chunk records for live consumers.
+
 Design contract — surrogates are **pytree arguments, not closures**: a
 :class:`Surrogate` is an immutable registered pytree of selected-predictor
 arrays plus a static manifest. ``lasana.simulate`` compiles one network
@@ -33,7 +37,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
-from repro.core.network import NetworkEngine, NetworkRun, NetworkSpec
+from repro.core.network import (NetworkEngine, NetworkRun, NetworkSpec,
+                                StreamingRun)
 from repro.core.surrogate import (FORMAT_VERSION, Manifest, Surrogate,
                                   SurrogateLibrary)
 
@@ -41,6 +46,7 @@ __all__ = [
     "FORMAT_VERSION",
     "Manifest",
     "NetworkRun",
+    "StreamingRun",
     "Surrogate",
     "SurrogateLibrary",
     "TrainConfig",
@@ -48,6 +54,8 @@ __all__ = [
     "load",
     "save",
     "simulate",
+    "simulate_stream",
+    "stream",
     "train",
 ]
 
@@ -97,15 +105,17 @@ def train(circuit: str, cfg: Optional[TrainConfig] = None, *,
 def save(surrogate, path: str) -> None:
     """Persist a :class:`Surrogate` (one ``.npz`` file) or a
     :class:`SurrogateLibrary` (a directory of ``{kind}.npz``) — alias of
-    the artifact's own ``save``."""
+    the artifact's own ``save``. Surrogate paths may omit the ``.npz``
+    extension; ``save``/``load`` normalize it identically."""
     surrogate.save(path)
 
 
 def load(path: str):
     """Load the artifact at ``path`` saved by :func:`save`.
 
-    A file loads as a :class:`Surrogate`; a directory loads as a
-    :class:`SurrogateLibrary` (the mixed-graph round trip mirrors the
+    A file loads as a :class:`Surrogate` (with or without the ``.npz``
+    extension spelled out, mirroring :func:`save`); a directory loads as
+    a :class:`SurrogateLibrary` (the mixed-graph round trip mirrors the
     single-surrogate one). Raises ``ValueError`` on a format-version
     mismatch (artifacts are versioned; see
     ``repro.core.surrogate.FORMAT_VERSION``)."""
@@ -181,3 +191,51 @@ def simulate(spec: NetworkSpec, stimulus, *, backend: str = "lasana",
     return engine(spec, backend=backend, mode=mode, mesh=mesh,
                   record_hidden=record_hidden).run(stimulus,
                                                    surrogates=surrogates)
+
+
+def simulate_stream(spec: NetworkSpec, stimulus, *,
+                    chunk_ticks: Optional[int] = None,
+                    backend: str = "lasana", surrogates=None,
+                    mode: str = "standalone", mesh=None,
+                    record_hidden: bool = False) -> NetworkRun:
+    """Streaming-chunked :func:`simulate`: same record, bounded memory.
+
+    The stimulus T axis is cut into ``chunk_ticks``-tick chunks; each
+    chunk runs through one donated-carry compiled program (chunk-to-chunk
+    state and surrogate leaves alias in place) while the previous chunk's
+    records stream to the host asynchronously — long-horizon workloads run
+    at steady-state speed without ever materializing a ``(T, ...)`` trace
+    on device. The returned :class:`NetworkRun` is **bit-identical** to
+    ``simulate(spec, stimulus, ...)`` for every chunk size, including the
+    end-of-run idle flush (charged once, at the true stream end) and the
+    compile-vs-steady wall split. At most two chunk programs compile per
+    (batch, chunk shape, surrogate structure) regardless of stream length.
+
+    ``stimulus`` may also be an *iterator* of (t_i, B, fan_in) blocks (a
+    host generator producing drive on the fly), and ``surrogates`` an
+    iterator of libraries to hot-swap predictor weights per chunk with
+    zero recompiles. ``record_hidden`` defaults to False here — keeping
+    per-layer traces of an unbounded stream defeats the point, so opt in
+    explicitly for parity tests."""
+    return engine(spec, backend=backend, mode=mode, mesh=mesh,
+                  record_hidden=record_hidden).run_stream(
+                      stimulus, chunk_ticks=chunk_ticks,
+                      surrogates=surrogates)
+
+
+def stream(spec: NetworkSpec, stimulus, *,
+           chunk_ticks: Optional[int] = None, backend: str = "lasana",
+           surrogates=None, mode: str = "standalone", mesh=None,
+           record_hidden: bool = False):
+    """Generator variant of :func:`simulate_stream` for live consumers.
+
+    Yields one per-chunk :class:`NetworkRun` as its records land on the
+    host (chunk k is fetched while chunk k+1 computes); only the final
+    chunk carries ``flush_energy``. Feed the chunks to
+    :class:`StreamingRun` (or :meth:`NetworkRun.merge`) for the exact
+    whole-run record, or consume them incrementally — live dashboards,
+    online energy monitors, early stopping."""
+    return engine(spec, backend=backend, mode=mode, mesh=mesh,
+                  record_hidden=record_hidden).stream(
+                      stimulus, chunk_ticks=chunk_ticks,
+                      surrogates=surrogates)

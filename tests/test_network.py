@@ -354,3 +354,27 @@ def test_edge_and_bank_validation(mixed_net):
     oob = graph_spec([lif_layer(w, p)], edges=[EdgeSpec(0, 5, jnp.ones((3, 3)))])
     with pytest.raises(ValueError, match="out of range"):
         NetworkEngine(oob, backend="behavioral")
+
+
+# --- integer event accounting (ISSUE-4) ---------------------------------------
+
+def test_event_counts_are_exact_integers(net_bank, tiny_net):
+    """ISSUE-4 regression: per-tick event counts used to accumulate as
+    fp32, silently dropping whole events past 2^24 per tick/layer (dry-run
+    scales reach 2^27 circuits). The counting primitive must be exact
+    where fp32 demonstrably is not, and the run record must carry integer
+    counts end-to-end."""
+    from repro.core.network import _count_events
+    n = 2 ** 24 + 3
+    mask = jnp.ones((n,), bool)
+    exact = int(_count_events(mask))
+    assert exact == n
+    # the old fp32 formulation loses the tail at exactly this scale
+    fp32 = int(jnp.sum(mask.astype(jnp.float32)))
+    assert fp32 != n
+    spec, spikes = tiny_net
+    run = NetworkEngine(spec, backend="lasana", surrogates=net_bank
+                        ).run(spikes)
+    assert np.issubdtype(run.events.dtype, np.integer)
+    assert (run.events >= 0).all()
+    assert run.report()["network"]["events"] == int(run.events.sum())

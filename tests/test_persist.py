@@ -195,3 +195,35 @@ def test_loaded_surrogate_runs_algorithm1(tmp_path, lif_bank_mlp):
     x = circ.sample_inputs(key, (n,))
     s, e, l, o = lasana_step(sur, state, changed, x, 5.0, 5.0, spiking=True)
     assert np.all(np.isfinite(np.asarray(e)))
+
+
+def test_save_load_path_extension_normalized(tmp_path, lif_bank):
+    """ISSUE-4 regression: ``save("foo")`` writes ``foo.npz`` (numpy
+    appends the extension), so ``load("foo")`` used to fail. Both
+    spellings now round-trip, through the class API and the facade."""
+    import os
+
+    import repro.lasana as lasana
+    from repro.core.surrogate import SurrogateLibrary
+    sur = lif_bank.to_surrogate()
+    bare = str(tmp_path / "artifact")
+    sur.save(bare)
+    assert os.path.exists(bare + ".npz") and not os.path.exists(bare)
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(8, 9)).astype(np.float32))
+    want = np.asarray(sur.predict("M_O", x))
+    for spec in (bare, bare + ".npz"):
+        loaded = Surrogate.load(spec)
+        np.testing.assert_array_equal(want,
+                                      np.asarray(loaded.predict("M_O", x)))
+        np.testing.assert_array_equal(
+            want, np.asarray(lasana.load(spec).predict("M_O", x)))
+    # explicit-extension saves are untouched (no double extension)
+    sur.save(str(tmp_path / "explicit.npz"))
+    assert os.path.exists(tmp_path / "explicit.npz")
+    assert not os.path.exists(tmp_path / "explicit.npz.npz")
+    # the library round trip (directory of {kind}.npz) keeps working
+    lib = SurrogateLibrary({"lif": sur})
+    lib.save(str(tmp_path / "lib"))
+    loaded_lib = lasana.load(str(tmp_path / "lib"))
+    assert loaded_lib.kinds() == ("lif",)
