@@ -130,6 +130,23 @@ def run(full: bool = False):
                  and np.array_equal(run_m.events, run_s.events)
                  and np.array_equal(run_m.flush_energy, run_s.flush_energy))
 
+    # ISSUE-5 fused A/B: the same stream through the per-predict-call
+    # formulation — fusion must not cost streaming throughput, and the
+    # two records must agree (discrete exactly, energies to rtol 1e-5)
+    from repro.core.network import NetworkEngine
+    eng_u = NetworkEngine(spec, record_hidden=False, fused=False)
+    run_u, _, _ = warm_timed(
+        lambda: eng_u.run_stream(_stimulus_blocks(t_steps),
+                                 chunk_ticks=CHUNK_TICKS,
+                                 surrogates=banks))
+    rep_u = run_u.report()["network"]
+    fused_ratio = rep_s["events_per_sec"] / max(rep_u["events_per_sec"],
+                                                1e-9)
+    fused_parity = (np.array_equal(run_s.outputs, run_u.outputs)
+                    and np.array_equal(run_s.events, run_u.events)
+                    and np.allclose(run_s.energy, run_u.energy,
+                                    rtol=1e-5, atol=1e-20))
+
     # surrogate hot-swap across chunks must reuse the compiled programs
     compiles = eng.compile_count
     lif2 = lasana.train("lif", lasana.TrainConfig(
@@ -151,7 +168,10 @@ def run(full: bool = False):
         "mono_cold_call_seconds": cold_m,
         "events_per_sec_stream": rep_s["events_per_sec"],
         "events_per_sec_mono": rep_m["events_per_sec"],
+        "events_per_sec_stream_unfused": rep_u["events_per_sec"],
         "stream_over_mono": ratio,
+        "fused_over_unfused_stream": fused_ratio,
+        "fused_parity": bool(fused_parity),
         "rss_kb_baseline": rss0,
         "peak_rss_kb_stream": p_stream.peak_kb,
         "peak_rss_kb_mono": p_mono.peak_kb,
@@ -164,6 +184,8 @@ def run(full: bool = False):
     emit("streaming/events_per_sec_mono", rep_m["events_per_sec"])
     emit("streaming/ratio", ratio,
          f"bit_identical={identical} swap_recompiles={swap_recompiles}")
+    emit("streaming/fused_over_unfused", fused_ratio,
+         f"record_parity={fused_parity}")
     emit("streaming/peak_rss_delta_kb_stream",
          p_stream.peak_kb - rss0,
          f"mono peaks {p_mono.peak_kb - rss0} kb over the same baseline")

@@ -41,19 +41,27 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
-def warm_timed(fn, *args, repeats: int = 1, **kw):
+def warm_timed(fn, *args, repeats: int = 1, stat: str = "mean", **kw):
     """Explicit-warmup timing: (last_result, cold_seconds, steady_seconds).
 
     ``cold_seconds`` is the first call (trace + compile + execute);
-    ``steady_seconds`` is the mean of ``repeats`` subsequent calls. Use for
-    any measured callable that jit-compiles lazily on first call."""
+    ``steady_seconds`` aggregates ``repeats`` subsequent calls — the mean
+    by default, or the minimum with ``stat="min"`` (the noise-robust
+    statistic for A/B comparisons on shared machines, where occasional
+    contention inflates individual calls). Use for any measured callable
+    that jit-compiles lazily on first call."""
+    if stat not in ("mean", "min"):
+        raise ValueError(f"stat must be 'mean' or 'min': {stat!r}")
     t0 = time.time()
     out = fn(*args, **kw)
     cold = time.time() - t0
-    t0 = time.time()
-    for _ in range(repeats):
+    times = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.time()
         out = fn(*args, **kw)
-    return out, cold, (time.time() - t0) / max(repeats, 1)
+        times.append(time.time() - t0)
+    steady = min(times) if stat == "min" else sum(times) / len(times)
+    return out, cold, steady
 
 
 def save_json(name: str, obj):

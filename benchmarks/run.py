@@ -1,9 +1,14 @@
 """Benchmark harness — one entry per paper table (+ the roofline report).
 
-``PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]``
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+[--json BENCH.json]``
 
 Prints ``name,us_per_call,derived`` CSV lines and writes JSON records under
-results/benchmarks/.
+results/benchmarks/. ``--json PATH`` additionally writes ONE
+machine-readable trajectory record: a headline ``summary`` (events/s,
+fused speedup, peak RSS, compile vs steady seconds) over the full
+per-suite records — the perf baseline future PRs diff against (see
+``BENCH_5.json`` at the repo root).
 
   table1    model training/testing times            (paper Table I)
   table2    predictor accuracy MSE/MAPE             (paper Table II)
@@ -18,8 +23,51 @@ results/benchmarks/.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def _get(record, *path):
+    """Nested dict lookup that tolerates missing suites/fields."""
+    cur = record
+    for key in path:
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def _summary(records: dict) -> dict:
+    """The headline trajectory numbers future PRs diff against."""
+    net = records.get("network") or {}
+    stream = records.get("streaming") or {}
+    return {
+        # throughput
+        "events_per_sec_engine": _get(net, "events_per_sec_engine"),
+        "events_per_sec_fused": _get(net, "fused_ab",
+                                     "events_per_sec_fused"),
+        "events_per_sec_unfused": _get(net, "fused_ab",
+                                       "events_per_sec_unfused"),
+        "events_per_sec_stream": _get(stream, "events_per_sec_stream"),
+        # the ISSUE-5 headline
+        "fused_speedup": _get(net, "fused_ab", "fused_speedup"),
+        "fused_hlo_dots": _get(net, "fused_ab", "hlo_fused", "dots"),
+        "unfused_hlo_dots": _get(net, "fused_ab", "hlo_unfused", "dots"),
+        "fused_over_unfused_stream": _get(stream,
+                                          "fused_over_unfused_stream"),
+        # memory
+        "peak_rss_kb_stream": _get(stream, "peak_rss_kb_stream"),
+        "peak_rss_kb_mono": _get(stream, "peak_rss_kb_mono"),
+        # compile vs steady split
+        "compile_seconds_fused": _get(net, "fused_ab",
+                                      "fused_compile_seconds"),
+        "steady_seconds_fused": _get(net, "fused_ab",
+                                     "fused_steady_seconds"),
+        "steady_seconds_unfused": _get(net, "fused_ab",
+                                       "unfused_steady_seconds"),
+    }
 
 
 def main() -> None:
@@ -29,6 +77,9 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: table1,table2,table3,table4,network,"
                          "mixed,streaming,roofline")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write one machine-readable trajectory record "
+                         "(summary + per-suite outputs) to PATH")
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_mixed, bench_models,
@@ -46,10 +97,47 @@ def main() -> None:
     }
     only = [s for s in args.only.split(",") if s] or list(suites)
     print("name,us_per_call,derived")
+    records: dict = {}
+    wall: dict = {}
+    aborted = None        # a suite's acceptance SystemExit (smoke gates)
     for name in only:
         t0 = time.time()
-        suites[name](full=args.full)
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        try:
+            records[name] = suites[name](full=args.full)
+        except SystemExit as e:
+            # acceptance gates (fused floor, record parity) abort the run
+            # — but the trajectory record must still be written below, or
+            # the numbers needed to DIAGNOSE the failure are lost; gates
+            # attach their measurements to the exception (bench_record)
+            records[name] = {"aborted": str(e) or "SystemExit",
+                             **(getattr(e, "bench_record", None) or {})}
+            aborted = e
+        wall[name] = time.time() - t0
+        print(f"# {name} done in {wall[name]:.1f}s", file=sys.stderr)
+        if aborted is not None:
+            break
+
+    if args.json:
+        import jax
+        payload = {
+            "schema": 1,
+            "generated_by": "benchmarks.run",
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "full": bool(args.full),
+            "smoke": bool(os.environ.get("REPRO_BENCH_SMOKE")),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "suites_run": only,
+            "aborted": str(aborted) if aborted is not None else None,
+            "suite_wall_seconds": wall,
+            "summary": _summary(records),
+            "suites": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    if aborted is not None:
+        raise aborted
 
 
 if __name__ == "__main__":

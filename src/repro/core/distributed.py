@@ -63,7 +63,8 @@ def shard_over_batch(fn, mesh: Mesh, in_specs, out_specs,
 
 
 def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
-                  spiking: bool = False, vdd: float = 1.5):
+                  spiking: bool = False, vdd: float = 1.5,
+                  fused: bool = True):
     """jit(shard_map) of one Algorithm-1 tick; surrogate is argument 0.
 
     ``surrogate_template`` supplies only the pytree *structure* for the
@@ -74,7 +75,8 @@ def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
 
     def body(surrogate, state, changed, x, t):
         new_state, e, l, o = lasana_step(surrogate, state, changed, x, t[0],
-                                         clock_ns, spiking=spiking, vdd=vdd)
+                                         clock_ns, spiking=spiking, vdd=vdd,
+                                         fused=fused)
         e_tot = jax.lax.psum(jnp.sum(e), tuple(mesh.axis_names))
         # spike counts are integers: fp32 accumulation silently loses
         # whole events past 2^24 per tick at dry-run scales (2^27 circuits)
@@ -89,7 +91,8 @@ def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
 
 
 def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
-                          spiking: bool = False, vdd: float = 1.5):
+                          spiking: bool = False, vdd: float = 1.5,
+                          fused: bool = True):
     """(surrogate, state, changed, x, t) -> (state, e_total, spikes_total).
 
     Returns a callable that shard_maps one tick over ``mesh``. The
@@ -97,7 +100,9 @@ def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
     retrained surrogates of identical structure reuse one compiled program
     (the program cache is keyed on the surrogate's treedef).
     ``spikes_total`` is an exact int32 count; ``vdd`` is the spiking
-    circuit's supply voltage (spike resolution + discriminator level).
+    circuit's supply voltage (spike resolution + discriminator level);
+    ``fused`` selects the fused ``predict_heads`` tick body (default) vs
+    the per-``predict``-call baseline.
 
     Legacy call style ``make_distributed_step(bank, mesh, ...)`` (surrogate
     closed over, returned callable takes ``(state, changed, x, t)``) is
@@ -120,20 +125,24 @@ def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
             "the step's first argument", DeprecationWarning, stacklevel=2)
         surrogate = as_surrogate(mesh)
         fn = _sharded_step(_legacy_mesh, surrogate, clock_ns=clock_ns,
-                           spiking=spiking, vdd=vdd)
+                           spiking=spiking, vdd=vdd, fused=fused)
         return lambda state, changed, x, t: fn(surrogate, state, changed,
                                                x, t)
 
     cache: dict = {}
 
     def step(surrogate, state, changed, x, t):
+        from repro.core.surrogate import _kernel_heads_enabled
         surrogate = as_surrogate(surrogate)
-        sdef = jax.tree.structure(surrogate)
-        fn = cache.get(sdef)
+        # the REPRO_FUSED_KERNEL switch selects a different traced body,
+        # so it joins the treedef in the program cache key — flipping it
+        # mid-process recompiles cleanly instead of silently reusing
+        key = (jax.tree.structure(surrogate), _kernel_heads_enabled())
+        fn = cache.get(key)
         if fn is None:
             fn = _sharded_step(mesh, surrogate, clock_ns=clock_ns,
-                               spiking=spiking, vdd=vdd)
-            cache[sdef] = fn
+                               spiking=spiking, vdd=vdd, fused=fused)
+            cache[key] = fn
         return fn(surrogate, state, changed, x, t)
 
     return step
@@ -155,7 +164,8 @@ def abstract_sim_inputs(n_circuits: int, n_in: int, n_params: int):
 
 def lower_distributed_step(surrogate, mesh: Mesh, n_circuits: int, n_in: int,
                            n_params: int, *, clock_ns: float,
-                           spiking: bool = False, vdd: float = 1.5):
+                           spiking: bool = False, vdd: float = 1.5,
+                           fused: bool = True):
     """Lower one sharded simulation tick from ShapeDtypeStructs (dry-run).
 
     ``surrogate`` may be a Surrogate or a legacy PredictorBank; its arrays
@@ -163,7 +173,7 @@ def lower_distributed_step(surrogate, mesh: Mesh, n_circuits: int, n_in: int,
     abstract."""
     surrogate = as_surrogate(surrogate)
     step = _sharded_step(mesh, surrogate, clock_ns=clock_ns, spiking=spiking,
-                         vdd=vdd)
+                         vdd=vdd, fused=fused)
     args = abstract_sim_inputs(n_circuits, n_in, n_params)
     with mesh:
         return step.lower(surrogate, *args)

@@ -588,11 +588,18 @@ class NetworkEngine:
     mesh     optional jax Mesh: shard the batch axis over every mesh axis
     record_hidden  keep per-layer output traces (tests/parity); disable for
              large sweeps to save host memory
+    fused    lasana only: take the fused inference hot path
+             (``Surrogate.predict_heads`` — one feature build + stacked
+             same-family predictor passes per tick) in every compiled
+             program: monolithic, streaming, and shard_map. Default True;
+             ``fused=False`` compiles the per-``predict``-call
+             formulation (the benchmark A/B baseline — results agree
+             within a few ULPs, see tests/test_fused.py).
     """
 
     def __init__(self, spec: NetworkSpec, backend: str = "lasana", *,
                  surrogates=None, bank=None, mode: str = "standalone",
-                 mesh=None, record_hidden: bool = True):
+                 mesh=None, record_hidden: bool = True, fused: bool = True):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
         if mode not in MODES:
@@ -606,6 +613,7 @@ class NetworkEngine:
         self.mode = mode if backend == "lasana" else "standalone"
         self.mesh = mesh
         self.record_hidden = record_hidden
+        self.fused = bool(fused)
         self.circs = tuple(get_circuit(l.circuit) for l in spec.layers)
         if bank is not None:
             warnings.warn(
@@ -933,6 +941,7 @@ class NetworkEngine:
         clock = circ.clock_ns
         n_out = layer.n_out
         backend, mode = self.backend, self.mode
+        fused = self.fused
 
         def tick(carry, drive, changed, k, bank):
             # drive is (B_local, n_out): under shard_map the batch dim is
@@ -962,12 +971,13 @@ class NetworkEngine:
                                                   carry.params)
                 ns, e, l, _ = lasana_step(bank, carry, changed, xin, t,
                                           clock, spiking=True, vdd=amp,
-                                          known_out=out)
+                                          known_out=out, fused=fused)
                 spikes = out
                 carry = ns._replace(v=v_new, o=out)
             else:                                           # standalone
                 ns, e, l, o = lasana_step(bank, carry, changed, xin, t,
-                                          clock, spiking=True, vdd=amp)
+                                          clock, spiking=True, vdd=amp,
+                                          fused=fused)
                 spikes = jnp.where(changed, o, 0.0)
                 carry = ns
 
@@ -991,6 +1001,7 @@ class NetworkEngine:
         gain = -circ.r_f * circ.g_unit
         levels = 2 ** layer.adc_bits - 1
         backend, mode = self.backend, self.mode
+        fused = self.fused
 
         def tick(carry, x, k, bank):
             # x is (B_local, fan_in) volts: under shard_map the batch dim is
@@ -1025,7 +1036,8 @@ class NetworkEngine:
                     _, known = circ.behavioral_step(carry.v, xin,
                                                     carry.params)
                 ns, e, l, _ = lasana_step(bank, carry, changed, xin, t,
-                                          clock, known_out=known)
+                                          clock, known_out=known,
+                                          fused=fused)
                 if known is not None:
                     # behavioral value is both published output and state
                     ns = ns._replace(v=ns.o)
@@ -1341,17 +1353,22 @@ class NetworkEngine:
                 "run()")
         return banks
 
-    @staticmethod
-    def _program_key(kind: str, b: int, t_steps, banks) -> tuple:
+    def _program_key(self, kind: str, b: int, t_steps, banks) -> tuple:
         """Cache key of a compiled program: shapes + surrogate structure.
 
         ``kind`` separates the monolithic (``"mono"``), streaming-chunk
-        (``"stream"``) and stream-flush (``"flush"``) programs. Two
+        (``"stream"``) and stream-flush (``"flush"``) programs; the
+        engine's ``fused`` flag AND the ``REPRO_FUSED_KERNEL`` env switch
+        are part of the key because they select a different traced
+        inference body (without the env flag in the key, flipping it
+        after the first run would silently reuse the old program). Two
         libraries with equal treedefs (manifests included) and equal leaf
         shapes/dtypes share one executable — a retrained surrogate is a
         weight swap, not a recompile."""
+        from repro.core.surrogate import _kernel_heads_enabled
         leaves, treedef = jax.tree.flatten(banks)
-        return (kind, b, t_steps, treedef,
+        return (kind, self.fused, _kernel_heads_enabled(), b, t_steps,
+                treedef,
                 tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
 
     def _compiled(self, key, build, example_args):

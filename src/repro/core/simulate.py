@@ -155,13 +155,19 @@ def run_behavioral(circuit, active, x, params) -> LayerRun:
 
 @functools.partial(jax.jit,
                    static_argnames=("clock", "spiking", "oracle", "annotate",
-                                    "vdd"))
+                                    "vdd", "fused", "kernel_heads"))
 def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
-                clock, spiking, oracle, annotate, vdd=1.5):
+                clock, spiking, oracle, annotate, vdd=1.5, fused=True,
+                kernel_heads=False):
     """Algorithm 1 over T ticks; ``surrogate`` is a traced pytree argument.
 
     One compiled program per (shapes, manifest, flags): sweeping retrained
-    surrogates through this entry point never recompiles."""
+    surrogates through this entry point never recompiles. ``fused``
+    selects the fused ``predict_heads`` tick body (default) vs the
+    per-``predict``-call baseline. ``kernel_heads`` mirrors the
+    ``REPRO_FUSED_KERNEL`` env switch purely as a cache key — the flag is
+    read at trace time inside the surrogate, so without it here a flip
+    after the first call would silently reuse the old program."""
     state0 = init_state(params.shape[0], params)
 
     def step(state, xs):
@@ -170,7 +176,8 @@ def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
             state = state._replace(v=v_o)
         new_state, e, l, o = lasana_step(surrogate, state, a, xi, t, clock,
                                          spiking=spiking, vdd=vdd,
-                                         known_out=k_o if annotate else None)
+                                         known_out=k_o if annotate else None,
+                                         fused=fused)
         if annotate:
             # the behavioral model owns outputs AND state; LASANA only
             # annotates energy/latency (cf. the network engine's _lif_tick)
@@ -185,7 +192,8 @@ def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
 
 def run_lasana(surrogate, circuit, active, x, params, *,
                oracle_states: Optional[np.ndarray] = None,
-               annotate_outputs: Optional[np.ndarray] = None) -> LayerRun:
+               annotate_outputs: Optional[np.ndarray] = None,
+               fused: bool = True) -> LayerRun:
     """Algorithm 1 over T ticks.
 
     surrogate        — a trained :class:`Surrogate` (legacy ``PredictorBank``
@@ -197,6 +205,8 @@ def run_lasana(surrogate, circuit, active, x, params, *,
                        ``oracle_states`` (annotation has no staleness to
                        predict; running it at v=0 would silently corrupt
                        the energy/latency features, so that is an error).
+    fused            — fused ``predict_heads`` tick body (default) vs the
+                       per-``predict``-call baseline (A/B benchmarks).
     """
     if annotate_outputs is not None and oracle_states is None:
         raise ValueError(
@@ -223,10 +233,12 @@ def run_lasana(surrogate, circuit, active, x, params, *,
     known = (jnp.asarray(annotate_outputs, jnp.float32) if annotate
              else jnp.zeros((t_steps, n), jnp.float32))
 
+    from repro.core.surrogate import _kernel_heads_enabled
     out, compile_s, wall = _timed_cached(
         _lasana_sim, surrogate, active, x, params, times, v_oracle, known,
         clock=clock, spiking=spiking, oracle=oracle, annotate=annotate,
-        vdd=float(getattr(circuit, "vdd", 1.5)))
+        vdd=float(getattr(circuit, "vdd", 1.5)), fused=fused,
+        kernel_heads=_kernel_heads_enabled())
     outs, states, energy, latency = out
     return LayerRun(outputs=np.asarray(outs), states=np.asarray(states),
                     energy=np.asarray(energy), latency=np.asarray(latency),

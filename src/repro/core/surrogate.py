@@ -167,6 +167,91 @@ FAMILY_PREDICT = {
 }
 
 
+# --- stacked (multi-head) family inference --------------------------------------
+#
+# The fused hot path (Surrogate.predict_heads) evaluates every same-family
+# head that shares one feature matrix in ONE batched pass: per-head arrays
+# stack along a new leading P axis AT TRACE TIME (pytree leaves are
+# untouched, so the artifact format and the compiled-program cache keys
+# stay exactly as before — XLA hoists the loop-invariant stacks out of the
+# tick scan). Batched dots reassociate reductions, so stacked results may
+# differ from the per-head functions by a few ULPs (documented tolerance:
+# rtol 1e-5); single-head groups bypass stacking and stay bit-identical.
+
+def _stack_arrays(heads) -> dict:
+    """[{k: (..)}] x P -> {k: (P, ..)} — trace-time leaf stacking."""
+    return {k: jnp.stack([a[k] for a in heads]) for k in heads[0]}
+
+
+def _predict_mean_stacked(heads, x):
+    mus = jnp.stack([jnp.asarray(a["mu"], jnp.float32).reshape(())
+                     for a in heads])
+    return jnp.broadcast_to(mus[:, None], (len(heads), x.shape[0]))
+
+
+def _predict_linear_stacked(heads, x):
+    s = _stack_arrays(heads)
+    xs = (x[None] - s["mu"][:, None]) / s["sd"][:, None]
+    return jnp.einsum("pnf,pf->pn", xs, s["w"][:, :-1]) + s["w"][:, -1:]
+
+
+def _predict_table_stacked(heads, x):
+    s = _stack_arrays(heads)
+    xs = (x[None] - s["mu"][:, None]) / s["sd"][:, None]
+    d = jnp.sum(jnp.square(s["tx"]), -1)[:, None, :] \
+        - 2.0 * jnp.einsum("pnf,prf->pnr", xs, s["tx"])
+    return jnp.take_along_axis(s["ty"], jnp.argmin(d, axis=2), axis=1)
+
+
+def _predict_mlp_stacked(heads, x):
+    s = _stack_arrays(heads)
+    n_layers = sum(1 for k in heads[0] if k.startswith("w"))
+    if n_layers == 3 and _kernel_heads_enabled():
+        # production MLP(100, 50) config on the Pallas multi-head kernel:
+        # all P heads' weights stay resident in VMEM, grid over N-blocks
+        from repro.kernels import ops
+        return ops.mlp_surrogate_heads(
+            x, s["x_mu"], s["x_sd"], s["y_mu"], s["y_sd"],
+            s["w0"], s["b0"], s["w1"], s["b1"], s["w2"], s["b2"])
+    h = (x[None] - s["x_mu"][:, None]) / s["x_sd"][:, None]
+    for i in range(n_layers):
+        h = jnp.einsum("pnf,pfh->pnh", h, s[f"w{i}"]) + s[f"b{i}"][:, None]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0] * s["y_sd"][:, :1] + s["y_mu"][:, :1]
+
+
+FAMILY_PREDICT_STACKED = {
+    "mean": _predict_mean_stacked,
+    "linear": _predict_linear_stacked,
+    "table": _predict_table_stacked,
+    "mlp": _predict_mlp_stacked,
+    # gbdt: per-head traversal only (tree tables rarely share shapes and
+    # the gather-heavy walk gains nothing from a batch axis); it still
+    # shares the once-built augmented features with every other family.
+}
+
+
+def _kernel_heads_enabled() -> bool:
+    """Dispatch stacked MLP heads to the fused Pallas multi-head kernel.
+
+    Off by default: the einsum path compiles to the same batched dots on
+    every backend, while the kernel path (REPRO_FUSED_KERNEL=1) keeps all
+    heads' weights resident in VMEM and grids only over N-blocks — the
+    layout built for real TPUs (kernels/mlp_surrogate.py)."""
+    import os
+    return os.environ.get("REPRO_FUSED_KERNEL", "0") == "1"
+
+
+# the Algorithm-1 head schedule: which predictors read which of the three
+# per-tick feature variants (wrapper.lasana_step builds exactly these)
+ALG1_HEADS = {
+    "idle": ("M_ES", "M_V"),
+    "act": ("M_O", "M_V", "M_ES"),
+    "tr": ("M_ED", "M_L"),
+}
+
+
 def _model_arrays(model) -> tuple:
     """Freeze a fitted ``models.SurrogateModel`` -> (family, arrays dict).
 
@@ -285,6 +370,103 @@ class Surrogate:
             self.params[pname], feats)
         return y / self.manifest.scale_of(pname)
 
+    def predict_heads(self, feats_idle=None, feats_act=None, feats_tr=None,
+                      *, heads=None, augmented: bool = False) -> dict:
+        """Fused multi-head inference: one feature build + one batched pass
+        per (variant, family) group, instead of one :meth:`predict`
+        dispatch per head.
+
+        This is Algorithm 1's hot path (see docs/architecture.md,
+        "Inference hot path"): per digital tick the wrapper evaluates up
+        to seven predictor heads over three feature variants —
+
+        feats_idle  ``(N, F)`` merged-E2 catch-up rows (zero inputs,
+                    stale state, idle tau)
+        feats_act   ``(N, F)`` active-event rows (inputs at t, caught-up
+                    state, one-clock tau)
+        feats_tr    ``(N, F+2)`` transition rows (``feats_act`` plus
+                    ``o_prev``/``o_new`` columns) for the
+                    transition-aware M_ED/M_L heads
+
+        Any subset may be passed. Each given matrix is augmented with the
+        circuit's derived features ONCE (pass ``augmented=True`` when the
+        caller already augmented them — e.g. the wrapper builds the
+        transition matrix as a column splice of the augmented active one).
+
+        ``heads`` maps variant name -> predictor tuple and defaults to the
+        full Algorithm-1 schedule (:data:`ALG1_HEADS`) restricted to this
+        surrogate's predictors. Same-family heads whose arrays share
+        shapes are stacked along a new leading axis at trace time and
+        evaluated in one batched pass (``gbdt`` always walks per head);
+        stacking reorders float reductions, so batched results may differ
+        from :meth:`predict` by a few ULPs (documented tolerance:
+        ``rtol=1e-5``; single-head groups are bit-identical). Caveat for
+        discontinuous families: a stacked ``table`` head whose query row
+        sits within rounding distance of TWO table rows may resolve the
+        nearest-neighbor argmin to the other, equally-near row — the
+        deviation is then the gap between those two table entries, not
+        ULPs (measure-zero for continuous features, but the rtol contract
+        is per-distance, not per-output, at exact ties). Pure in the
+        pytree leaves — traceable with ``self`` as a jit argument, and the
+        stacks are built from existing leaves so compiled-program cache
+        keys (manifest + leaf shapes) are unchanged.
+
+        Returns ``{variant: {pname: (N,) predictions}}`` in physical
+        units.
+        """
+        mats = {"idle": feats_idle, "act": feats_act, "tr": feats_tr}
+        mats = {v: jnp.asarray(m) for v, m in mats.items() if m is not None}
+        if not mats:
+            raise ValueError("predict_heads needs at least one of "
+                             "feats_idle / feats_act / feats_tr")
+        avail = set(self.manifest.predictors)
+        if heads is None:
+            heads = {v: tuple(p for p in ALG1_HEADS[v] if p in avail)
+                     for v in mats}
+        unknown = [(v, p) for v, ps in heads.items() for p in ps
+                   if p not in avail]
+        if unknown:
+            raise ValueError(f"predict_heads: unknown predictor(s) "
+                             f"{unknown}; this surrogate carries "
+                             f"{sorted(avail)}")
+        missing = [v for v in heads if v not in mats]
+        if missing:
+            raise ValueError(f"predict_heads: heads requested for variant"
+                             f"(s) {missing} but no matching feature "
+                             "matrix was given")
+        if not augmented:
+            mats = {v: _augment(self.manifest.circuit, m)
+                    for v, m in mats.items()}
+
+        # group same-family heads per matrix; stack only when every array
+        # shape matches (mismatched shapes — e.g. per-predictor table row
+        # counts — fall back to the exact per-head functions)
+        groups: dict = {}
+        for v, pnames in heads.items():
+            for p in pnames:
+                fam = self.manifest.family_of(p)
+                if fam in FAMILY_PREDICT_STACKED:
+                    sig = tuple(sorted((k, tuple(a.shape))
+                                       for k, a in self.params[p].items()))
+                    key = (v, fam, sig)
+                else:
+                    key = (v, fam, p)
+                groups.setdefault(key, []).append(p)
+
+        out: dict = {v: {} for v in heads}
+        for (v, fam, _), pnames in groups.items():
+            x = mats[v]
+            if len(pnames) == 1 or fam not in FAMILY_PREDICT_STACKED:
+                for p in pnames:
+                    out[v][p] = FAMILY_PREDICT[fam](self.params[p], x) \
+                        / self.manifest.scale_of(p)
+            else:
+                ys = FAMILY_PREDICT_STACKED[fam](
+                    [self.params[p] for p in pnames], x)
+                for i, p in enumerate(pnames):
+                    out[v][p] = ys[i] / self.manifest.scale_of(p)
+        return out
+
     def predict_np(self, pname: str, feats) -> np.ndarray:
         """Host-side convenience wrapper around :meth:`predict`."""
         return np.asarray(self.predict(pname, np.asarray(feats)))
@@ -320,11 +502,21 @@ class Surrogate:
         """Load a surrogate saved by :meth:`save`.
 
         ``path`` may omit the ``.npz`` extension (mirroring :meth:`save`).
-        Raises ``ValueError`` if the file's format version differs from
-        :data:`FORMAT_VERSION` — array schemas are version-specific, so a
-        mismatched file must be regenerated, never reinterpreted."""
+        Raises ``FileNotFoundError`` naming every path tried when neither
+        spelling exists (``np.load`` used to leak a raw error naming only
+        the post-normalization path). Raises ``ValueError`` if the file's
+        format version differs from :data:`FORMAT_VERSION` — array
+        schemas are version-specific, so a mismatched file must be
+        regenerated, never reinterpreted."""
         if not os.path.isfile(path):
-            path = _npz_path(path)
+            alt = _npz_path(path)
+            if alt == path or not os.path.isfile(alt):
+                tried = sorted({path, alt})
+                raise FileNotFoundError(
+                    "no surrogate artifact at "
+                    + " or ".join(repr(p) for p in tried)
+                    + " (expected an .npz written by Surrogate.save)")
+            path = alt
         with np.load(path) as z:
             if "__manifest__" not in z.files:
                 raise ValueError(f"{path}: not a Surrogate artifact "

@@ -22,7 +22,16 @@ Public API
     last-update time ``t_last``, fixed ``params``
 :func:`lasana_step`
     one digital tick of Algorithm 1 for N circuits; ``known_out=`` switches
-    annotation mode (external behavioral outputs, LASANA energy/latency)
+    annotation mode (external behavioral outputs, LASANA energy/latency).
+    By default the tick takes the FUSED inference path
+    (``Surrogate.predict_heads``): features are derived once per variant
+    and same-family predictor heads evaluate in batched stacked passes —
+    three fused dispatches per tick (idle heads -> active-variant heads
+    -> transition heads, which consume M_O's resolved output) instead of
+    seven ``predict`` calls, and a single dispatch in annotation mode.
+    ``fused=False`` keeps the original one-``predict``-per-head
+    formulation (the benchmark A/B baseline; results agree within a few
+    ULPs — see docs/architecture.md, "Inference hot path").
 :func:`lasana_step_reference`
     literal per-circuit numpy transcription, the parity oracle for tests
 
@@ -67,9 +76,29 @@ def _features(x, v, tau, params, o_prev=None, o_new=None):
     return jnp.concatenate(cols, axis=1)
 
 
+def _splice_transition(aug_act, f_base: int, o_prev, o_new):
+    """Augmented transition matrix as a column splice of the active one.
+
+    The transition variant is the active variant plus ``o_prev``/``o_new``
+    columns inserted BEFORE the circuit's derived features (which depend
+    only on the shared x/params columns) — so the already-augmented active
+    matrix is reused instead of re-deriving anything."""
+    return jnp.concatenate(
+        [aug_act[:, :f_base], o_prev[:, None], o_new[:, None],
+         aug_act[:, f_base:]], axis=1)
+
+
+def _resolve_output(o_hat, o_prev, *, out_eps, spiking, vdd):
+    """Lines 23-25: classify the event and resolve the published output."""
+    if spiking:
+        out_changed = o_hat > 0.5 * vdd          # spike fired this tick
+        return out_changed, jnp.where(out_changed, vdd, 0.0)
+    return jnp.abs(o_hat - o_prev) > out_eps, o_hat
+
+
 def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
                 out_eps: float = 0.02, spiking: bool = False,
-                known_out=None, vdd: float = 1.5):
+                known_out=None, vdd: float = 1.5, fused: bool = True):
     """One digital tick for N circuits (Algorithm 1).
 
     surrogate  a :class:`repro.core.surrogate.Surrogate` — an immutable
@@ -78,7 +107,8 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
              ARGUMENT alongside ``state``: the compiled step then serves
              any retrained surrogate with matching shapes without
              recompiling. A legacy ``PredictorBank`` also works (duck-typed
-             ``.predict``) but only as a closed-over constant.
+             ``.predict``) but only as a closed-over constant, and always
+             on the per-call path.
     state    LasanaState
     changed  (N,) bool — set S as a mask
     x        (N, n_in) inputs applied at t (rows of X)
@@ -94,8 +124,111 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
              discriminator sits at ``vdd / 2`` — callers simulating a
              non-1.5-V_dd circuit MUST thread the circuit's own supply
              here or outputs silently diverge across backends.
+    fused    take the fused inference hot path
+             (``Surrogate.predict_heads``): derive features once per
+             variant and evaluate same-family heads in batched stacked
+             passes — three fused dispatches per tick instead of seven
+             ``predict`` calls (one dispatch in annotation mode). Head
+             stacking reorders float reductions, so fused and per-call
+             results may differ by a few ULPs (rtol 1e-5; see
+             docs/architecture.md "Inference hot path" and
+             tests/test_fused.py). ``fused=False`` — or a surrogate
+             without ``predict_heads`` — keeps the original
+             one-``predict``-per-head formulation, the benchmark A/B
+             baseline.
     returns  (new_state, e (N,), l (N,), o (N,))
     """
+    if fused and hasattr(surrogate, "predict_heads"):
+        return _lasana_step_fused(surrogate, state, changed, x, t, clock_ns,
+                                  out_eps=out_eps, spiking=spiking,
+                                  known_out=known_out, vdd=vdd)
+    return _lasana_step_percall(surrogate, state, changed, x, t, clock_ns,
+                                out_eps=out_eps, spiking=spiking,
+                                known_out=known_out, vdd=vdd)
+
+
+def _lasana_step_fused(surrogate, state, changed, x, t, clock_ns, *,
+                       out_eps, spiking, known_out, vdd):
+    """Algorithm 1 via ``Surrogate.predict_heads`` (the fused hot path).
+
+    Head schedule (standalone mode) — the data dependencies allow at most
+    three fused dispatches per tick:
+
+      1. idle variant: M_ES + M_V stacked (the v' catch-up feeds the
+         active features)
+      2. active variant: M_O + M_V + M_ES stacked (only M_O's resolved
+         output is needed downstream, but M_V/M_ES don't depend on it —
+         so the whole variant is one pass)
+      3. transition variant: M_ED + M_L stacked (these DO consume M_O's
+         resolved output through the o_new column)
+
+    Annotation mode has no data dependencies (state and outputs are
+    external), so the whole tick is ONE dispatch across all variants."""
+    from repro.core.surrogate import _augment
+
+    n = state.v.shape[0]
+    annotate = known_out is not None
+    circuit = surrogate.manifest.circuit
+
+    # --- lines 3-9: catch up stale circuits with one merged idle event
+    stale = changed & (state.t_last < t - clock_ns)
+    tau_idle = jnp.maximum(t - state.t_last - clock_ns, 0.0)
+    feats_idle = _features(jnp.zeros_like(x), state.v, tau_idle,
+                           state.params)
+    tau_act = jnp.full((n,), clock_ns, jnp.float32)
+
+    if annotate:
+        v_cur = state.v            # behavioral state: never stale
+        v_new = v_cur              # caller overwrites with behavioral state
+        o_hat = known_out
+        feats = _features(x, v_cur, tau_act, state.params)
+        out_changed, o_resolved = _resolve_output(
+            o_hat, state.o, out_eps=out_eps, spiking=spiking, vdd=vdd)
+        aug_act = _augment(circuit, feats)
+        aug_tr = _splice_transition(aug_act, feats.shape[1], state.o,
+                                    o_resolved)
+        r = surrogate.predict_heads(
+            feats_idle=_augment(circuit, feats_idle), feats_act=aug_act,
+            feats_tr=aug_tr,
+            heads={"idle": ("M_ES",), "act": ("M_ES",),
+                   "tr": ("M_ED", "M_L")},
+            augmented=True)
+        e_s_idle = r["idle"]["M_ES"]
+        e_s, e_d, lat = r["act"]["M_ES"], r["tr"]["M_ED"], r["tr"]["M_L"]
+    else:
+        r1 = surrogate.predict_heads(feats_idle=feats_idle,
+                                     heads={"idle": ("M_ES", "M_V")})
+        e_s_idle = r1["idle"]["M_ES"]
+        v_cur = jnp.where(stale, r1["idle"]["M_V"], state.v)
+
+        # --- lines 10-22: one stacked pass over the whole active variant
+        # (M_O's prediction chains into the transition-aware heads, but
+        # M_V/M_ES don't consume it — so they ride the same dispatch)
+        feats = _features(x, v_cur, tau_act, state.params)
+        aug_act = _augment(circuit, feats)
+        r2 = surrogate.predict_heads(feats_act=aug_act,
+                                     heads={"act": ("M_O", "M_V", "M_ES")},
+                                     augmented=True)
+        o_hat, v_new, e_s = (r2["act"]["M_O"], r2["act"]["M_V"],
+                             r2["act"]["M_ES"])
+        out_changed, o_resolved = _resolve_output(
+            o_hat, state.o, out_eps=out_eps, spiking=spiking, vdd=vdd)
+        aug_tr = _splice_transition(aug_act, feats.shape[1], state.o,
+                                    o_resolved)
+        r3 = surrogate.predict_heads(feats_tr=aug_tr,
+                                     heads={"tr": ("M_ED", "M_L")},
+                                     augmented=True)
+        e_d, lat = r3["tr"]["M_ED"], r3["tr"]["M_L"]
+
+    return _finish_tick(state, changed, stale, e_s_idle, e_d, e_s, lat,
+                        out_changed, o_hat, v_cur, v_new, t,
+                        spiking=spiking, vdd=vdd)
+
+
+def _lasana_step_percall(surrogate, state, changed, x, t, clock_ns, *,
+                         out_eps, spiking, known_out, vdd):
+    """Algorithm 1 with one ``predict`` dispatch per head (pre-fusion
+    formulation; the fused-vs-unfused benchmark baseline)."""
     n = state.v.shape[0]
     zeros_x = jnp.zeros_like(x)
     annotate = known_out is not None
@@ -110,7 +243,6 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
     else:
         v_hat = surrogate.predict("M_V", feats_idle)
         v_cur = jnp.where(stale, v_hat, state.v)
-    e = jnp.where(stale, e_s_idle, 0.0)
 
     # --- lines 10-22: run all predictors on the active batch.
     # M_O runs first so its prediction can chain into the transition-aware
@@ -125,12 +257,8 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
         v_new = surrogate.predict("M_V", feats)
 
     # --- lines 23-29: select dynamic vs static by output behaviour
-    if spiking:
-        out_changed = o_hat > 0.5 * vdd          # spike fired this tick
-        o_resolved = jnp.where(out_changed, vdd, 0.0)
-    else:
-        out_changed = jnp.abs(o_hat - state.o) > out_eps
-        o_resolved = o_hat
+    out_changed, o_resolved = _resolve_output(
+        o_hat, state.o, out_eps=out_eps, spiking=spiking, vdd=vdd)
     # chain the event-RESOLVED output (matches the E1 training distribution,
     # where spiking outputs are exactly V_dd) into the transition predictors
     feats_tr = _features(x, v_cur, tau_act, state.params, o_prev=state.o,
@@ -138,6 +266,16 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
     e_d = surrogate.predict("M_ED", feats_tr)
     e_s = surrogate.predict("M_ES", feats)
     lat = surrogate.predict("M_L", feats_tr)
+    return _finish_tick(state, changed, stale, e_s_idle, e_d, e_s, lat,
+                        out_changed, o_hat, v_cur, v_new, t,
+                        spiking=spiking, vdd=vdd)
+
+
+def _finish_tick(state, changed, stale, e_s_idle, e_d, e_s, lat,
+                 out_changed, o_hat, v_cur, v_new, t, *, spiking, vdd):
+    """Lines 23-30 tail shared by both inference paths: select dynamic vs
+    static records and write back the masked state update."""
+    e = jnp.where(stale, e_s_idle, 0.0)
     e_evt = jnp.where(out_changed, e_d, e_s)
     l_evt = jnp.where(out_changed, lat, 0.0)
     e = e + jnp.where(changed, e_evt, 0.0)

@@ -28,13 +28,13 @@ def _interpret_default() -> bool:
     return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
-def _pad_to(x, n, axis):
+def _pad_to(x, n, axis, value=0.0):
     pad = n - x.shape[axis]
     if pad <= 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
 
 
 def _ceil_to(v: int, m: int) -> int:
@@ -60,6 +60,45 @@ def mlp_surrogate(x, w1, b1, w2, b2, w3, b3, *, block_n: int = 256,
     out = _mlp.mlp_surrogate(xp, w1p, b1p, w2p, b2p, w3p, b3,
                              block_n=block_n, interpret=interpret)
     return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def mlp_surrogate_heads(x, x_mu, x_sd, y_mu, y_sd, w1, b1, w2, b2, w3, b3,
+                        *, block_n: int = 256,
+                        interpret: bool | None = None):
+    """(N, F) + P stacked heads -> (P, N): fused multi-head MLP inference.
+
+    The serving-side entry for the fused hot path
+    (``Surrogate.predict_heads`` with ``REPRO_FUSED_KERNEL=1``): all P
+    heads' weights stay VMEM-resident while the grid walks N-blocks.
+    Stacked shapes: ``x_mu``/``x_sd`` (P, F), ``y_mu``/``y_sd`` (P, 1),
+    ``w1`` (P, F, H1), ``b1`` (P, H1), ``w2`` (P, H1, H2), ``b2``
+    (P, H2), ``w3`` (P, H2, 1), ``b3`` (P, 1).
+
+    Ragged N is handled HERE (the raw kernel is shape-strict): N pads to
+    the block size and F/H1/H2 pad to 128. Padded feature columns get
+    ``x_sd = 1`` (a zero pad would divide by zero and poison the matmul
+    with NaNs); their weights pad to zero, so padded columns contribute
+    exactly nothing.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    n, f = x.shape
+    n_pad = _ceil_to(n, block_n)
+    f_pad = _ceil_to(f, 128)
+    h1_pad = _ceil_to(w1.shape[2], 128)
+    h2_pad = _ceil_to(w2.shape[2], 128)
+    xp = _pad_to(_pad_to(x, n_pad, 0), f_pad, 1)
+    xmu = _pad_to(x_mu, f_pad, 1)
+    xsd = _pad_to(x_sd, f_pad, 1, value=1.0)
+    w1p = _pad_to(_pad_to(w1, f_pad, 1), h1_pad, 2)
+    b1p = _pad_to(b1, h1_pad, 1)
+    w2p = _pad_to(_pad_to(w2, h1_pad, 1), h2_pad, 2)
+    b2p = _pad_to(b2, h2_pad, 1)
+    w3p = _pad_to(w3, h2_pad, 1)
+    out = _mlp.mlp_surrogate_heads(
+        xp, xmu, xsd, y_mu, y_sd, w1p, b1p, w2p, b2p, w3p, b3,
+        block_n=block_n, interpret=interpret)
+    return out[:, :n, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

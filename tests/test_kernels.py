@@ -44,6 +44,84 @@ def test_mlp_surrogate_dtypes(dtype):
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
 
 
+def _head_stack(key, p, f, h1=100, h2=50):
+    ks = jax.random.split(key, 10)
+    return dict(
+        x_mu=jax.random.normal(ks[0], (p, f)) * 0.3,
+        x_sd=1.0 + jax.random.uniform(ks[1], (p, f)),
+        y_mu=jax.random.normal(ks[2], (p, 1)),
+        y_sd=1.0 + jax.random.uniform(ks[3], (p, 1)),
+        w1=jax.random.normal(ks[4], (p, f, h1)) * 0.1,
+        b1=jax.random.normal(ks[5], (p, h1)) * 0.1,
+        w2=jax.random.normal(ks[6], (p, h1, h2)) * 0.1,
+        b2=jax.random.normal(ks[7], (p, h2)) * 0.1,
+        w3=jax.random.normal(ks[8], (p, h2, 1)) * 0.1,
+        b3=jax.random.normal(ks[9], (p, 1)) * 0.1)
+
+
+@pytest.mark.parametrize("n", [256, 300, 97])   # incl. N % block_n != 0
+@pytest.mark.parametrize("p,f", [(4, 11), (2, 41), (7, 13)])
+def test_mlp_surrogate_heads_matches_per_head(n, p, f):
+    """ISSUE-5 multi-head kernel: P stacked heads over one feature block
+    == P single-head kernel calls (ragged N handled by ops padding)."""
+    key = jax.random.PRNGKey(n * 7 + p)
+    s = _head_stack(key, p, f)
+    x = jax.random.normal(jax.random.PRNGKey(n), (n, f))
+    got = ops.mlp_surrogate_heads(
+        x, s["x_mu"], s["x_sd"], s["y_mu"], s["y_sd"],
+        s["w1"], s["b1"], s["w2"], s["b2"], s["w3"], s["b3"])
+    assert got.shape == (p, n)
+    for i in range(p):
+        xs = (x - s["x_mu"][i]) / s["x_sd"][i]
+        want = ops.mlp_surrogate(xs, s["w1"][i], s["b1"][i], s["w2"][i],
+                                 s["b2"][i], s["w3"][i], s["b3"][i])
+        want = want * s["y_sd"][i, 0] + s["y_mu"][i, 0]
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_surrogate_heads_padding_is_inert():
+    """Feature/hidden padding must contribute exactly nothing: a 1-column
+    widening of the weights with zeros leaves every output unchanged
+    (guards the x_sd ones-padding — a zero pad would inject NaNs)."""
+    key = jax.random.PRNGKey(3)
+    p, f, n = 3, 11, 64
+    s = _head_stack(key, p, f, h1=32, h2=16)
+    x = jax.random.normal(jax.random.PRNGKey(9), (n, f))
+    base = ops.mlp_surrogate_heads(
+        x, s["x_mu"], s["x_sd"], s["y_mu"], s["y_sd"],
+        s["w1"], s["b1"], s["w2"], s["b2"], s["w3"], s["b3"])
+    xw = jnp.pad(x, ((0, 0), (0, 1)), constant_values=123.0)
+    widened = ops.mlp_surrogate_heads(
+        xw, jnp.pad(s["x_mu"], ((0, 0), (0, 1))),
+        jnp.pad(s["x_sd"], ((0, 0), (0, 1)), constant_values=1.0),
+        s["y_mu"], s["y_sd"],
+        jnp.pad(s["w1"], ((0, 0), (0, 1), (0, 0))), s["b1"],
+        s["w2"], s["b2"], s["w3"], s["b3"])
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(widened))
+
+
+def test_predict_heads_kernel_path_matches_einsum(monkeypatch):
+    """REPRO_FUSED_KERNEL=1 routes stacked 3-layer MLP heads through the
+    Pallas kernel; results match the default einsum path."""
+    from repro.core.surrogate import _predict_mlp_stacked
+    key = jax.random.PRNGKey(17)
+    p, f, n = 3, 10, 45
+    s = _head_stack(key, p, f)
+    heads = [{k2: s[k1][i] for k1, k2 in
+              (("w1", "w0"), ("b1", "b0"), ("w2", "w1"), ("b2", "b1"),
+               ("w3", "w2"), ("b3", "b2"), ("x_mu", "x_mu"),
+               ("x_sd", "x_sd"), ("y_mu", "y_mu"), ("y_sd", "y_sd"))}
+             for i in range(p)]
+    x = jax.random.normal(jax.random.PRNGKey(5), (n, f))
+    monkeypatch.delenv("REPRO_FUSED_KERNEL", raising=False)
+    einsum = _predict_mlp_stacked(heads, x)
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    kernel = _predict_mlp_stacked(heads, x)
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(einsum),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("n,n_in", [(64, 32), (123, 32), (256, 16)])
 def test_crossbar_target(n, n_in):
     key = jax.random.PRNGKey(n)

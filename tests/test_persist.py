@@ -227,3 +227,19 @@ def test_save_load_path_extension_normalized(tmp_path, lif_bank):
     lib.save(str(tmp_path / "lib"))
     loaded_lib = lasana.load(str(tmp_path / "lib"))
     assert loaded_lib.kinds() == ("lif",)
+
+
+def test_load_missing_file_names_both_tried_paths(tmp_path):
+    """ISSUE-5 bugfix: a missing artifact used to surface as a raw
+    ``np.load`` error naming only the post-normalization ``.npz`` path.
+    Both tried spellings must appear in a clean FileNotFoundError."""
+    bare = str(tmp_path / "nowhere")
+    with pytest.raises(FileNotFoundError) as ei:
+        Surrogate.load(bare)
+    msg = str(ei.value)
+    assert bare in msg and bare + ".npz" in msg
+    # an explicit-extension path that does not exist: one spelling tried
+    explicit = str(tmp_path / "gone.npz")
+    with pytest.raises(FileNotFoundError) as ei:
+        Surrogate.load(explicit)
+    assert explicit in str(ei.value)
