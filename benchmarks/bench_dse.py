@@ -1,0 +1,148 @@
+"""Design-space-exploration throughput — the ISSUE-6 vectorized sweep.
+
+A 1024-candidate design space (random layer widths, tile sizes, V_dd
+rails, MoE shapes, circuit mixes) is priced two ways with the same
+trained crossbar surrogate:
+
+  batched  core/explore.DSEEngine: the whole CandidateSpec batch through
+           ONE AOT-compiled ``Surrogate.predict_heads`` pass; tile math
+           is vectorized numpy over the candidate arrays
+  loop     the pre-ISSUE-6 formulation: one eager per-candidate
+           evaluation at a time (measured over a subset, extrapolated)
+
+Reported: candidates/s of both paths and their ratio (acceptance:
+batched >= 50x loop), the engine's ``compile_count`` across the full
+sweep + a repeat + a retrained-surrogate hot-swap (acceptance: <= 2 —
+the sweep is one compiled program and equal-structure surrogates
+re-price for free), compile vs steady seconds, and the Pareto frontier
+(indices + full rows) over (energy/token, critical latency, analog
+fraction).
+
+``REPRO_BENCH_SMOKE=1`` keeps the 1024-candidate space (the compile-once
+contract is the point) but trims the loop-baseline subset; the gates
+hard-fail the CI smoke leg via SystemExit with the record attached.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, warm_timed
+
+N_CANDIDATES = 1024
+N_CANDIDATES_FULL = 4096
+LOOP_SUBSET = 12
+LOOP_SUBSET_SMOKE = 6
+N_SAMPLES = 128          # testbench rows averaged per tile pricing
+
+MIN_SPEEDUP = 50.0       # ISSUE-6 acceptance floor
+MAX_COMPILES = 2
+
+
+def _light_surrogate(seed=0):
+    """A fast linear-family crossbar surrogate (training time is not what
+    this suite measures)."""
+    from repro.core.dataset import TestbenchConfig, build_dataset
+    from repro.core.predictors import PredictorBank
+    ds = build_dataset("crossbar", TestbenchConfig(n_runs=200, n_steps=80,
+                                                   seed=seed))
+    return PredictorBank("crossbar", families=("linear",)).fit(ds) \
+        .to_surrogate()
+
+
+def run(full: bool = False) -> dict:
+    from repro.core.explore import CandidateSpec, DSEEngine
+
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    n_cand = N_CANDIDATES_FULL if full else N_CANDIDATES
+    n_loop = LOOP_SUBSET_SMOKE if smoke else LOOP_SUBSET
+
+    t0 = time.time()
+    sur = _light_surrogate(seed=0)
+    train_s = time.time() - t0
+
+    eng = DSEEngine(n_samples=N_SAMPLES)
+    cands = CandidateSpec.sample(n_cand, seed=0)
+
+    # batched path: first call compiles the sweep program, repeats measure
+    # steady state (the serving regime a co-design loop lives in)
+    rep, cold_s, steady_s = warm_timed(
+        lambda: eng.evaluate(cands, sur), repeats=3, stat="min")
+    cps_batched = n_cand / steady_s
+
+    # hot-swap: a retrained equal-structure surrogate re-prices the whole
+    # space through the SAME compiled program
+    sur2 = _light_surrogate(seed=1)
+    t0 = time.time()
+    rep2 = eng.evaluate(cands, sur2)
+    swap_s = time.time() - t0
+    swap_changed = bool(
+        not np.array_equal(rep2.tile_energy_j, rep.tile_energy_j))
+
+    # loop baseline: eager per-candidate dispatch, extrapolated from a
+    # subset (running all n_cand would take minutes by construction)
+    sub = cands.take(np.arange(n_loop))
+    t0 = time.time()
+    for i in range(n_loop):
+        eng.evaluate(sub.take([i]), sur, compiled=False)
+    loop_s = time.time() - t0
+    cps_loop = n_loop / loop_s
+    speedup = cps_batched / cps_loop
+
+    front = rep.pareto()
+    record = {
+        "n_candidates": n_cand,
+        "n_samples": N_SAMPLES,
+        "train_seconds": train_s,
+        "compile_seconds": cold_s,
+        "steady_seconds": steady_s,
+        "swap_seconds": swap_s,
+        "candidates_per_sec_batched": cps_batched,
+        "candidates_per_sec_loop": cps_loop,
+        "speedup_vs_loop": speedup,
+        "compile_count": eng.compile_count,
+        "swap_changed_prices": swap_changed,
+        "loop_subset": n_loop,
+        "pareto_size": int(front.size),
+        "pareto_indices": front.tolist(),
+        "pareto": rep.as_dict(front),
+        "energy_per_token_j_min": float(rep.energy_per_token_j.min()),
+        "latency_critical_ns_min": float(rep.latency_critical_ns.min()),
+    }
+    emit("dse_batched", steady_s / n_cand * 1e6,
+         f"candidates_per_sec={cps_batched:.0f}")
+    emit("dse_loop", loop_s / n_loop * 1e6,
+         f"candidates_per_sec={cps_loop:.2f}")
+    emit("dse_speedup", 0.0, f"x{speedup:.0f}")
+    emit("dse_compile_count", 0.0, f"{eng.compile_count}")
+    emit("dse_pareto", 0.0, f"size={front.size}")
+    save_json("dse", record)
+
+    # acceptance gates — a sweep that recompiles per candidate (or fails
+    # to beat the loop by the floor) is a broken contract, not a slow run
+    if eng.compile_count > MAX_COMPILES:
+        err = SystemExit(
+            f"DSE sweep recompiled per candidate: compile_count="
+            f"{eng.compile_count} > {MAX_COMPILES} over sweep+repeat+swap")
+        err.bench_record = record
+        raise err
+    if speedup < MIN_SPEEDUP:
+        err = SystemExit(
+            f"DSE batched speedup {speedup:.1f}x below the "
+            f"{MIN_SPEEDUP:.0f}x acceptance floor")
+        err.bench_record = record
+        raise err
+    if not swap_changed:
+        err = SystemExit(
+            "retrained surrogate hot-swap did not change sweep prices — "
+            "the compiled program is not reading the surrogate argument")
+        err.bench_record = record
+        raise err
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -17,6 +17,7 @@ per-suite records — the perf baseline future PRs diff against (see
   network   network engine events/s vs naive loop   (§V-E system scale)
   mixed     heterogeneous crossbar->LIF graph       (§V-E mixed-signal)
   streaming chunked runs vs monolithic, T=10k       (ISSUE-4 tentpole)
+  dse       vectorized 1024-candidate sweep vs loop (ISSUE-6 tentpole)
   roofline  dry-run roofline terms                  (EXPERIMENTS §Roofline)
 """
 
@@ -43,6 +44,7 @@ def _summary(records: dict) -> dict:
     """The headline trajectory numbers future PRs diff against."""
     net = records.get("network") or {}
     stream = records.get("streaming") or {}
+    dse = records.get("dse") or {}
     return {
         # throughput
         "events_per_sec_engine": _get(net, "events_per_sec_engine"),
@@ -67,6 +69,11 @@ def _summary(records: dict) -> dict:
                                      "fused_steady_seconds"),
         "steady_seconds_unfused": _get(net, "fused_ab",
                                        "unfused_steady_seconds"),
+        # the ISSUE-6 design-space sweep
+        "dse_candidates_per_sec": _get(dse, "candidates_per_sec_batched"),
+        "dse_speedup_vs_loop": _get(dse, "speedup_vs_loop"),
+        "dse_compile_count": _get(dse, "compile_count"),
+        "dse_pareto_size": _get(dse, "pareto_size"),
     }
 
 
@@ -76,14 +83,14 @@ def main() -> None:
                     help="paper-scale datasets/models (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: table1,table2,table3,table4,network,"
-                         "mixed,streaming,roofline")
+                         "mixed,streaming,dse,roofline")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write one machine-readable trajectory record "
                          "(summary + per-suite outputs) to PATH")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_mixed, bench_models,
-                            bench_network, bench_propagation,
+    from benchmarks import (bench_accuracy, bench_dse, bench_mixed,
+                            bench_models, bench_network, bench_propagation,
                             bench_roofline, bench_scaling, bench_streaming)
     suites = {
         "table1": bench_models.run,
@@ -93,6 +100,7 @@ def main() -> None:
         "network": bench_network.run,
         "mixed": bench_mixed.run,
         "streaming": bench_streaming.run,
+        "dse": bench_dse.run,
         "roofline": bench_roofline.run,
     }
     only = [s for s in args.only.split(",") if s] or list(suites)

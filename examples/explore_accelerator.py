@@ -1,9 +1,20 @@
-"""Architecture exploration: every assigned LM architecture mapped onto
-32x32 analog crossbar macros with LASANA energy/latency annotation
-(the paper's purpose — §I "rapid exploration and co-design" — applied to
-modern LM workloads; see DESIGN.md §2.3).
+"""Architecture exploration: map LM architectures onto analog crossbar
+macros with LASANA energy/latency annotation (the paper's purpose — §I
+"rapid exploration and co-design" — applied to modern LM workloads; see
+DESIGN.md §2.3).
+
+Two modes share one trained crossbar surrogate:
+
+  zoo (default)  every assigned LM architecture through the per-arch
+                 ``explore_arch`` report
+  --sweep N      an N-point randomized design space (layer widths, tile
+                 size, V_dd, MoE shape, circuit mix) priced through ONE
+                 compiled program via ``lasana.explore``, with the
+                 Pareto frontier over (energy/token, critical latency,
+                 analog fraction) printed
 
     PYTHONPATH=src python examples/explore_accelerator.py [--reduced]
+    PYTHONPATH=src python examples/explore_accelerator.py --sweep 2048
 """
 
 import argparse
@@ -13,16 +24,39 @@ from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.core.explore import explore_arch
 
 
+def sweep(surrogate, n: int, seed: int) -> None:
+    cands = lasana.CandidateSpec.sample(n, seed=seed)
+    rep = lasana.explore(cands, surrogate)
+    print(f"== {n}-candidate sweep: one compiled program, "
+          f"{rep.wall_seconds:.2f}s eval ==\n")
+    front = rep.pareto()
+    print(f"Pareto frontier ({front.size} of {n} candidates), "
+          "best-energy first:")
+    order = front[rep.energy_per_token_j[front].argsort()]
+    for i in order[:20]:
+        print("  " + rep.summary(int(i)))
+    if front.size > 20:
+        print(f"  ... {front.size - 20} more frontier points")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true",
                     help="use reduced configs (fast)")
     ap.add_argument("--bank-runs", type=int, default=300)
+    ap.add_argument("--sweep", type=int, default=0, metavar="N",
+                    help="price an N-point random design space instead of "
+                         "the architecture zoo")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     print("== training crossbar surrogates ==")
     surrogate = lasana.train("crossbar", lasana.TrainConfig(
         n_runs=args.bank_runs, n_steps=100, families=("linear", "gbdt")))
+
+    if args.sweep:
+        sweep(surrogate, args.sweep, args.seed)
+        return
 
     print("== mapping architectures onto analog CiM macros ==\n")
     get = reduced_config if args.reduced else get_config

@@ -25,14 +25,17 @@ from repro.core.network import (EdgeSpec, LayerSpec, NetworkEngine,
 # facade callables (train/engine/save/load/TrainConfig) are re-exported
 # lazily: repro.lasana itself imports repro.core.network, so a top-level
 # import here would be circular (PEP 562 keeps the surface flat). The
-# ``simulate`` entry point is deliberately NOT re-exported by name — the
-# ``repro.core.simulate`` *submodule* would shadow it; reach it as
-# ``repro.core.lasana.simulate`` or (canonically) ``repro.lasana.simulate``.
-_FACADE = ("TrainConfig", "engine", "lasana", "load", "save",
-           "simulate_stream", "stream", "train")
+# ``simulate`` and ``explore`` entry points are deliberately NOT
+# re-exported by name — the ``repro.core.simulate`` / ``repro.core.
+# explore`` *submodules* would shadow them; reach them as
+# ``repro.core.lasana.simulate`` or (canonically) ``repro.lasana.*``.
+_FACADE = ("CandidateSpec", "DSEReport", "TrainConfig", "engine",
+           "lasana", "load", "save", "simulate_stream", "stream", "train")
 
 __all__ = [
     # facade (repro.lasana; ``lasana`` is the module itself)
+    "CandidateSpec",
+    "DSEReport",
     "Manifest",
     "Surrogate",
     "SurrogateLibrary",

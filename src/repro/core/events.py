@@ -2,11 +2,16 @@
 
   E1 — one timestep, input changed, output changed  (dynamic energy, latency)
   E3 — one timestep, input changed, output did NOT change (static energy)
-  E2 — variable-length idle period between active timesteps (static energy)
+  E2 — variable-length idle period before an active timestep (static
+       energy), including the idle span before a run's FIRST active step
+       (start boundary = the run's initial state/output)
 
 Events always start/end on timestep boundaries. Energy is integrated over
 the event; latency is only defined for E1 (start of input to 90% settle /
-spike peak). Extraction is vectorized over (runs, T) trace arrays.
+spike peak). Extraction is vectorized over (runs, T) trace arrays, and
+event-set energy sums exactly to the trace energy over [0, last active
+step] — only the trailing idle span (nothing reactivates the circuit
+inside the trace) is excluded.
 
 Public API
 ----------
@@ -103,10 +108,14 @@ def extract_events(trace: Trace) -> EventSet:
     for run in range(r):
         idx = np.flatnonzero(act[run])
         for j, t0 in enumerate(idx):
-            # idle gap before this active step -> one merged E2 event
+            # idle gap before this active step -> one merged E2 event.
+            # j == 0 covers a trace-LEADING gap: its start boundary is the
+            # run's initial state/output (prev_end == 0), so static energy
+            # before the first active step is still emitted and event-set
+            # energy sums to the trace energy over [0, last active step].
             prev_end = idx[j - 1] + 1 if j > 0 else 0
             gap = t0 - prev_end
-            if gap > 0 and j > 0:
+            if gap > 0:
                 xs.append(np.zeros_like(trace.inputs[run, t0])
                           if trace.idle_x_is_zero else trace.inputs[run, t0 - 1])
                 kinds.append(int(EventKind.E2))

@@ -1,10 +1,26 @@
-"""Architecture exploration: map LM-zoo architectures onto analog crossbar
-macros and annotate energy/latency with LASANA surrogates (DESIGN.md §2.3).
+"""Design-space exploration: map architectures onto analog crossbar macros
+and annotate energy/latency with LASANA surrogates (DESIGN.md §2.3).
 
-Only *weight-stationary* matmuls map to crossbars (QKVO/FFN/expert/embed
+Two evaluation paths share one tile model:
+
+* :func:`explore_arch` — the legacy per-architecture path: walk one
+  ``ModelConfig``'s parameter specs, tile every weight-stationary matrix
+  into 32x32 differential-pair macros, and price each tile with a trained
+  crossbar surrogate (``PredictorBank`` or :class:`Surrogate`).
+* :class:`DSEEngine` / :func:`evaluate_candidates` — the vectorized
+  design-space engine (the paper's §I "rapid exploration and co-design"
+  at scale): a batched :class:`CandidateSpec` (layer widths, tile size,
+  V_dd, MoE shape, circuit mix) evaluates as ONE program — tile math is
+  pure array ops over the candidate arrays, and per-tile energy/latency
+  comes from a single AOT-compiled :meth:`Surrogate.predict_heads` pass
+  shared across every candidate. Surrogates stay traced pytree arguments
+  (the PR-3 zero-recompile contract), so a 10^3–10^4-point sweep compiles
+  once and retrained surrogates re-price the whole space for free.
+
+Only *weight-stationary* matmuls map to crossbars (QKVO/FFN/expert
 projections); activation-activation products (attention scores, SSD scans,
 RG-LRU recurrences) and routers stay digital. Each weight matrix is tiled
-into (rows/32 x cols/32) differential-pair macros; one token's forward pass
+into (rows/T x cols/T) differential-pair macros; one token's forward pass
 fires one MVM event per tile, whose energy/latency come from the trained
 ``M_ED``/``M_L`` crossbar surrogates averaged over the input distribution.
 """
@@ -12,7 +28,8 @@ fires one MVM event per tile, whose energy/latency come from the trained
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import time
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,15 +38,24 @@ import numpy as np
 from repro.configs.base import Family, ModelConfig
 from repro.core.circuits import CrossbarRow
 from repro.core.predictors import PredictorBank, build_features
+from repro.core.surrogate import (Surrogate, SurrogateLibrary, as_surrogate,
+                                  structure_key)
 from repro.models import params as prm
 from repro.models.model import Model
 
 TILE = 32
+# DAC full-scale drive tracks the supply rail; candidates' V_dd enters the
+# surrogate through the input-voltage scale relative to this training rail
+VDD_REF = 1.2
 
 # analog-unmappable params (gather tables / recurrent gates): see DESIGN.md
 _DIGITAL_KEYS = ("embedding", "router", "a_log", "dt_bias", "d_skip", "lam",
                  "conv_w", "conv_b", "norm", "ln", "q_norm", "kv_norm",
                  "b_a", "b_i", "kpos")
+
+# leading ParamSpec axes that enumerate independent matrices (each slice is
+# its own weight-stationary matmul) rather than matrix rows
+_STACK_AXES = ("layers", "experts")
 
 
 @dataclasses.dataclass
@@ -60,21 +86,45 @@ def _is_analog(path: str, spec) -> bool:
 
 
 def _matrix_dims(spec) -> tuple[int, int, int]:
-    """(count, rows, cols): stacked layer dims multiply the count."""
-    shape = spec.shape
+    """(count, rows, cols) of a weight spec's independent matmul matrices.
+
+    Leading ``"layers"`` / ``"experts"`` logical axes enumerate stacked
+    *independent* matrices (a scan-over-layers stack, an expert bank) and
+    multiply ``count``; the remaining axes are one matrix of ``rows`` x
+    ``cols``. An ``(E, d, f)`` expert bank therefore tiles as
+    ``E * ceil(d/T) * ceil(f/T)`` — NOT as a single ``(E, d*f)`` matrix,
+    which would corrupt tile counts for every MoE architecture.
+    """
+    shape = list(spec.shape)
+    logical = list(spec.logical or ())
     count = 1
-    if spec.logical and spec.logical[0] == "layers":
-        count = shape[0]
-        shape = shape[1:]
-    if spec.logical and len(spec.logical) and "experts" in (spec.logical[0],):
-        pass
+    while len(shape) > 2 and logical and logical[0] in _STACK_AXES:
+        count *= shape.pop(0)
+        logical.pop(0)
     rows = shape[0]
     cols = int(np.prod(shape[1:]))
     return count, rows, cols
 
 
-def tile_energy_latency(bank: PredictorBank, *, seed=0, n_samples=2048):
+def _crossbar_surrogate(surrogates) -> Any:
+    """Resolve the crossbar-tile predictor from any accepted form.
+
+    Accepts a :class:`Surrogate`, a legacy fitted ``PredictorBank`` (both
+    used directly), or a :class:`SurrogateLibrary` / ``{kind: surrogate}``
+    dict — the ``"crossbar"`` entry prices the 32x32 MVM macro."""
+    if isinstance(surrogates, (SurrogateLibrary, dict)):
+        sur = surrogates.get("crossbar")
+        if sur is None:
+            raise ValueError(
+                "exploration needs a 'crossbar' surrogate; the given "
+                "library carries none")
+        return sur
+    return surrogates
+
+
+def tile_energy_latency(bank, *, seed=0, n_samples=2048):
     """Mean per-MVM-event energy (J) / latency (ns) of one 32x32 macro."""
+    bank = _crossbar_surrogate(bank)
     circ = CrossbarRow()
     key = jax.random.PRNGKey(seed)
     kx, kp, ko = jax.random.split(key, 3)
@@ -91,7 +141,14 @@ def tile_energy_latency(bank: PredictorBank, *, seed=0, n_samples=2048):
     return e, lat
 
 
-def explore_arch(cfg: ModelConfig, bank: PredictorBank) -> TileReport:
+def explore_arch(cfg: ModelConfig, bank) -> TileReport:
+    """Map one zoo architecture onto 32x32 crossbar macros (legacy path).
+
+    ``bank`` is a trained crossbar predictor in any accepted form (see
+    :func:`_crossbar_surrogate`). For thousand-point candidate sweeps use
+    :func:`evaluate_candidates`, which prices every candidate through one
+    compiled program instead of re-dispatching per architecture."""
+    bank = _crossbar_surrogate(bank)
     model = Model(cfg)
     specs = model.param_specs()
     # jax.tree.leaves_with_path only exists on newer jax; tree_util spells
@@ -116,7 +173,9 @@ def explore_arch(cfg: ModelConfig, bank: PredictorBank) -> TileReport:
         n_tiles += tiles
         n_matrices += count
         analog_params += count_elems
-        comp = pstr.split("'")[1] if "'" in pstr else pstr
+        # leaf weight name (w_gate, wq, ...) so MoE expert banks report
+        # their exact per-matrix tile counts instead of a stack aggregate
+        comp = pstr.split("'")[-2] if "'" in pstr else pstr
         by_comp[comp] = by_comp.get(comp, 0) + tiles
         # every token fires each tile once per forward pass; MoE scales by
         # the active-expert fraction
@@ -152,3 +211,435 @@ def explore_arch(cfg: ModelConfig, bank: PredictorBank) -> TileReport:
         tile_energy_j=e_tile,
         tiles_by_component=by_comp,
     )
+
+
+# --- batched candidate space ----------------------------------------------------
+
+# (field, default, dtype) — the knobs a DSE candidate carries
+_CANDIDATE_FIELDS = (
+    ("d_model", 512, np.int64),       # residual width
+    ("d_ff", 2048, np.int64),         # FFN (or per-expert) hidden width
+    ("n_layers", 8, np.int64),
+    ("n_heads", 8, np.int64),
+    ("n_kv_heads", 8, np.int64),      # GQA: kv head count
+    ("n_experts", 0, np.int64),       # 0 -> dense FFN
+    ("top_k", 0, np.int64),           # active experts per token (MoE only)
+    ("tile", TILE, np.int64),         # crossbar macro edge (TxT)
+    ("v_dd", VDD_REF, np.float32),    # analog supply rail (V)
+    ("analog_attn", 1, np.int64),     # 1: QKVO projections map to crossbars
+    ("analog_ffn", 1, np.int64),      # 1: FFN/expert matmuls map to crossbars
+    ("vocab", 32000, np.int64),       # embedding + LM head (always digital)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateSpec:
+    """A batch of candidate accelerator/architecture configurations.
+
+    Every field is a ``(C,)`` array — candidate ``i`` is row ``i`` across
+    all fields. Build one with :meth:`of` (broadcasting scalars),
+    :meth:`sample` (randomized sweep) or :meth:`grid` (cartesian product),
+    then price the whole batch with :func:`evaluate_candidates` /
+    ``lasana.explore``. Knobs:
+
+    ``d_model``/``d_ff``/``n_layers``/``n_heads``/``n_kv_heads``
+        transformer layer widths (GQA kv heads; ``head_dim = d_model //
+        n_heads``)
+    ``n_experts``/``top_k``
+        MoE shape; ``n_experts == 0`` is a dense FFN. Expert matrices tile
+        per expert and consume energy at the ``top_k / n_experts``
+        utilization.
+    ``tile``
+        crossbar macro edge T (a TxT tile = (T/32)^2 of the trained 32x32
+        macro; energy scales with that area, rows settle in parallel)
+    ``v_dd``
+        analog supply rail; enters the surrogate through the DAC
+        full-scale input drive (``v_dd / 1.2`` relative to the training
+        rail)
+    ``analog_attn``/``analog_ffn``
+        circuit mix: which weight-stationary matmul groups map to analog
+        crossbars (0 keeps them digital)
+    ``vocab``
+        embedding/LM-head size — always digital (gather), counts toward
+        the digital FLOP share only
+    """
+
+    d_model: np.ndarray
+    d_ff: np.ndarray
+    n_layers: np.ndarray
+    n_heads: np.ndarray
+    n_kv_heads: np.ndarray
+    n_experts: np.ndarray
+    top_k: np.ndarray
+    tile: np.ndarray
+    v_dd: np.ndarray
+    analog_attn: np.ndarray
+    analog_ffn: np.ndarray
+    vocab: np.ndarray
+
+    def __post_init__(self):
+        """Broadcast every field to one common ``(C,)`` length and check
+        the knobs are self-consistent (positive widths, ``top_k`` within
+        ``n_experts``)."""
+        arrays = {}
+        c = 1
+        for name, _, dtype in _CANDIDATE_FIELDS:
+            a = np.atleast_1d(np.asarray(getattr(self, name), dtype))
+            if a.ndim != 1:
+                raise ValueError(f"CandidateSpec.{name} must be scalar or "
+                                 f"1-D, got shape {a.shape}")
+            arrays[name] = a
+            c = max(c, a.shape[0])
+        for name, a in arrays.items():
+            if a.shape[0] not in (1, c):
+                raise ValueError(
+                    f"CandidateSpec.{name} has {a.shape[0]} entries but the "
+                    f"batch has {c}")
+            object.__setattr__(self, name,
+                               np.broadcast_to(a, (c,)).copy())
+        if np.any(self.d_model < 1) or np.any(self.d_ff < 1) \
+                or np.any(self.n_layers < 1) or np.any(self.n_heads < 1) \
+                or np.any(self.n_kv_heads < 1) or np.any(self.tile < 1):
+            raise ValueError("CandidateSpec widths/tile must be >= 1")
+        if np.any(self.v_dd <= 0):
+            raise ValueError("CandidateSpec.v_dd must be positive")
+        moe = self.n_experts > 0
+        if np.any(moe & ((self.top_k < 1) | (self.top_k > self.n_experts))):
+            raise ValueError("MoE candidates need 1 <= top_k <= n_experts")
+
+    def __len__(self) -> int:
+        return int(self.d_model.shape[0])
+
+    @classmethod
+    def of(cls, **knobs) -> "CandidateSpec":
+        """Build a batch from scalars/arrays; unspecified knobs take the
+        documented defaults, scalars broadcast to the batch length."""
+        vals = {name: knobs.pop(name, default)
+                for name, default, _ in _CANDIDATE_FIELDS}
+        if knobs:
+            raise TypeError(f"unknown candidate knob(s): {sorted(knobs)}")
+        return cls(**vals)
+
+    @classmethod
+    def sample(cls, n: int, *, seed: int = 0, moe_fraction: float = 0.4,
+               v_dd_range: tuple = (0.9, 1.5)) -> "CandidateSpec":
+        """Randomized ``n``-candidate design space (the sweep generator).
+
+        Widths are drawn from hardware-plausible menus (power-of-two
+        ``d_model``, 2-4x FFN expansion, GQA ratios), ``moe_fraction`` of
+        candidates get an expert bank, tile sizes span 16-128, and
+        ``v_dd`` is uniform over ``v_dd_range``. Deterministic in
+        ``seed``."""
+        rng = np.random.default_rng(seed)
+        d_model = rng.choice([256, 512, 768, 1024, 2048, 4096], n)
+        d_ff = d_model * rng.choice([2, 3, 4], n)
+        n_layers = rng.choice([4, 8, 12, 16, 24, 32], n)
+        n_heads = np.maximum(d_model // 64, 1)
+        n_kv_heads = np.maximum(n_heads // rng.choice([1, 1, 2, 4], n), 1)
+        moe = rng.random(n) < moe_fraction
+        n_experts = np.where(moe, rng.choice([8, 16, 32, 64], n), 0)
+        top_k = np.where(moe, np.minimum(rng.choice([1, 2, 4, 8], n),
+                                         np.maximum(n_experts, 1)), 0)
+        # routed experts are thinner than dense FFNs
+        d_ff = np.where(moe, np.maximum(d_model // 2, TILE), d_ff)
+        tile = rng.choice([16, 32, 64, 128], n)
+        v_dd = rng.uniform(v_dd_range[0], v_dd_range[1], n).astype(np.float32)
+        analog_attn = rng.choice([0, 1], n, p=[0.25, 0.75])
+        analog_ffn = rng.choice([0, 1], n, p=[0.1, 0.9])
+        return cls.of(d_model=d_model, d_ff=d_ff, n_layers=n_layers,
+                      n_heads=n_heads, n_kv_heads=n_kv_heads,
+                      n_experts=n_experts, top_k=top_k, tile=tile, v_dd=v_dd,
+                      analog_attn=analog_attn, analog_ffn=analog_ffn)
+
+    @classmethod
+    def grid(cls, **axes) -> "CandidateSpec":
+        """Cartesian product over the given per-knob value lists.
+
+        ``CandidateSpec.grid(d_model=[512, 1024], v_dd=[1.0, 1.2])`` is a
+        4-candidate batch; unspecified knobs take their defaults."""
+        names = [n for n, _, _ in _CANDIDATE_FIELDS if n in axes]
+        unknown = set(axes) - set(names)
+        if unknown:
+            raise TypeError(f"unknown candidate knob(s): {sorted(unknown)}")
+        lists = [np.atleast_1d(np.asarray(axes[n])) for n in names]
+        mesh = np.meshgrid(*lists, indexing="ij") if lists else []
+        return cls.of(**{n: m.reshape(-1) for n, m in zip(names, mesh)})
+
+    def take(self, idx) -> "CandidateSpec":
+        """Sub-batch at integer indices ``idx`` (fancy-indexes every knob
+        array) — e.g. ``cands.take(report.pareto())``."""
+        idx = np.asarray(idx)
+        return CandidateSpec(**{name: getattr(self, name)[idx]
+                                for name, _, _ in _CANDIDATE_FIELDS})
+
+    def row(self, i: int) -> dict:
+        """Candidate ``i`` as a plain ``{knob: python scalar}`` dict."""
+        return {name: getattr(self, name)[i].item()
+                for name, _, _ in _CANDIDATE_FIELDS}
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def _tile_table(c: CandidateSpec) -> dict:
+    """Pure vectorized tile math over a candidate batch -> (C,) arrays.
+
+    All counts are exact ``int64`` array ops (no surrogate involved):
+    per-layer tile/param counts for the attention (QKVO) and FFN/expert
+    groups, active-vs-total parameter counts, and the digital score-FLOP
+    term at the reference sequence length."""
+    d, f, t = c.d_model, c.d_ff, c.tile
+    dh = np.maximum(c.d_model // np.maximum(c.n_heads, 1), 1)
+    kv = c.n_kv_heads * dh
+    td, tf, tkv = _ceil_div(d, t), _ceil_div(f, t), _ceil_div(kv, t)
+
+    # per-layer tile counts per mapped group
+    tiles_attn = 2 * td * td + 2 * td * tkv             # wq, wo + wk, wv
+    moe = c.n_experts > 0
+    tiles_ffn_dense = 3 * td * tf                        # gate/up/down
+    tiles_ffn = np.where(moe, c.n_experts * tiles_ffn_dense, tiles_ffn_dense)
+    # MoE fires only the routed top-k fraction of expert tiles per token
+    util = np.where(moe, c.top_k / np.maximum(c.n_experts, 1), 1.0)
+
+    # per-layer parameter counts (matrix elements, not padded tiles)
+    p_attn = 2 * d * d + 2 * d * kv
+    p_ffn_all = np.where(moe, c.n_experts, 1) * 3 * d * f
+    p_ffn_act = np.where(moe, c.top_k, 1) * 3 * d * f
+    p_router = np.where(moe, d * c.n_experts, 0)         # always digital
+
+    a_attn, a_ffn = c.analog_attn.astype(np.int64), \
+        c.analog_ffn.astype(np.int64)
+    n_tiles = c.n_layers * (a_attn * tiles_attn + a_ffn * tiles_ffn)
+    # energy-weighted tiles fired per token
+    tiles_token = c.n_layers * (a_attn * tiles_attn
+                                + a_ffn * tiles_ffn * util)
+    analog_active = c.n_layers * (a_attn * p_attn + a_ffn * p_ffn_act)
+    total_active = c.n_layers * (p_attn + p_ffn_act + p_router) \
+        + 2 * c.vocab * d
+    # digital score flops/token at the reference sequence length
+    s_ref = 4096
+    score = 4 * s_ref * c.n_heads * dh * c.n_layers
+    analog_flops = 2 * analog_active
+    digital_flops = 2 * (total_active - analog_active) + score
+    frac = analog_flops / np.maximum(analog_flops + digital_flops, 1)
+    # sequential analog stages per token: QKV->O, up/gate->down
+    stages = c.n_layers * (2 * a_attn + 2 * a_ffn)
+    return {
+        "n_tiles": n_tiles.astype(np.int64),
+        "tiles_token": tiles_token.astype(np.float64),
+        "analog_params": analog_active.astype(np.int64),
+        "total_params": total_active.astype(np.int64),
+        "analog_flop_fraction": frac.astype(np.float64),
+        "stages": stages.astype(np.int64),
+    }
+
+
+# --- the vectorized DSE engine --------------------------------------------------
+
+@dataclasses.dataclass
+class DSEReport:
+    """Batched exploration result: one row per candidate, plus frontier.
+
+    Array fields are ``(C,)`` aligned with ``candidates``; ``pareto()``
+    extracts the non-dominated set over (energy/token, critical-path
+    latency, analog-FLOP fraction). ``compile_count`` is the number of
+    distinct surrogate-pass programs the serving :class:`DSEEngine` has
+    compiled — a whole sweep (any C, any retrained surrogate of equal
+    structure) holds at <= 2.
+    """
+
+    candidates: CandidateSpec
+    n_tiles: np.ndarray              # (C,) int64 mapped crossbar tiles
+    analog_params: np.ndarray        # (C,) int64 active analog matrix params
+    total_params: np.ndarray         # (C,) int64 active params incl. digital
+    analog_flop_fraction: np.ndarray # (C,) float64 in [0, 1]
+    energy_per_token_j: np.ndarray   # (C,) float64 J per forward token
+    latency_critical_ns: np.ndarray  # (C,) float64 analog critical path
+    tile_energy_j: np.ndarray        # (C,) float64 per-tile MVM energy
+    tile_latency_ns: np.ndarray      # (C,) float64 per-tile settle latency
+    compile_count: int = 0
+    wall_seconds: float = 0.0
+
+    def __len__(self) -> int:
+        return len(self.candidates)
+
+    def pareto(self) -> np.ndarray:
+        """Indices of the Pareto frontier: minimize energy/token and
+        critical-path latency, maximize analog-FLOP fraction."""
+        objs = np.stack([self.energy_per_token_j, self.latency_critical_ns,
+                         -self.analog_flop_fraction], axis=1)
+        return np.flatnonzero(pareto_mask(objs))
+
+    def summary(self, i: int) -> str:
+        """One-line human-readable report row for candidate ``i``."""
+        c = self.candidates.row(i)
+        moe = (f" E{c['n_experts']}k{c['top_k']}" if c["n_experts"] else "")
+        return (f"d{c['d_model']}xf{c['d_ff']}xL{c['n_layers']}{moe} "
+                f"T={c['tile']} Vdd={c['v_dd']:.2f}: "
+                f"{int(self.n_tiles[i]):,} tiles | "
+                f"analog {self.analog_flop_fraction[i]:.1%} | "
+                f"{self.energy_per_token_j[i] * 1e9:.3f} nJ/tok | "
+                f"{self.latency_critical_ns[i]:.1f} ns")
+
+    def as_dict(self, idx=None) -> dict:
+        """JSON-ready ``{column: list}`` table (optionally only rows
+        ``idx``) — what ``benchmarks/run.py --json`` records."""
+        idx = np.arange(len(self)) if idx is None else np.asarray(idx)
+        out = {name: getattr(self.candidates, name)[idx].tolist()
+               for name, _, _ in _CANDIDATE_FIELDS}
+        for col in ("n_tiles", "analog_flop_fraction", "energy_per_token_j",
+                    "latency_critical_ns"):
+            out[col] = getattr(self, col)[idx].tolist()
+        return out
+
+
+def pareto_mask(objectives: np.ndarray) -> np.ndarray:
+    """Non-dominated mask of ``(C, K)`` objective rows (all minimized).
+
+    Row i is dominated when some row j is <= on every objective and
+    strictly < on at least one. O(C^2) broadcasting — fine for the
+    10^3-10^4-point spaces this engine targets."""
+    o = np.asarray(objectives, np.float64)
+    le = np.all(o[:, None, :] <= o[None, :, :], axis=-1)    # j dominates-ish i
+    lt = np.any(o[:, None, :] < o[None, :, :], axis=-1)
+    dominated = np.any(le & lt, axis=0)
+    return ~dominated
+
+
+class DSEEngine:
+    """Compile-once vectorized evaluator for candidate sweeps.
+
+    One AOT-compiled program per (candidate count, sample count, surrogate
+    structure) prices every candidate's crossbar tile from a single
+    :meth:`Surrogate.predict_heads` pass: the testbench input rows are
+    scaled per candidate by the V_dd drive ratio, the transition heads
+    (``M_ED``/``M_L``) run over the whole ``(C * n_samples)`` feature
+    matrix at once, and the per-candidate means come back as ``(C,)``
+    arrays. Surrogates are traced pytree arguments — retrained weights of
+    equal structure NEVER recompile (``compile_count`` stays put), exactly
+    like the network engine's serving contract.
+    """
+
+    def __init__(self, *, n_samples: int = 256, seed: int = 0):
+        self.n_samples = int(n_samples)
+        self.seed = int(seed)
+        self.compile_count = 0           # distinct compiled sweep programs
+        self._trace_count = 0
+        self._programs: dict = {}
+        self._circ = CrossbarRow()
+        key = jax.random.PRNGKey(self.seed)
+        kx, kp, ko = jax.random.split(key, 3)
+        n = self.n_samples
+        self._base_x = self._circ.sample_inputs(kx, (n,))
+        self._base_p = self._circ.sample_params(kp, n)
+        self._base_o = jax.random.uniform(ko, (n,), jnp.float32, -2, 2)
+
+    # -- the traced surrogate pass ------------------------------------------
+    def _tile_eval(self, surrogate, v_dd, tile):
+        """(C,) per-candidate tile energy/latency from one fused pass."""
+        self._trace_count += 1
+        n = self.n_samples
+        c = v_dd.shape[0]
+        drive = (v_dd / VDD_REF)[:, None, None]             # (C,1,1)
+        x = (self._base_x[None] * drive).reshape(c * n, -1)  # (C*N, n_in)
+        p = jnp.broadcast_to(self._base_p[None],
+                             (c, n, self._base_p.shape[1])).reshape(c * n, -1)
+        v = jnp.zeros((c * n, 1), jnp.float32)
+        tau = jnp.full((c * n, 1), self._circ.clock_ns, jnp.float32)
+        base = jnp.concatenate([x, v, tau, p], axis=1)
+        o_new = surrogate.predict_heads(
+            feats_act=base, heads={"act": ("M_O",)})["act"]["M_O"]
+        o_prev = jnp.broadcast_to(self._base_o[None], (c, n)).reshape(-1)
+        tr = jnp.concatenate([base, o_prev[:, None], o_new[:, None]], axis=1)
+        out = surrogate.predict_heads(
+            feats_tr=tr, heads={"tr": ("M_ED", "M_L")})["tr"]
+        e32 = jnp.mean(out["M_ED"].reshape(c, n), axis=1)
+        l32 = jnp.mean(out["M_L"].reshape(c, n), axis=1)
+        # a TxT tile is (T/32)^2 of the trained 32x32 macro area; its rows
+        # (and 32-wide row segments) settle in parallel, so energy scales
+        # with area while the settle latency stays the macro's
+        area = jnp.square(tile.astype(jnp.float32) / TILE)
+        return e32 * area, l32
+
+    def _compiled_tile_eval(self, surrogate: Surrogate, c: int):
+        """AOT lower+compile the sweep program once per cache key."""
+        key = (c, self.n_samples, structure_key(surrogate))
+        entry = self._programs.get(key)
+        if entry is not None:
+            return entry[0], 0.0
+        fn = jax.jit(self._tile_eval)
+        v_dd = jnp.zeros((c,), jnp.float32)
+        tile = jnp.zeros((c,), jnp.int32)
+        t0 = time.time()
+        compiled = fn.lower(surrogate, v_dd, tile).compile()
+        compile_s = time.time() - t0
+        self._programs[key] = (compiled, compile_s)
+        self.compile_count += 1
+        return compiled, compile_s
+
+    # -- public evaluation ---------------------------------------------------
+    def evaluate(self, candidates: CandidateSpec, surrogates,
+                 *, compiled: bool = True) -> DSEReport:
+        """Price every candidate in one vectorized program -> DSEReport.
+
+        ``surrogates`` is a crossbar :class:`Surrogate` (or library /
+        legacy bank; resolved like :func:`explore_arch`). ``compiled=
+        False`` runs the same math eagerly per call — the per-architecture
+        dispatch baseline the benchmark A/Bs against."""
+        sur = as_surrogate(_crossbar_surrogate(surrogates))
+        if sur.circuit != "crossbar":
+            raise ValueError(
+                f"DSE tiles are crossbar macros; got a surrogate trained "
+                f"for circuit {sur.circuit!r}")
+        c = len(candidates)
+        v_dd = jnp.asarray(candidates.v_dd, jnp.float32)
+        tile = jnp.asarray(candidates.tile, jnp.int32)
+        t0 = time.time()
+        if compiled:
+            prog, _ = self._compiled_tile_eval(sur, c)
+            e_tile, l_tile = jax.block_until_ready(prog(sur, v_dd, tile))
+        else:
+            e_tile, l_tile = jax.block_until_ready(
+                self._tile_eval(sur, v_dd, tile))
+        wall = time.time() - t0
+        e_tile = np.asarray(e_tile, np.float64)
+        l_tile = np.asarray(l_tile, np.float64)
+
+        tt = _tile_table(candidates)
+        return DSEReport(
+            candidates=candidates,
+            n_tiles=tt["n_tiles"],
+            analog_params=tt["analog_params"],
+            total_params=tt["total_params"],
+            analog_flop_fraction=tt["analog_flop_fraction"],
+            energy_per_token_j=tt["tiles_token"] * e_tile,
+            latency_critical_ns=tt["stages"] * l_tile,
+            tile_energy_j=e_tile,
+            tile_latency_ns=l_tile,
+            compile_count=self.compile_count,
+            wall_seconds=wall,
+        )
+
+
+# one process-wide engine behind lasana.explore: sweeps share its program
+# cache (and compile_count), mirroring the facade's network-engine cache
+_DEFAULT_ENGINE: Optional[DSEEngine] = None
+
+
+def dse_engine() -> DSEEngine:
+    """The process-wide :class:`DSEEngine` serving ``lasana.explore``."""
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = DSEEngine()
+    return _DEFAULT_ENGINE
+
+
+def evaluate_candidates(candidates: CandidateSpec, surrogates,
+                        *, engine: Optional[DSEEngine] = None) -> DSEReport:
+    """Vectorized sweep: price ``candidates`` with the shared engine.
+
+    The functional core of ``lasana.explore`` — see :class:`DSEEngine`
+    for the compile-once contract and :class:`DSEReport` for the output
+    table/Pareto API."""
+    return (engine or dse_engine()).evaluate(candidates, surrogates)

@@ -1364,12 +1364,12 @@ class NetworkEngine:
         after the first run would silently reuse the old program). Two
         libraries with equal treedefs (manifests included) and equal leaf
         shapes/dtypes share one executable — a retrained surrogate is a
-        weight swap, not a recompile."""
-        from repro.core.surrogate import _kernel_heads_enabled
-        leaves, treedef = jax.tree.flatten(banks)
+        weight swap, not a recompile. The surrogate part of the key is
+        ``surrogate.structure_key``, shared with the DSE sweep engine so
+        the hot-swap contract cannot drift between the two."""
+        from repro.core.surrogate import _kernel_heads_enabled, structure_key
         return (kind, self.fused, _kernel_heads_enabled(), b, t_steps,
-                treedef,
-                tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+                structure_key(banks))
 
     def _compiled(self, key, build, example_args):
         """AOT lower+compile ``build()`` once per cache key.

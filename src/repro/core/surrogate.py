@@ -542,6 +542,20 @@ class Surrogate:
                    fit_info=meta.get("fit_info"))
 
 
+def structure_key(surrogates) -> tuple:
+    """Hashable structure key of a surrogate pytree (or library of them).
+
+    ``(treedef, ((leaf shape, dtype), ...))`` — two artifacts with equal
+    keys are weight swaps of one another and may share a compiled
+    program; anything else (different family mix, different fitted
+    dimensions) must compile its own. This is THE cache-key convention
+    for every compiled surrogate-serving program (``NetworkEngine``
+    network programs, the DSE sweep evaluator), so the zero-recompile
+    hot-swap contract cannot drift between engines."""
+    leaves, treedef = jax.tree.flatten(surrogates)
+    return treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves)
+
+
 def as_surrogate(obj) -> Surrogate:
     """Coerce a legacy ``PredictorBank`` (or pass through a Surrogate)."""
     if isinstance(obj, Surrogate):

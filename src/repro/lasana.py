@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
+from repro.core.explore import CandidateSpec, DSEReport
 from repro.core.network import (NetworkEngine, NetworkRun, NetworkSpec,
                                 StreamingRun)
 from repro.core.surrogate import (FORMAT_VERSION, Manifest, Surrogate,
@@ -44,6 +45,8 @@ from repro.core.surrogate import (FORMAT_VERSION, Manifest, Surrogate,
 
 __all__ = [
     "FORMAT_VERSION",
+    "CandidateSpec",
+    "DSEReport",
     "Manifest",
     "NetworkRun",
     "StreamingRun",
@@ -51,6 +54,7 @@ __all__ = [
     "SurrogateLibrary",
     "TrainConfig",
     "engine",
+    "explore",
     "load",
     "save",
     "simulate",
@@ -154,8 +158,13 @@ def engine(spec: NetworkSpec, *, backend: str = "lasana",
         # NetworkSpec is frozen (dataclass __setattr__ is blocked), but a
         # private cache slot is lifecycle bookkeeping, not spec state
         object.__setattr__(spec, _ENGINE_ATTR, cache)
-    key = (backend, mode, id(mesh) if mesh is not None else None,
-           record_hidden)
+    # the mesh keys BY VALUE (jax.sharding.Mesh hashes devices + axis
+    # names), never by id(): after a mesh is garbage-collected, a new mesh
+    # allocated at the same address must not silently reuse an engine
+    # compiled for the dead mesh. Value-equal meshes share the engine
+    # (same devices, same axes — same compiled program); the key keeps the
+    # mesh alive only as long as the spec itself.
+    key = (backend, mode, mesh, record_hidden)
     eng = cache.get(key)
     if eng is None:
         eng = NetworkEngine(spec, backend=backend, mode=mode, mesh=mesh,
@@ -239,3 +248,29 @@ def stream(spec: NetworkSpec, stimulus, *,
                   record_hidden=record_hidden).stream(
                       stimulus, chunk_ticks=chunk_ticks,
                       surrogates=surrogates)
+
+
+def explore(candidates: CandidateSpec, surrogates, *,
+            engine=None) -> DSEReport:
+    """Vectorized design-space exploration over crossbar surrogates.
+
+    Prices every candidate in ``candidates`` (a batched
+    :class:`CandidateSpec`: layer widths, tile size, V_dd, MoE shape,
+    circuit mix) through ONE compiled program: tile counts / MoE
+    utilization / FLOP fractions are exact vectorized array math, and
+    per-tile energy/latency comes from a single fused
+    ``Surrogate.predict_heads`` pass over all candidates at once.
+    ``surrogates`` is a crossbar :class:`Surrogate` (or a
+    :class:`SurrogateLibrary` / ``{kind: Surrogate}`` dict carrying a
+    ``"crossbar"`` entry; legacy ``PredictorBank`` values are frozen).
+
+    Surrogates flow through as traced pytree arguments, so re-sweeping
+    with retrained weights of equal structure reuses the compiled program
+    with zero recompiles — ``lasana.explore`` shares one process-wide
+    :class:`repro.core.explore.DSEEngine` (pass ``engine=`` for an
+    isolated one) whose ``compile_count`` the returned
+    :class:`DSEReport` carries. ``DSEReport.pareto()`` extracts the
+    energy/latency/analog-fraction frontier. See docs/api.md ("Design-
+    space exploration")."""
+    from repro.core.explore import evaluate_candidates
+    return evaluate_candidates(candidates, surrogates, engine=engine)

@@ -1,10 +1,14 @@
-"""Architecture-exploration feature: tile math and report sanity."""
+"""Architecture-exploration feature: tile math, facade paths, and the
+vectorized design-space engine (batched CandidateSpec -> DSEReport)."""
 
 import numpy as np
 import pytest
 
-from repro.configs import get_config, reduced_config
-from repro.core.explore import TILE, explore_arch
+from repro.configs import reduced_config
+from repro.core.explore import (TILE, CandidateSpec, DSEEngine, DSEReport,
+                                _matrix_dims, _tile_table, explore_arch,
+                                pareto_mask)
+from repro.models.params import ParamSpec
 
 
 @pytest.fixture(scope="module")
@@ -14,6 +18,13 @@ def xbar_bank():
     ds = build_dataset("crossbar", TestbenchConfig(n_runs=60, n_steps=60))
     return PredictorBank("crossbar", families=("linear",)).fit(ds)
 
+
+@pytest.fixture(scope="module")
+def xbar_surrogate(xbar_bank):
+    return xbar_bank.to_surrogate()
+
+
+# --- legacy per-arch path -----------------------------------------------------
 
 def test_reduced_tile_counts(xbar_bank):
     cfg = reduced_config("starcoder2-3b")
@@ -44,3 +55,241 @@ def test_ssm_is_partially_analog(xbar_bank):
     rep = explore_arch(cfg, xbar_bank)
     # projections map, the scan itself does not -> fraction strictly < 1
     assert 0.1 < rep.analog_flop_fraction < 1.0
+
+
+# --- the expert-axis tiling bugfix --------------------------------------------
+
+def test_matrix_dims_expert_axis_multiplies_count():
+    """An (E, d, f) expert bank is E independent d x f matrices — tiled
+    E * ceil(d/T) * ceil(f/T), never ceil(E/T) * ceil(d*f/T)."""
+    spec = ParamSpec((4, 64, 96), ("experts", "embed", "mlp"))
+    assert _matrix_dims(spec) == (4, 64, 96)
+    stacked = ParamSpec((2, 4, 64, 96),
+                        ("layers", "experts", "embed", "mlp"))
+    assert _matrix_dims(stacked) == (8, 64, 96)
+    layers_only = ParamSpec((3, 64, 96), ("layers", "embed", "mlp"))
+    assert _matrix_dims(layers_only) == (3, 64, 96)
+    plain = ParamSpec((64, 4, 24), ("embed", "heads", "head_dim"))
+    assert _matrix_dims(plain) == (1, 64, 96)
+
+
+def test_moe_expert_tile_counts_exact(xbar_bank):
+    """Every routed-expert matrix in the reduced deepseek-moe config tiles
+    to the EXACT per-expert count (L * E * ceil(d/32) * ceil(f/32))."""
+    cfg = reduced_config("deepseek-moe-16b")
+    rep = explore_arch(cfg, xbar_bank)
+    m = cfg.moe
+    moe_layers = cfg.n_layers - m.first_dense
+    d, f = cfg.d_model, (m.d_ff_expert or cfg.d_ff)
+    per = -(-d // TILE) * (-(-f // TILE))
+    expect_routed = moe_layers * m.n_experts * per
+    for comp in ("w_gate", "w_up", "w_down"):
+        assert rep.tiles_by_component[comp] == expect_routed, comp
+
+
+# --- facade-path coverage -----------------------------------------------------
+
+def test_explore_arch_accepts_surrogate_and_library(xbar_bank,
+                                                    xbar_surrogate):
+    cfg = reduced_config("starcoder2-3b")
+    r_bank = explore_arch(cfg, xbar_bank)
+    r_sur = explore_arch(cfg, xbar_surrogate)
+    r_lib = explore_arch(cfg, {"crossbar": xbar_surrogate})
+    from repro.core.surrogate import SurrogateLibrary
+    r_slib = explore_arch(cfg, SurrogateLibrary({"crossbar":
+                                                 xbar_surrogate}))
+    assert r_bank.n_tiles == r_sur.n_tiles == r_lib.n_tiles
+    for other in (r_sur, r_lib, r_slib):
+        np.testing.assert_allclose(other.energy_per_token_j,
+                                   r_bank.energy_per_token_j, rtol=1e-5)
+
+
+def test_explore_rejects_library_without_crossbar(xbar_surrogate):
+    with pytest.raises(ValueError, match="crossbar"):
+        explore_arch(reduced_config("starcoder2-3b"),
+                     {"lif": xbar_surrogate})
+
+
+def test_dse_rejects_non_crossbar_surrogate():
+    import repro.lasana as lasana
+    sur = lasana.train("lif", lasana.TrainConfig(n_runs=40, n_steps=40,
+                                                 families=("mean",)))
+    with pytest.raises(ValueError, match="crossbar"):
+        DSEEngine(n_samples=16).evaluate(CandidateSpec.of(), sur)
+
+
+# --- CandidateSpec ------------------------------------------------------------
+
+def test_candidate_spec_broadcast_and_validation():
+    c = CandidateSpec.of(d_model=[128, 256, 512], v_dd=1.0)
+    assert len(c) == 3
+    assert c.v_dd.shape == (3,) and np.all(c.v_dd == 1.0)
+    with pytest.raises(ValueError, match="top_k"):
+        CandidateSpec.of(n_experts=8, top_k=16)
+    with pytest.raises(ValueError, match="entries"):
+        CandidateSpec.of(d_model=[128, 256], n_layers=[2, 4, 6])
+    with pytest.raises(TypeError, match="unknown"):
+        CandidateSpec.of(d_modell=128)
+
+
+def test_candidate_spec_grid_and_take():
+    g = CandidateSpec.grid(d_model=[256, 512], tile=[16, 32, 64])
+    assert len(g) == 6
+    assert sorted(set(zip(g.d_model.tolist(), g.tile.tolist()))) == [
+        (256, 16), (256, 32), (256, 64), (512, 16), (512, 32), (512, 64)]
+    sub = g.take([0, 5])
+    assert len(sub) == 2 and sub.d_model.tolist() == [256, 512]
+    row = g.row(1)
+    assert row["d_model"] == 256 and row["tile"] == 32
+
+
+def test_candidate_sample_deterministic():
+    a = CandidateSpec.sample(64, seed=7)
+    b = CandidateSpec.sample(64, seed=7)
+    assert np.array_equal(a.d_model, b.d_model)
+    assert np.array_equal(a.v_dd, b.v_dd)
+    moe = a.n_experts > 0
+    assert np.all(a.top_k[moe] >= 1) and np.all(
+        a.top_k[moe] <= a.n_experts[moe])
+
+
+# --- vectorized tile math -----------------------------------------------------
+
+def test_tile_table_matches_hand_formula():
+    c = CandidateSpec.of(d_model=96, d_ff=200, n_layers=3, n_heads=3,
+                         n_kv_heads=1, tile=32, vocab=1000)
+    tt = _tile_table(c)
+    dh = 96 // 3
+    td, tf, tkv = 3, 7, 1                       # ceil(96/32), ceil(200/32)
+    attn = 2 * td * td + 2 * td * tkv
+    ffn = 3 * td * tf
+    assert tt["n_tiles"][0] == 3 * (attn + ffn)
+    assert tt["stages"][0] == 3 * 4
+    p_attn = 2 * 96 * 96 + 2 * 96 * (1 * dh)
+    p_ffn = 3 * 96 * 200
+    assert tt["analog_params"][0] == 3 * (p_attn + p_ffn)
+    assert tt["total_params"][0] == 3 * (p_attn + p_ffn) + 2 * 1000 * 96
+
+
+def test_tile_table_moe_utilization():
+    dense = CandidateSpec.of(d_model=64, d_ff=64, n_layers=2)
+    moe = CandidateSpec.of(d_model=64, d_ff=64, n_layers=2, n_experts=8,
+                           top_k=2)
+    td, tm = _tile_table(dense), _tile_table(moe)
+    # d=64, tile=32, kv heads = heads -> td = tkv = tf = 2 tiles per edge
+    attn_tiles = 2 * (2 * 2 * 2 + 2 * 2 * 2)     # layers * (wq+wo + wk+wv)
+    ffn_dense = 2 * (3 * 2 * 2)                  # layers * gate/up/down
+    assert td["n_tiles"][0] == attn_tiles + ffn_dense
+    # expert bank multiplies mapped FFN tiles by E ...
+    assert tm["n_tiles"][0] == attn_tiles + 8 * ffn_dense
+    # ... but fires only the routed top-k fraction per token
+    np.testing.assert_allclose(
+        tm["tiles_token"][0], attn_tiles + 8 * ffn_dense * (2 / 8))
+    np.testing.assert_allclose(td["tiles_token"][0], td["n_tiles"][0])
+
+
+def test_tile_size_scales_counts_not_total_area():
+    """Bigger macros -> fewer tiles; energy/token is roughly tile-size
+    invariant (same matrix area) up to ceil-padding."""
+    c = CandidateSpec.of(d_model=[512, 512], d_ff=[2048, 2048],
+                         tile=[32, 128])
+    tt = _tile_table(c)
+    assert tt["n_tiles"][1] < tt["n_tiles"][0]
+    area32 = tt["tiles_token"][0] * (32 / TILE) ** 2
+    area128 = tt["tiles_token"][1] * (128 / TILE) ** 2
+    np.testing.assert_allclose(area128, area32, rtol=0.05)
+
+
+# --- the vectorized evaluator -------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dse(xbar_surrogate):
+    eng = DSEEngine(n_samples=64)
+    return eng, xbar_surrogate
+
+
+def test_batched_sweep_compiles_once_and_hot_swaps(xbar_surrogate):
+    # a private engine so compile_count is independent of test order
+    eng, sur = DSEEngine(n_samples=64), xbar_surrogate
+    cands = CandidateSpec.sample(128, seed=3)
+    r1 = eng.evaluate(cands, sur)
+    r2 = eng.evaluate(cands, sur)
+    assert eng.compile_count == 1
+    np.testing.assert_array_equal(r1.energy_per_token_j,
+                                  r2.energy_per_token_j)
+    # a retrained equal-structure surrogate re-prices with zero recompiles
+    from repro.core.dataset import TestbenchConfig, build_dataset
+    from repro.core.predictors import PredictorBank
+    ds = build_dataset("crossbar", TestbenchConfig(n_runs=60, n_steps=60,
+                                                   seed=9))
+    sur2 = PredictorBank("crossbar", families=("linear",)).fit(ds) \
+        .to_surrogate()
+    r3 = eng.evaluate(cands, sur2)
+    assert eng.compile_count == 1
+    assert not np.array_equal(r3.tile_energy_j, r1.tile_energy_j)
+
+
+def test_batched_vs_looped_parity(dse):
+    """The vectorized sweep equals per-candidate eager evaluation — the
+    batched program is a pure vectorization, not a different model."""
+    eng, sur = dse
+    cands = CandidateSpec.sample(16, seed=11)
+    batched = eng.evaluate(cands, sur)
+    for i in range(len(cands)):
+        one = eng.evaluate(cands.take([i]), sur, compiled=False)
+        np.testing.assert_allclose(one.energy_per_token_j[0],
+                                   batched.energy_per_token_j[i], rtol=1e-5)
+        np.testing.assert_allclose(one.latency_critical_ns[0],
+                                   batched.latency_critical_ns[i], rtol=1e-5)
+        assert one.n_tiles[0] == batched.n_tiles[i]
+
+
+def test_facade_explore(xbar_surrogate):
+    import repro.lasana as lasana
+    cands = CandidateSpec.sample(32, seed=1)
+    rep = lasana.explore(cands, xbar_surrogate)
+    assert isinstance(rep, DSEReport) and len(rep) == 32
+    # fully-digital candidates burn zero analog energy; everyone else > 0
+    assert np.all(rep.energy_per_token_j >= 0)
+    mapped = (cands.analog_attn | cands.analog_ffn) > 0
+    assert mapped.any() and np.all(rep.energy_per_token_j[mapped] > 0)
+    assert np.all((rep.analog_flop_fraction >= 0)
+                  & (rep.analog_flop_fraction <= 1))
+    # library form resolves the crossbar entry
+    rep2 = lasana.explore(cands, {"crossbar": xbar_surrogate})
+    np.testing.assert_array_equal(rep.n_tiles, rep2.n_tiles)
+    d = rep.as_dict(rep.pareto())
+    assert len(d["energy_per_token_j"]) == rep.pareto().size
+
+
+def test_vdd_drive_moves_energy(dse):
+    """V_dd enters through the DAC drive: a hotter rail must change the
+    predicted per-tile energy (monotone under the linear family)."""
+    eng, sur = dse
+    c = CandidateSpec.of(d_model=[256, 256], v_dd=[0.9, 1.5])
+    rep = eng.evaluate(c, sur)
+    assert rep.tile_energy_j[0] != rep.tile_energy_j[1]
+    assert rep.energy_per_token_j[0] != rep.energy_per_token_j[1]
+
+
+# --- Pareto extraction --------------------------------------------------------
+
+def test_pareto_mask_simple():
+    objs = np.array([[1.0, 1.0], [2.0, 2.0], [0.5, 3.0], [1.0, 1.0]])
+    mask = pareto_mask(objs)
+    # [2,2] is dominated by [1,1]; duplicates of an optimal point survive
+    assert mask.tolist() == [True, False, True, True]
+
+
+def test_report_pareto_members_not_dominated(dse):
+    eng, sur = dse
+    rep = eng.evaluate(CandidateSpec.sample(96, seed=5), sur)
+    front = rep.pareto()
+    assert 0 < front.size <= len(rep)
+    objs = np.stack([rep.energy_per_token_j, rep.latency_critical_ns,
+                     -rep.analog_flop_fraction], axis=1)
+    for i in front:
+        dominated = np.any(
+            np.all(objs <= objs[i], axis=1) & np.any(objs < objs[i], axis=1))
+        assert not dominated
+    assert rep.summary(int(front[0]))     # human row renders

@@ -250,6 +250,32 @@ def test_engine_cache_dies_with_spec(two_surrogates, small_net):
     assert ref() is None
 
 
+def test_engine_cache_keys_mesh_by_value(small_net):
+    """The per-spec engine cache must key meshes by VALUE, never id():
+    after a mesh is garbage-collected, a new mesh allocated at the same
+    address must not silently reuse an engine compiled for the dead mesh.
+    Value-equal meshes legitimately share one engine."""
+    import gc
+    spec, _ = small_net
+    dev = np.array(jax.devices()[:1])
+    m_x = jax.sharding.Mesh(dev, ("x",))
+    m_y = jax.sharding.Mesh(dev, ("y",))
+    e_x = lasana.engine(spec, mesh=m_x)
+    e_y = lasana.engine(spec, mesh=m_y)
+    assert e_x is not e_y
+    assert e_x.mesh is m_x and e_y.mesh is m_y
+    # same devices + axis names -> same engine, even via a new Mesh object
+    assert lasana.engine(spec, mesh=jax.sharding.Mesh(dev, ("x",))) is e_x
+    # address-reuse stress: short-lived meshes cycled through the GC must
+    # always resolve to an engine carrying the REQUESTED axis names
+    for name in ("x", "y", "x", "y", "x"):
+        mesh = jax.sharding.Mesh(dev, (name,))
+        eng = lasana.engine(spec, mesh=mesh)
+        assert tuple(eng.mesh.axis_names) == (name,)
+        del mesh, eng
+        gc.collect()
+
+
 def test_check_api_tool_passes():
     """The CI API guard agrees with the committed snapshot."""
     import pathlib
