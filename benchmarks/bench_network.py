@@ -159,7 +159,10 @@ def _record_parity(run_f, run_u) -> dict:
 
 
 def run_fused_ab(full: bool = False, smoke: bool = False) -> dict:
-    """Fused-vs-unfused A/B on the standard 2-layer CPU workload."""
+    """Fused / unfused / megakernel A/B/C on the standard 2-layer CPU
+    workload: the SAME spec/stimulus/surrogate through three compiled
+    engine programs (per-predict-call, stacked 3-dispatch predict_heads,
+    and the ISSUE-7 whole-tick megakernel via ``fused_kernel=True``)."""
     from repro.core.network import NetworkEngine, snn_spec
 
     t_steps = AB_T_STEPS_SMOKE if smoke else AB_T_STEPS
@@ -170,34 +173,49 @@ def run_fused_ab(full: bool = False, smoke: bool = False) -> dict:
     spec = snn_spec(ws, params)
 
     repeats = 5                        # min-of-N steadies the CI floor
-    eng_f = NetworkEngine(spec, surrogates=sur, record_hidden=False)
+    eng_f = NetworkEngine(spec, surrogates=sur, record_hidden=False,
+                          fused_kernel=False)
     run_f, cold_f, steady_f = warm_timed(eng_f.run, spikes,
                                          repeats=repeats, stat="min")
     eng_u = NetworkEngine(spec, surrogates=sur, record_hidden=False,
                           fused=False)
     run_u, cold_u, steady_u = warm_timed(eng_u.run, spikes,
                                          repeats=repeats, stat="min")
+    eng_m = NetworkEngine(spec, surrogates=sur, record_hidden=False,
+                          fused_kernel=True)
+    run_m, cold_m, steady_m = warm_timed(eng_m.run, spikes,
+                                         repeats=repeats, stat="min")
     events = int(run_f.events.sum())
     ev_fused = events / max(steady_f, 1e-9)
     ev_unfused = events / max(steady_u, 1e-9)
+    ev_mega = events / max(steady_m, 1e-9)
     speedup = ev_fused / max(ev_unfused, 1e-9)
     parity = _record_parity(run_f, run_u)
+    parity_mega = _record_parity(run_m, run_f)
     hlo_f = _hlo_counts(eng_f).get("mono", {})
     hlo_u = _hlo_counts(eng_u).get("mono", {})
+    hlo_m = _hlo_counts(eng_m).get("mono", {})
     return {
         "layers": list(AB_LAYERS), "t_steps": t_steps, "batch": BATCH,
         "events": events,
         "events_per_sec_fused": ev_fused,
         "events_per_sec_unfused": ev_unfused,
+        "events_per_sec_mega": ev_mega,
         "fused_speedup": speedup,
+        "mega_speedup_vs_fused": ev_mega / max(ev_fused, 1e-9),
+        "mega_speedup_vs_unfused": ev_mega / max(ev_unfused, 1e-9),
         "fused_compile_seconds": run_f.compile_seconds,
         "unfused_compile_seconds": run_u.compile_seconds,
+        "mega_compile_seconds": run_m.compile_seconds,
         "fused_steady_seconds": steady_f,
         "unfused_steady_seconds": steady_u,
+        "mega_steady_seconds": steady_m,
         "fused_cold_call_seconds": cold_f,
         "unfused_cold_call_seconds": cold_u,
-        "hlo_fused": hlo_f, "hlo_unfused": hlo_u,
+        "mega_cold_call_seconds": cold_m,
+        "hlo_fused": hlo_f, "hlo_unfused": hlo_u, "hlo_mega": hlo_m,
         "parity": parity,
+        "parity_mega": parity_mega,
     }
 
 
@@ -229,6 +247,12 @@ def run(full: bool = False):
          f"{ab['hlo_unfused'].get('dots')} "
          f"(instrs {ab['hlo_fused'].get('instructions')} vs "
          f"{ab['hlo_unfused'].get('instructions')})")
+    emit("network/events_per_sec_mega", ab["events_per_sec_mega"])
+    emit("network/mega_speedup_vs_fused", ab["mega_speedup_vs_fused"],
+         f"target >=1.15x; hlo instrs {ab['hlo_mega'].get('instructions')} "
+         f"vs {ab['hlo_fused'].get('instructions')}")
+    emit("network/mega_speedup_vs_unfused", ab["mega_speedup_vs_unfused"],
+         "target >=1.8x")
     parity = ab["parity"]
     if not (parity["outputs_identical"] and parity["events_identical"]
             and parity["energy_within_tolerance"]):
@@ -240,14 +264,29 @@ def run(full: bool = False):
         # compare parity["energy_max_rel_err"] against the documented
         # rtol=1e-5 before suspecting the fused path itself.
         _gate_fail(f"fused/unfused records diverged: {parity}", ab)
+    pm = ab["parity_mega"]
+    if not (pm["outputs_identical"] and pm["events_identical"]
+            and pm["energy_within_tolerance"]):
+        # the megakernel is a pure reformulation of the fused tick: its
+        # discrete records must match the 3-dispatch path bit for bit
+        _gate_fail(f"megakernel/fused records diverged: {pm}", ab)
     if ab["fused_speedup"] < 1.3:
         print(f"# WARNING: fused speedup {ab['fused_speedup']:.2f}x below "
               "1.3x target")
+    if ab["mega_speedup_vs_fused"] < 1.15:
+        print(f"# WARNING: megakernel speedup "
+              f"{ab['mega_speedup_vs_fused']:.2f}x below 1.15x target")
     if smoke and ab["fused_speedup"] < 1.0:
         # the CI floor: fusion must never LOSE throughput
         _gate_fail(
             f"fused path slower than unfused ({ab['fused_speedup']:.2f}x "
             "< 1.0x smoke floor)", ab)
+    if smoke and ab["mega_speedup_vs_fused"] < 1.0:
+        # same floor for the megakernel: it must never LOSE to its own
+        # fused 3-dispatch baseline
+        _gate_fail(
+            f"megakernel slower than fused baseline "
+            f"({ab['mega_speedup_vs_fused']:.2f}x < 1.0x smoke floor)", ab)
     if smoke:
         out = {"fused_ab": ab, "smoke": True}
         save_json("network_engine", out)

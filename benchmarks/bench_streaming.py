@@ -147,6 +147,23 @@ def run(full: bool = False):
                     and np.allclose(run_s.energy, run_u.energy,
                                     rtol=1e-5, atol=1e-20))
 
+    # ISSUE-7 megakernel arm: the same stream with fused_kernel=True — on
+    # this MIXED crossbar->LIF recurrent graph the engine packs heads
+    # across both circuit kinds into one library-wide stack, so this arm
+    # exercises the cross-kind pack on a real workload
+    eng_m = NetworkEngine(spec, record_hidden=False, fused_kernel=True)
+    run_mg, _, _ = warm_timed(
+        lambda: eng_m.run_stream(_stimulus_blocks(t_steps),
+                                 chunk_ticks=CHUNK_TICKS,
+                                 surrogates=banks))
+    rep_mg = run_mg.report()["network"]
+    mega_ratio = rep_mg["events_per_sec"] / max(rep_s["events_per_sec"],
+                                                1e-9)
+    mega_parity = (np.array_equal(run_s.outputs, run_mg.outputs)
+                   and np.array_equal(run_s.events, run_mg.events)
+                   and np.allclose(run_s.energy, run_mg.energy,
+                                   rtol=1e-5, atol=1e-20))
+
     # surrogate hot-swap across chunks must reuse the compiled programs
     compiles = eng.compile_count
     lif2 = lasana.train("lif", lasana.TrainConfig(
@@ -169,9 +186,12 @@ def run(full: bool = False):
         "events_per_sec_stream": rep_s["events_per_sec"],
         "events_per_sec_mono": rep_m["events_per_sec"],
         "events_per_sec_stream_unfused": rep_u["events_per_sec"],
+        "events_per_sec_stream_mega": rep_mg["events_per_sec"],
         "stream_over_mono": ratio,
         "fused_over_unfused_stream": fused_ratio,
+        "mega_over_fused_stream": mega_ratio,
         "fused_parity": bool(fused_parity),
+        "mega_parity": bool(mega_parity),
         "rss_kb_baseline": rss0,
         "peak_rss_kb_stream": p_stream.peak_kb,
         "peak_rss_kb_mono": p_mono.peak_kb,
@@ -186,6 +206,8 @@ def run(full: bool = False):
          f"bit_identical={identical} swap_recompiles={swap_recompiles}")
     emit("streaming/fused_over_unfused", fused_ratio,
          f"record_parity={fused_parity}")
+    emit("streaming/mega_over_fused", mega_ratio,
+         f"record_parity={mega_parity} (cross-kind pack)")
     emit("streaming/peak_rss_delta_kb_stream",
          p_stream.peak_kb - rss0,
          f"mono peaks {p_mono.peak_kb - rss0} kb over the same baseline")
@@ -199,6 +221,10 @@ def run(full: bool = False):
         raise SystemExit(
             "streaming record diverged from monolithic (bit-identity "
             "acceptance violated)")
+    if not mega_parity:
+        raise SystemExit(
+            "megakernel streaming record diverged from the fused baseline "
+            "(discrete records must match exactly, energy to rtol 1e-5)")
     if swap_recompiles:
         raise SystemExit(
             f"surrogate hot-swap recompiled {swap_recompiles} programs "

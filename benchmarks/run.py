@@ -52,9 +52,19 @@ def _summary(records: dict) -> dict:
                                      "events_per_sec_fused"),
         "events_per_sec_unfused": _get(net, "fused_ab",
                                        "events_per_sec_unfused"),
+        "events_per_sec_mega": _get(net, "fused_ab",
+                                    "events_per_sec_mega"),
         "events_per_sec_stream": _get(stream, "events_per_sec_stream"),
+        "events_per_sec_stream_mega": _get(stream,
+                                           "events_per_sec_stream_mega"),
         # the ISSUE-5 headline
         "fused_speedup": _get(net, "fused_ab", "fused_speedup"),
+        # the ISSUE-7 headline
+        "mega_speedup_vs_fused": _get(net, "fused_ab",
+                                      "mega_speedup_vs_fused"),
+        "mega_speedup_vs_unfused": _get(net, "fused_ab",
+                                        "mega_speedup_vs_unfused"),
+        "mega_over_fused_stream": _get(stream, "mega_over_fused_stream"),
         "fused_hlo_dots": _get(net, "fused_ab", "hlo_fused", "dots"),
         "unfused_hlo_dots": _get(net, "fused_ab", "hlo_unfused", "dots"),
         "fused_over_unfused_stream": _get(stream,

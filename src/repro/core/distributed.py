@@ -56,19 +56,28 @@ def shard_over_batch(fn, mesh: Mesh, in_specs, out_specs,
 
     ``donate_argnums`` is forwarded to ``jax.jit``: the network engine's
     streaming path donates its chunk-to-chunk carries (and the surrogate
-    leaves) so XLA aliases them in place instead of copying per chunk."""
+    leaves) so XLA aliases them in place instead of copying per chunk.
+
+    ``check_rep=False``: jax 0.4 has no replication rule for
+    ``pallas_call``, so the static replication checker rejects any body
+    that launches a kernel (e.g. the tick megakernel under
+    ``REPRO_TICK_PALLAS=1``); disabling the check changes no numerics —
+    the per-shard body and its collectives run identically."""
     return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs),
+                             out_specs=out_specs, check_rep=False),
                    donate_argnums=donate_argnums)
 
 
 def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
                   spiking: bool = False, vdd: float = 1.5,
-                  fused: bool = True):
+                  fused: bool = True, fused_kernel: bool = False):
     """jit(shard_map) of one Algorithm-1 tick; surrogate is argument 0.
 
     ``surrogate_template`` supplies only the pytree *structure* for the
-    replicated in_specs."""
+    replicated in_specs. ``fused_kernel`` is the RESOLVED fused-kernel
+    switch — the per-shard body is exactly ``lasana_step``, so the
+    megakernel runs shard-local on N/devices circuits with the head pack
+    replicated like every other surrogate leaf."""
     cspec = circuit_spec(mesh)
     state_spec = LasanaState(v=cspec, o=cspec, t_last=cspec, params=cspec)
     sur_spec = jax.tree.map(lambda _: P(), surrogate_template)
@@ -76,7 +85,8 @@ def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
     def body(surrogate, state, changed, x, t):
         new_state, e, l, o = lasana_step(surrogate, state, changed, x, t[0],
                                          clock_ns, spiking=spiking, vdd=vdd,
-                                         fused=fused)
+                                         fused=fused,
+                                         fused_kernel=fused_kernel)
         e_tot = jax.lax.psum(jnp.sum(e), tuple(mesh.axis_names))
         # spike counts are integers: fp32 accumulation silently loses
         # whole events past 2^24 per tick at dry-run scales (2^27 circuits)
@@ -86,13 +96,15 @@ def _sharded_step(mesh: Mesh, surrogate_template, *, clock_ns: float,
 
     sm = shard_map(body, mesh=mesh,
                    in_specs=(sur_spec, state_spec, cspec, cspec, P()),
-                   out_specs=(state_spec, P(), P()))
+                   out_specs=(state_spec, P(), P()),
+                   check_rep=False)     # pallas_call has no replication rule
     return jax.jit(sm)
 
 
 def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
                           spiking: bool = False, vdd: float = 1.5,
-                          fused: bool = True):
+                          fused: bool = True,
+                          fused_kernel: bool | None = None):
     """(surrogate, state, changed, x, t) -> (state, e_total, spikes_total).
 
     Returns a callable that shard_maps one tick over ``mesh``. The
@@ -102,7 +114,9 @@ def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
     ``spikes_total`` is an exact int32 count; ``vdd`` is the spiking
     circuit's supply voltage (spike resolution + discriminator level);
     ``fused`` selects the fused ``predict_heads`` tick body (default) vs
-    the per-``predict``-call baseline.
+    the per-``predict``-call baseline; ``fused_kernel`` is the tri-state
+    fused-kernel override (None defers to ``REPRO_FUSED_KERNEL``,
+    re-resolved per call so env flips recompile cleanly).
 
     Legacy call style ``make_distributed_step(bank, mesh, ...)`` (surrogate
     closed over, returned callable takes ``(state, changed, x, t)``) is
@@ -124,24 +138,31 @@ def make_distributed_step(mesh, _legacy_mesh=None, *, clock_ns: float,
             "make_distributed_step(mesh, ...) and pass the Surrogate as "
             "the step's first argument", DeprecationWarning, stacklevel=2)
         surrogate = as_surrogate(mesh)
+        from repro.kernels import ops
         fn = _sharded_step(_legacy_mesh, surrogate, clock_ns=clock_ns,
-                           spiking=spiking, vdd=vdd, fused=fused)
+                           spiking=spiking, vdd=vdd, fused=fused,
+                           fused_kernel=ops.fused_kernel_enabled(
+                               fused_kernel))
         return lambda state, changed, x, t: fn(surrogate, state, changed,
                                                x, t)
 
     cache: dict = {}
 
     def step(surrogate, state, changed, x, t):
-        from repro.core.surrogate import _kernel_heads_enabled
+        from repro.kernels import ops
         surrogate = as_surrogate(surrogate)
-        # the REPRO_FUSED_KERNEL switch selects a different traced body,
-        # so it joins the treedef in the program cache key — flipping it
-        # mid-process recompiles cleanly instead of silently reusing
-        key = (jax.tree.structure(surrogate), _kernel_heads_enabled())
+        # the fused-kernel switch and the megakernel launcher each select
+        # a different traced body, so they join the treedef in the
+        # program cache key — flipping either mid-process recompiles
+        # cleanly instead of silently reusing the old program
+        fk = ops.fused_kernel_enabled(fused_kernel)
+        key = (jax.tree.structure(surrogate), fk,
+               ops.tick_pallas_enabled())
         fn = cache.get(key)
         if fn is None:
             fn = _sharded_step(mesh, surrogate, clock_ns=clock_ns,
-                               spiking=spiking, vdd=vdd, fused=fused)
+                               spiking=spiking, vdd=vdd, fused=fused,
+                               fused_kernel=fk)
             cache[key] = fn
         return fn(surrogate, state, changed, x, t)
 
@@ -165,15 +186,18 @@ def abstract_sim_inputs(n_circuits: int, n_in: int, n_params: int):
 def lower_distributed_step(surrogate, mesh: Mesh, n_circuits: int, n_in: int,
                            n_params: int, *, clock_ns: float,
                            spiking: bool = False, vdd: float = 1.5,
-                           fused: bool = True):
+                           fused: bool = True,
+                           fused_kernel: bool | None = None):
     """Lower one sharded simulation tick from ShapeDtypeStructs (dry-run).
 
     ``surrogate`` may be a Surrogate or a legacy PredictorBank; its arrays
     stay concrete (they are the weights), the simulation inputs are
     abstract."""
+    from repro.kernels import ops
     surrogate = as_surrogate(surrogate)
     step = _sharded_step(mesh, surrogate, clock_ns=clock_ns, spiking=spiking,
-                         vdd=vdd, fused=fused)
+                         vdd=vdd, fused=fused,
+                         fused_kernel=ops.fused_kernel_enabled(fused_kernel))
     args = abstract_sim_inputs(n_circuits, n_in, n_params)
     with mesh:
         return step.lower(surrogate, *args)

@@ -595,11 +595,20 @@ class NetworkEngine:
              ``fused=False`` compiles the per-``predict``-call
              formulation (the benchmark A/B baseline — results agree
              within a few ULPs, see tests/test_fused.py).
+    fused_kernel  lasana only: tri-state override of the
+             ``REPRO_FUSED_KERNEL`` switch (resolved through
+             ``kernels.ops.fused_kernel_enabled``). ``True`` engages the
+             whole-tick megakernel hot path (``kernels.tick_megakernel``:
+             cross-kind head packs, one fused idle->act->transition body
+             per tick, Pallas launcher per ``REPRO_TICK_PALLAS``);
+             ``False`` forces the stacked-dispatch path regardless of the
+             env; ``None`` (default) defers to the env var.
     """
 
     def __init__(self, spec: NetworkSpec, backend: str = "lasana", *,
                  surrogates=None, bank=None, mode: str = "standalone",
-                 mesh=None, record_hidden: bool = True, fused: bool = True):
+                 mesh=None, record_hidden: bool = True, fused: bool = True,
+                 fused_kernel: bool | None = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
         if mode not in MODES:
@@ -614,6 +623,8 @@ class NetworkEngine:
         self.mesh = mesh
         self.record_hidden = record_hidden
         self.fused = bool(fused)
+        self.fused_kernel = (None if fused_kernel is None
+                             else bool(fused_kernel))
         self.circs = tuple(get_circuit(l.circuit) for l in spec.layers)
         if bank is not None:
             warnings.warn(
@@ -931,10 +942,12 @@ class NetworkEngine:
     # --- per-layer tick functions ---------------------------------------------
 
     def _lif_tick(self, i: int):
-        """Returns tick(carry, drive, changed, k, bank) -> (carry', spikes
-        (B, n), e, l, events); ``drive`` is the pre-combined synaptic drive
-        and ``bank`` the layer kind's (traced) Surrogate, None outside the
-        lasana backend."""
+        """Returns tick(carry, drive, changed, k, bank, pack, layout) ->
+        (carry', spikes (B, n), e, l, events); ``drive`` is the
+        pre-combined synaptic drive and ``bank`` the layer kind's (traced)
+        Surrogate, None outside the lasana backend. ``pack``/``layout``
+        are the kind's megakernel head pack (built once per program call
+        by :meth:`_mk_pack`) or None for the stacked-dispatch path."""
         layer = self.spec.layers[i]
         amp = self.spec.spike_amp
         circ = self.circs[i]
@@ -942,8 +955,9 @@ class NetworkEngine:
         n_out = layer.n_out
         backend, mode = self.backend, self.mode
         fused = self.fused
+        fused_kernel = self.fused_kernel
 
-        def tick(carry, drive, changed, k, bank):
+        def tick(carry, drive, changed, k, bank, pack=None, layout=None):
             # drive is (B_local, n_out): under shard_map the batch dim is
             # shard-local, so every shape below derives from the input
             t = (k + 1.0) * clock
@@ -971,13 +985,19 @@ class NetworkEngine:
                                                   carry.params)
                 ns, e, l, _ = lasana_step(bank, carry, changed, xin, t,
                                           clock, spiking=True, vdd=amp,
-                                          known_out=out, fused=fused)
+                                          known_out=out, fused=fused,
+                                          fused_kernel=fused_kernel,
+                                          megakernel_pack=pack,
+                                          megakernel_layout=layout)
                 spikes = out
                 carry = ns._replace(v=v_new, o=out)
             else:                                           # standalone
                 ns, e, l, o = lasana_step(bank, carry, changed, xin, t,
                                           clock, spiking=True, vdd=amp,
-                                          fused=fused)
+                                          fused=fused,
+                                          fused_kernel=fused_kernel,
+                                          megakernel_pack=pack,
+                                          megakernel_layout=layout)
                 spikes = jnp.where(changed, o, 0.0)
                 carry = ns
 
@@ -987,8 +1007,9 @@ class NetworkEngine:
         return tick
 
     def _xbar_tick(self, i: int):
-        """Returns tick(carry, x_volts (B, fan_in), k, bank) -> (carry',
-        codes (B, n_out), e, l, events); ``bank`` as in :meth:`_lif_tick`.
+        """Returns tick(carry, x_volts (B, fan_in), k, bank, pack, layout)
+        -> (carry', codes (B, n_out), e, l, events); ``bank``/``pack``/
+        ``layout`` as in :meth:`_lif_tick`.
 
         Rows are combinational with sample-and-hold inputs: a row-segment
         fires an input event iff any of its input lines is live (|x| > eps)
@@ -1002,8 +1023,9 @@ class NetworkEngine:
         levels = 2 ** layer.adc_bits - 1
         backend, mode = self.backend, self.mode
         fused = self.fused
+        fused_kernel = self.fused_kernel
 
-        def tick(carry, x, k, bank):
+        def tick(carry, x, k, bank, pack=None, layout=None):
             # x is (B_local, fan_in) volts: under shard_map the batch dim is
             # shard-local, so every shape below derives from the input; row
             # params ride in the carry so they shard with the rows
@@ -1037,7 +1059,10 @@ class NetworkEngine:
                                                     carry.params)
                 ns, e, l, _ = lasana_step(bank, carry, changed, xin, t,
                                           clock, known_out=known,
-                                          fused=fused)
+                                          fused=fused,
+                                          fused_kernel=fused_kernel,
+                                          megakernel_pack=pack,
+                                          megakernel_layout=layout)
                 if known is not None:
                     # behavioral value is both published output and state
                     ns = ns._replace(v=ns.o)
@@ -1117,12 +1142,14 @@ class NetworkEngine:
                 return "tanh"
             return spec.layers[src_idx].activation
 
-        def cascade(banks, carries, prev_ys, u_in, k):
+        def cascade(banks, carries, prev_ys, u_in, k, packs=None):
+            packs = packs or {}
             cur, src_kind, src_idx = u_in, "input", None
             new_carries, new_ys = [], []
             es, ls, evs = [], [], []
             for i in range(n_layers):
                 layer = spec.layers[i]
+                pk, ly = packs.get(kinds[i], (None, None))
                 if kinds[i] == "lif":
                     # combine feed-forward + delayed-edge synaptic drive
                     u = adapt_signal(src_kind, "lif", cur, spike_amp=amp,
@@ -1144,7 +1171,8 @@ class NetworkEngine:
                     changed = incoming.reshape(-1)
                     carry, y, e, l, ev = ticks[i](carries[i], drive,
                                                   changed, k,
-                                                  banks.get(kinds[i]))
+                                                  banks.get(kinds[i]),
+                                                  pk, ly)
                 else:
                     circ = self.circs[i]
                     xv = adapt_signal(src_kind, "crossbar", cur,
@@ -1157,7 +1185,8 @@ class NetworkEngine:
                             activation=src_activation(src)) @ we
                     xv = jnp.clip(xv, circ.input_lo, circ.input_hi)
                     carry, y, e, l, ev = ticks[i](carries[i], xv, k,
-                                                  banks.get(kinds[i]))
+                                                  banks.get(kinds[i]),
+                                                  pk, ly)
                 new_carries.append(carry)
                 new_ys.append(y)
                 es.append(jnp.sum(e))
@@ -1169,15 +1198,99 @@ class NetworkEngine:
 
         return cascade
 
+    def _mk_pack(self, banks):
+        """``{kind: (pack, PackLayout)}`` for the megakernel hot path.
+
+        Empty unless the engine runs the lasana fused path AND the
+        fused-kernel switch resolves on (``fused_kernel=`` override, else
+        ``REPRO_FUSED_KERNEL``). Prefers ONE cross-kind
+        ``pack_library`` pack (every kind shares a resident weight block,
+        addressed by static offsets); if any kind is ineligible, packable
+        kinds still get their own single-kind packs and the rest fall back
+        to stacked dispatch inside ``lasana_step``."""
+        if self.backend != "lasana" or not self.fused:
+            return {}
+        from repro.kernels import ops
+        if not ops.fused_kernel_enabled(self.fused_kernel):
+            return {}
+        from repro.kernels import tick_megakernel as mk
+        pack, layouts = mk.pack_library(banks)
+        if pack is not None:
+            return {kind: (pack, lo) for kind, lo in layouts.items()}
+        packs = {}
+        for kind in banks.kinds():
+            p, lo = mk.pack_heads(banks.get(kind))
+            if p is not None:
+                packs[kind] = (p, lo)
+        return packs
+
+    def _chunk_eligible(self) -> bool:
+        """Whether :meth:`_chunk_fast_path` can replace the generic scan:
+        a single-LIF-layer standalone lasana graph with no delayed edges
+        (the cascade then has no cross-layer or cross-tick dataflow beyond
+        the LIF carry itself, which the time-looped kernel owns)."""
+        spec = self.spec
+        return (self.backend == "lasana" and self.mode == "standalone"
+                and self.fused and spec.n_layers == 1
+                and spec.circuits == ("lif",) and not spec.edges)
+
+    def _chunk_fast_path(self, pack_layout, carries, input_seq, ks):
+        """The whole chunk as ONE time-looped megakernel.
+
+        Event detection and synaptic drive vectorize over the chunk up
+        front (they have no tick-to-tick dependence); the LIF carry — the
+        only sequential dataflow — then advances inside
+        ``megakernel_chunk``, whose jnp body is a ``lax.scan`` of the
+        exact per-tick step (bit-identical to the generic scan) and whose
+        Pallas body keeps v/o/t_last VMEM-resident across the chunk.
+        Returns the same ``((carries, prev_ys), outs)`` as the scan."""
+        from repro.kernels.tick_megakernel import megakernel_chunk
+        spec = self.spec
+        layer = spec.layers[0]
+        amp = spec.spike_amp
+        clock = self.circs[0].clock_ns
+        pack, layout = pack_layout
+        t_steps, b = input_seq.shape[0], input_seq.shape[1]
+
+        u = input_seq                       # "input" -> lif is the identity
+        drive = (u @ layer.weight) / amp
+        conn = (jnp.abs(layer.weight) > 0).astype(jnp.float32)
+        pre = (jnp.abs(u) > event_threshold("input", amp)
+               ).astype(jnp.float32)
+        changed_seq = ((pre @ conn) > 0.5).reshape(t_steps, -1)
+        xin_seq = drive_to_circuit_inputs(drive, spike_amp=amp
+                                          ).reshape(t_steps, -1, 3)
+        t_seq = (ks + 1.0) * clock
+        new_state, o_seq, e_seq, l_seq = megakernel_chunk(
+            pack, layer.circuit, carries[0], changed_seq, xin_seq, t_seq,
+            clock, spiking=True, vdd=amp, layout=layout)
+        spikes = jnp.where(changed_seq, o_seq, 0.0
+                           ).reshape(t_steps, b, layer.n_out)
+        es = jnp.sum(e_seq, axis=1)[:, None]
+        ls = jnp.max(l_seq, axis=1)[:, None]
+        evs = jnp.sum(changed_seq, axis=1, dtype=jnp.int32)[:, None]
+        out = (spikes, (spikes,) if self.record_hidden else (), es, ls, evs)
+        return ([new_state], [spikes[-1]]), out
+
     def _scan_chunk(self, cascade, banks, carries, prev_ys, input_seq, ks):
-        """lax.scan the cascade over one contiguous block of ticks."""
+        """lax.scan the cascade over one contiguous block of ticks.
+
+        Megakernel head packs are built HERE, once per program call and
+        OUTSIDE the scan, from the traced surrogate leaves — so the pack
+        rides the hot-swap contract (retrained weights reuse the program)
+        without rebuilding per tick. Eligible single-layer graphs skip the
+        scan entirely for the time-looped :meth:`_chunk_fast_path`."""
         record_hidden = self.record_hidden
+        packs = self._mk_pack(banks)
+        if "lif" in packs and self._chunk_eligible():
+            return self._chunk_fast_path(packs["lif"], carries,
+                                         input_seq, ks)
 
         def tick(state, xs):
             carries, prev_ys = state
             u_in, k = xs
             new_carries, new_ys, es, ls, evs = cascade(
-                banks, carries, prev_ys, u_in, k)
+                banks, carries, prev_ys, u_in, k, packs)
             out = (new_ys[-1],
                    tuple(new_ys) if record_hidden else (),
                    es, ls, evs)
@@ -1358,17 +1471,22 @@ class NetworkEngine:
 
         ``kind`` separates the monolithic (``"mono"``), streaming-chunk
         (``"stream"``) and stream-flush (``"flush"``) programs; the
-        engine's ``fused`` flag AND the ``REPRO_FUSED_KERNEL`` env switch
-        are part of the key because they select a different traced
-        inference body (without the env flag in the key, flipping it
-        after the first run would silently reuse the old program). Two
-        libraries with equal treedefs (manifests included) and equal leaf
-        shapes/dtypes share one executable — a retrained surrogate is a
-        weight swap, not a recompile. The surrogate part of the key is
+        engine's ``fused`` flag, the resolved fused-kernel switch
+        (``fused_kernel=`` override else ``REPRO_FUSED_KERNEL``) and the
+        resolved megakernel launcher (``REPRO_TICK_PALLAS``) are part of
+        the key because each selects a different traced inference body
+        (without them in the key, flipping a switch after the first run
+        would silently reuse the old program). Two libraries with equal
+        treedefs (manifests included) and equal leaf shapes/dtypes share
+        one executable — a retrained surrogate is a weight swap, not a
+        recompile. The surrogate part of the key is
         ``surrogate.structure_key``, shared with the DSE sweep engine so
         the hot-swap contract cannot drift between the two."""
-        from repro.core.surrogate import _kernel_heads_enabled, structure_key
-        return (kind, self.fused, _kernel_heads_enabled(), b, t_steps,
+        from repro.core.surrogate import structure_key
+        from repro.kernels import ops
+        return (kind, self.fused,
+                ops.fused_kernel_enabled(self.fused_kernel),
+                ops.tick_pallas_enabled(), b, t_steps,
                 structure_key(banks))
 
     def _compiled(self, key, build, example_args):

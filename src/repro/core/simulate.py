@@ -155,19 +155,22 @@ def run_behavioral(circuit, active, x, params) -> LayerRun:
 
 @functools.partial(jax.jit,
                    static_argnames=("clock", "spiking", "oracle", "annotate",
-                                    "vdd", "fused", "kernel_heads"))
+                                    "vdd", "fused", "fused_kernel",
+                                    "tick_pallas"))
 def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
                 clock, spiking, oracle, annotate, vdd=1.5, fused=True,
-                kernel_heads=False):
+                fused_kernel=False, tick_pallas=False):
     """Algorithm 1 over T ticks; ``surrogate`` is a traced pytree argument.
 
     One compiled program per (shapes, manifest, flags): sweeping retrained
     surrogates through this entry point never recompiles. ``fused``
     selects the fused ``predict_heads`` tick body (default) vs the
-    per-``predict``-call baseline. ``kernel_heads`` mirrors the
-    ``REPRO_FUSED_KERNEL`` env switch purely as a cache key — the flag is
-    read at trace time inside the surrogate, so without it here a flip
-    after the first call would silently reuse the old program."""
+    per-``predict``-call baseline. ``fused_kernel`` is the RESOLVED
+    fused-kernel switch (``ops.fused_kernel_enabled``), genuinely threaded
+    into every tick — it engages the whole-tick megakernel when the
+    surrogate is packable and doubles as the program cache key the old
+    env-read-at-trace-time scheme needed. ``tick_pallas`` is cache-key
+    only (``lasana_step`` resolves the launcher itself)."""
     state0 = init_state(params.shape[0], params)
 
     def step(state, xs):
@@ -177,7 +180,8 @@ def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
         new_state, e, l, o = lasana_step(surrogate, state, a, xi, t, clock,
                                          spiking=spiking, vdd=vdd,
                                          known_out=k_o if annotate else None,
-                                         fused=fused)
+                                         fused=fused,
+                                         fused_kernel=fused_kernel)
         if annotate:
             # the behavioral model owns outputs AND state; LASANA only
             # annotates energy/latency (cf. the network engine's _lif_tick)
@@ -193,7 +197,8 @@ def _lasana_sim(surrogate, active, x, params, times, v_oracle, known_out, *,
 def run_lasana(surrogate, circuit, active, x, params, *,
                oracle_states: Optional[np.ndarray] = None,
                annotate_outputs: Optional[np.ndarray] = None,
-               fused: bool = True) -> LayerRun:
+               fused: bool = True,
+               fused_kernel: Optional[bool] = None) -> LayerRun:
     """Algorithm 1 over T ticks.
 
     surrogate        — a trained :class:`Surrogate` (legacy ``PredictorBank``
@@ -207,6 +212,10 @@ def run_lasana(surrogate, circuit, active, x, params, *,
                        the energy/latency features, so that is an error).
     fused            — fused ``predict_heads`` tick body (default) vs the
                        per-``predict``-call baseline (A/B benchmarks).
+    fused_kernel     — tri-state fused-kernel override (None defers to
+                       ``REPRO_FUSED_KERNEL``; resolved once through
+                       ``kernels.ops.fused_kernel_enabled``); when on,
+                       packable surrogates take the whole-tick megakernel.
     """
     if annotate_outputs is not None and oracle_states is None:
         raise ValueError(
@@ -233,12 +242,13 @@ def run_lasana(surrogate, circuit, active, x, params, *,
     known = (jnp.asarray(annotate_outputs, jnp.float32) if annotate
              else jnp.zeros((t_steps, n), jnp.float32))
 
-    from repro.core.surrogate import _kernel_heads_enabled
+    from repro.kernels import ops
     out, compile_s, wall = _timed_cached(
         _lasana_sim, surrogate, active, x, params, times, v_oracle, known,
         clock=clock, spiking=spiking, oracle=oracle, annotate=annotate,
         vdd=float(getattr(circuit, "vdd", 1.5)), fused=fused,
-        kernel_heads=_kernel_heads_enabled())
+        fused_kernel=ops.fused_kernel_enabled(fused_kernel),
+        tick_pallas=ops.tick_pallas_enabled())
     outs, states, energy, latency = out
     return LayerRun(outputs=np.asarray(outs), states=np.asarray(states),
                     energy=np.asarray(energy), latency=np.asarray(latency),

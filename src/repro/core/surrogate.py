@@ -203,10 +203,10 @@ def _predict_table_stacked(heads, x):
     return jnp.take_along_axis(s["ty"], jnp.argmin(d, axis=2), axis=1)
 
 
-def _predict_mlp_stacked(heads, x):
+def _predict_mlp_stacked(heads, x, fused_kernel=None):
     s = _stack_arrays(heads)
     n_layers = sum(1 for k in heads[0] if k.startswith("w"))
-    if n_layers == 3 and _kernel_heads_enabled():
+    if n_layers == 3 and _kernel_heads_enabled(fused_kernel):
         # production MLP(100, 50) config on the Pallas multi-head kernel:
         # all P heads' weights stay resident in VMEM, grid over N-blocks
         from repro.kernels import ops
@@ -232,15 +232,18 @@ FAMILY_PREDICT_STACKED = {
 }
 
 
-def _kernel_heads_enabled() -> bool:
+def _kernel_heads_enabled(override=None) -> bool:
     """Dispatch stacked MLP heads to the fused Pallas multi-head kernel.
 
     Off by default: the einsum path compiles to the same batched dots on
-    every backend, while the kernel path (REPRO_FUSED_KERNEL=1) keeps all
-    heads' weights resident in VMEM and grids only over N-blocks — the
-    layout built for real TPUs (kernels/mlp_surrogate.py)."""
-    import os
-    return os.environ.get("REPRO_FUSED_KERNEL", "0") == "1"
+    every backend, while the kernel path (REPRO_FUSED_KERNEL=1, or an
+    explicit ``fused_kernel=`` override — see
+    ``ops.fused_kernel_enabled``, the single source of truth for the
+    flag) keeps all heads' weights resident in VMEM and grids only over
+    N-blocks — the layout built for real TPUs
+    (kernels/mlp_surrogate.py)."""
+    from repro.kernels import ops
+    return ops.fused_kernel_enabled(override)
 
 
 # the Algorithm-1 head schedule: which predictors read which of the three
@@ -371,7 +374,8 @@ class Surrogate:
         return y / self.manifest.scale_of(pname)
 
     def predict_heads(self, feats_idle=None, feats_act=None, feats_tr=None,
-                      *, heads=None, augmented: bool = False) -> dict:
+                      *, heads=None, augmented: bool = False,
+                      fused_kernel=None) -> dict:
         """Fused multi-head inference: one feature build + one batched pass
         per (variant, family) group, instead of one :meth:`predict`
         dispatch per head.
@@ -461,8 +465,15 @@ class Surrogate:
                     out[v][p] = FAMILY_PREDICT[fam](self.params[p], x) \
                         / self.manifest.scale_of(p)
             else:
-                ys = FAMILY_PREDICT_STACKED[fam](
-                    [self.params[p] for p in pnames], x)
+                fn = FAMILY_PREDICT_STACKED[fam]
+                if fam == "mlp":
+                    # only the MLP family has a Pallas kernel path; thread
+                    # the explicit override so tests/callers can pick the
+                    # path without env mutation (ops.fused_kernel_enabled)
+                    ys = fn([self.params[p] for p in pnames], x,
+                            fused_kernel=fused_kernel)
+                else:
+                    ys = fn([self.params[p] for p in pnames], x)
                 for i, p in enumerate(pnames):
                     out[v][p] = ys[i] / self.manifest.scale_of(p)
         return out

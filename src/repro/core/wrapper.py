@@ -98,7 +98,9 @@ def _resolve_output(o_hat, o_prev, *, out_eps, spiking, vdd):
 
 def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
                 out_eps: float = 0.02, spiking: bool = False,
-                known_out=None, vdd: float = 1.5, fused: bool = True):
+                known_out=None, vdd: float = 1.5, fused: bool = True,
+                fused_kernel: bool | None = None, megakernel_pack=None,
+                megakernel_layout=None):
     """One digital tick for N circuits (Algorithm 1).
 
     surrogate  a :class:`repro.core.surrogate.Surrogate` — an immutable
@@ -136,19 +138,46 @@ def lasana_step(surrogate, state: LasanaState, changed, x, t, clock_ns, *,
              without ``predict_heads`` — keeps the original
              one-``predict``-per-head formulation, the benchmark A/B
              baseline.
+    fused_kernel  kernel-path override threaded to
+             ``ops.fused_kernel_enabled`` (None = the
+             ``REPRO_FUSED_KERNEL`` env default). When the kernel path is
+             on AND the surrogate's heads are packable, the whole tick
+             collapses further — from three stacked dispatches to ONE
+             megakernel evaluation with all stages chained in VMEM (see
+             kernels/tick_megakernel.py); otherwise the stacked
+             ``predict_heads`` path routes its 3-layer MLP heads through
+             the multi-head Pallas kernel as before.
+    megakernel_pack / megakernel_layout  a pre-built
+             ``tick_megakernel.pack_heads``/``pack_library`` pack —
+             callers ticking many banks (network cascades) build one
+             cross-kind pack and thread each kind's slice here; when
+             None, the pack is derived from ``surrogate`` on the fly.
     returns  (new_state, e (N,), l (N,), o (N,))
     """
     if fused and hasattr(surrogate, "predict_heads"):
+        from repro.kernels import ops
+        if ops.fused_kernel_enabled(fused_kernel):
+            from repro.kernels import tick_megakernel as mk
+            pack, layout = megakernel_pack, megakernel_layout
+            if pack is None:
+                pack, layout = mk.pack_heads(surrogate)
+            if pack is not None:
+                return mk.megakernel_step(
+                    pack, surrogate.manifest.circuit, state, changed, x, t,
+                    clock_ns, out_eps=out_eps, spiking=spiking,
+                    known_out=known_out, vdd=vdd, layout=layout)
         return _lasana_step_fused(surrogate, state, changed, x, t, clock_ns,
                                   out_eps=out_eps, spiking=spiking,
-                                  known_out=known_out, vdd=vdd)
+                                  known_out=known_out, vdd=vdd,
+                                  fused_kernel=fused_kernel)
     return _lasana_step_percall(surrogate, state, changed, x, t, clock_ns,
                                 out_eps=out_eps, spiking=spiking,
                                 known_out=known_out, vdd=vdd)
 
 
 def _lasana_step_fused(surrogate, state, changed, x, t, clock_ns, *,
-                       out_eps, spiking, known_out, vdd):
+                       out_eps, spiking, known_out, vdd,
+                       fused_kernel=None):
     """Algorithm 1 via ``Surrogate.predict_heads`` (the fused hot path).
 
     Head schedule (standalone mode) — the data dependencies allow at most
@@ -192,12 +221,13 @@ def _lasana_step_fused(surrogate, state, changed, x, t, clock_ns, *,
             feats_tr=aug_tr,
             heads={"idle": ("M_ES",), "act": ("M_ES",),
                    "tr": ("M_ED", "M_L")},
-            augmented=True)
+            augmented=True, fused_kernel=fused_kernel)
         e_s_idle = r["idle"]["M_ES"]
         e_s, e_d, lat = r["act"]["M_ES"], r["tr"]["M_ED"], r["tr"]["M_L"]
     else:
         r1 = surrogate.predict_heads(feats_idle=feats_idle,
-                                     heads={"idle": ("M_ES", "M_V")})
+                                     heads={"idle": ("M_ES", "M_V")},
+                                     fused_kernel=fused_kernel)
         e_s_idle = r1["idle"]["M_ES"]
         v_cur = jnp.where(stale, r1["idle"]["M_V"], state.v)
 
@@ -208,7 +238,8 @@ def _lasana_step_fused(surrogate, state, changed, x, t, clock_ns, *,
         aug_act = _augment(circuit, feats)
         r2 = surrogate.predict_heads(feats_act=aug_act,
                                      heads={"act": ("M_O", "M_V", "M_ES")},
-                                     augmented=True)
+                                     augmented=True,
+                                     fused_kernel=fused_kernel)
         o_hat, v_new, e_s = (r2["act"]["M_O"], r2["act"]["M_V"],
                              r2["act"]["M_ES"])
         out_changed, o_resolved = _resolve_output(
@@ -217,7 +248,8 @@ def _lasana_step_fused(surrogate, state, changed, x, t, clock_ns, *,
                                     o_resolved)
         r3 = surrogate.predict_heads(feats_tr=aug_tr,
                                      heads={"tr": ("M_ED", "M_L")},
-                                     augmented=True)
+                                     augmented=True,
+                                     fused_kernel=fused_kernel)
         e_d, lat = r3["tr"]["M_ED"], r3["tr"]["M_L"]
 
     return _finish_tick(state, changed, stale, e_s_idle, e_d, e_s, lat,

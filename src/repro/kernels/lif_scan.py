@@ -20,60 +20,135 @@ from jax.experimental import pallas as pl
 from repro.core.circuits import LIFNeuron
 
 
-def _make_kernel(circ: LIFNeuron):
+def _period_math(circ: LIFNeuron, st, xx, pp):
+    """Integrate ONE clock period for a block — the shared in-register
+    body of both the single-period kernel and the time-looped chunk
+    kernel (so the two can never drift numerically). Returns
+    ``(new_state (bn, 3), out, energy, latency, spiked)``."""
     dt = circ.clock_ns / circ.n_substeps
+    v0, adap0, ref0 = st[:, 0], st[:, 1], st[:, 2]
+    w, x, n_spk = xx[:, 0], xx[:, 1], xx[:, 2]
+    v_leak, v_th_knob, v_adap, v_ref = pp[:, 0], pp[:, 1], pp[:, 2], pp[:, 3]
 
+    i_in = circ.g_syn * w * x * n_spk / 5.0
+    leak_rate = (circ.i_leak0 / circ.c_mem) * jnp.exp(
+        (v_leak - 0.5) / circ.ut) * 1e-9
+    tau_ref_ns = 2.0 + 10.0 * (v_ref - 0.5)
+    thresh = 0.8 + 1.0 * (v_th_knob - 0.5)
+    adap_gain = 0.15 * (1.0 + 2.0 * (v_adap - 0.5))
+    dv = (i_in / circ.c_mem) * 1e-9 * dt
+    decay = jnp.exp(-leak_rate * dt)
+    p_static_base = circ.g_static
+
+    def sub(i, carry):
+        v, adap, ref, out, energy, t_spk = carry
+        in_ref = ref > 0.0
+        v_new = jnp.where(in_ref, 0.0, (v + dv) * decay)
+        v_new = jnp.clip(v_new, 0.0, circ.vdd)
+        eff_th = thresh + adap * 1.0
+        fire = (v_new >= eff_th) & (~in_ref)
+        v_new = jnp.where(fire, 0.0, v_new)
+        ref_new = jnp.where(fire, tau_ref_ns, jnp.maximum(ref - dt, 0.0))
+        adap_new = adap * jnp.exp(-dt / 8.0) + jnp.where(fire, adap_gain, 0.0)
+        out_new = jnp.where(fire, circ.vdd, out)
+        t_now = (i + 1).astype(jnp.float32) * dt
+        t_spk = jnp.where(fire & (t_spk < 0), t_now, t_spk)
+        p_static = p_static_base * jnp.square(v_leak + v_new * 0.3)
+        e_sub = p_static * dt * 1e-9
+        e_sub = e_sub + jnp.abs(i_in) * jnp.abs(v_new) * dt * 1e-9 * 0.5
+        e_spk = jnp.where(fire, circ.c_spike * circ.vdd ** 2, 0.0)
+        return (v_new, adap_new, ref_new, out_new, energy + e_sub + e_spk,
+                t_spk)
+
+    zeros = jnp.zeros_like(v0)
+    init = (v0, adap0, ref0, zeros, zeros, -jnp.ones_like(v0))
+    v_end, adap_end, ref_end, out, energy, t_spk = jax.lax.fori_loop(
+        0, circ.n_substeps, sub, init)
+    spiked = t_spk > 0
+    new_state = jnp.stack([v_end, adap_end, ref_end], axis=-1)
+    latency = jnp.where(spiked, t_spk, circ.clock_ns)
+    return new_state, out, energy, latency, spiked
+
+
+def _make_kernel(circ: LIFNeuron):
     def kernel(state_ref, x_ref, p_ref, new_state_ref, out_ref, energy_ref,
                latency_ref, spiked_ref):
         st = state_ref[...].astype(jnp.float32)
         xx = x_ref[...].astype(jnp.float32)
         pp = p_ref[...].astype(jnp.float32)
-        v0, adap0, ref0 = st[:, 0], st[:, 1], st[:, 2]
-        w, x, n_spk = xx[:, 0], xx[:, 1], xx[:, 2]
-        v_leak, v_th_knob, v_adap, v_ref = pp[:, 0], pp[:, 1], pp[:, 2], pp[:, 3]
-
-        i_in = circ.g_syn * w * x * n_spk / 5.0
-        leak_rate = (circ.i_leak0 / circ.c_mem) * jnp.exp(
-            (v_leak - 0.5) / circ.ut) * 1e-9
-        tau_ref_ns = 2.0 + 10.0 * (v_ref - 0.5)
-        thresh = 0.8 + 1.0 * (v_th_knob - 0.5)
-        adap_gain = 0.15 * (1.0 + 2.0 * (v_adap - 0.5))
-        dv = (i_in / circ.c_mem) * 1e-9 * dt
-        decay = jnp.exp(-leak_rate * dt)
-        p_static_base = circ.g_static
-
-        def sub(i, carry):
-            v, adap, ref, out, energy, t_spk = carry
-            in_ref = ref > 0.0
-            v_new = jnp.where(in_ref, 0.0, (v + dv) * decay)
-            v_new = jnp.clip(v_new, 0.0, circ.vdd)
-            eff_th = thresh + adap * 1.0
-            fire = (v_new >= eff_th) & (~in_ref)
-            v_new = jnp.where(fire, 0.0, v_new)
-            ref_new = jnp.where(fire, tau_ref_ns, jnp.maximum(ref - dt, 0.0))
-            adap_new = adap * jnp.exp(-dt / 8.0) + jnp.where(fire, adap_gain, 0.0)
-            out_new = jnp.where(fire, circ.vdd, out)
-            t_now = (i + 1).astype(jnp.float32) * dt
-            t_spk = jnp.where(fire & (t_spk < 0), t_now, t_spk)
-            p_static = p_static_base * jnp.square(v_leak + v_new * 0.3)
-            e_sub = p_static * dt * 1e-9
-            e_sub = e_sub + jnp.abs(i_in) * jnp.abs(v_new) * dt * 1e-9 * 0.5
-            e_spk = jnp.where(fire, circ.c_spike * circ.vdd ** 2, 0.0)
-            return (v_new, adap_new, ref_new, out_new, energy + e_sub + e_spk,
-                    t_spk)
-
-        zeros = jnp.zeros_like(v0)
-        init = (v0, adap0, ref0, zeros, zeros, -jnp.ones_like(v0))
-        v_end, adap_end, ref_end, out, energy, t_spk = jax.lax.fori_loop(
-            0, circ.n_substeps, sub, init)
-        spiked = t_spk > 0
-        new_state_ref[...] = jnp.stack([v_end, adap_end, ref_end], axis=-1)
+        new_state, out, energy, latency, spiked = _period_math(circ, st, xx, pp)
+        new_state_ref[...] = new_state
         out_ref[...] = out
         energy_ref[...] = energy
-        latency_ref[...] = jnp.where(spiked, t_spk, circ.clock_ns)
+        latency_ref[...] = latency
         spiked_ref[...] = spiked
 
     return kernel
+
+
+def _make_chunk_kernel(circ: LIFNeuron):
+    def kernel(state_ref, xseq_ref, p_ref, new_state_ref, out_ref, energy_ref,
+               latency_ref, spiked_ref):
+        pp = p_ref[...].astype(jnp.float32)
+        t_steps = xseq_ref.shape[0]
+
+        def tick(t, st):
+            xx = pl.load(
+                xseq_ref, (pl.dslice(t, 1), slice(None), slice(None)),
+            )[0].astype(jnp.float32)
+            new_state, out, energy, latency, spiked = _period_math(
+                circ, st, xx, pp)
+            row = (pl.dslice(t, 1), slice(None))
+            pl.store(out_ref, row, out[None])
+            pl.store(energy_ref, row, energy[None])
+            pl.store(latency_ref, row, latency[None])
+            pl.store(spiked_ref, row, spiked[None])
+            return new_state
+
+        st = state_ref[...].astype(jnp.float32)
+        new_state_ref[...] = jax.lax.fori_loop(0, t_steps, tick, st)
+
+    return kernel
+
+
+def lif_chunk(state, x_seq, params, *, circ: LIFNeuron | None = None,
+              block_n: int = 256, interpret: bool = True):
+    """T clock periods in ONE launch: the time-looped lif_scan variant.
+
+    state (N, 3), x_seq (T, N, 3), params (N, 4). State lives in VMEM for
+    the whole chunk — the outer tick loop nests around the substep loop,
+    so nothing round-trips HBM between periods. Bit-for-bit identical to
+    chaining ``lif_step`` T times (both loops call ``_period_math``).
+    """
+    circ = circ or LIFNeuron()
+    t_steps, n = x_seq.shape[0], state.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    kernel = _make_chunk_kernel(circ)
+    seq_blk = pl.BlockSpec((t_steps, block_n), lambda i: (0, i))
+    new_state, out, energy, latency, spiked = pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, 3), lambda i: (i, 0)),
+            pl.BlockSpec((t_steps, block_n, 3), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_n, 4), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 3), lambda i: (i, 0)),
+            seq_blk, seq_blk, seq_blk, seq_blk,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 3), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps, n), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps, n), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps, n), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps, n), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(state, x_seq, params)
+    obs = {"output": out, "energy": energy, "latency": latency,
+           "spiked": spiked}
+    return new_state, obs
 
 
 def lif_step(state, x, params, *, circ: LIFNeuron | None = None,

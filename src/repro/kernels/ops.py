@@ -28,6 +28,39 @@ def _interpret_default() -> bool:
     return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
+def fused_kernel_enabled(override: bool | None = None) -> bool:
+    """THE single source of truth for the ``REPRO_FUSED_KERNEL`` knob.
+
+    Every module that dispatches on the fused-kernel path (surrogate head
+    stacking, the whole-tick megakernel, network program-cache keys,
+    ``simulate``/``distributed`` cache keys) resolves the flag through this
+    helper instead of re-reading the environment, so an explicit
+    ``fused_kernel=`` keyword always wins over ``REPRO_FUSED_KERNEL`` and
+    tests can toggle the path without env mutation.
+    """
+    if override is not None:
+        return bool(override)
+    return os.environ.get("REPRO_FUSED_KERNEL", "0") == "1"
+
+
+def tick_pallas_enabled(override: bool | None = None) -> bool:
+    """Whether the whole-tick megakernel runs as a ``pallas_call``.
+
+    Resolution order: explicit ``override`` kwarg, then the
+    ``REPRO_TICK_PALLAS`` env var ("1"/"0"), then the platform default —
+    Pallas on real accelerators, the mathematically identical jnp body on
+    CPU (where interpret-mode Pallas adds per-tick overhead for no gain).
+    CI sets ``REPRO_TICK_PALLAS=1`` to execute the kernel code path in
+    interpret mode on the CPU container.
+    """
+    if override is not None:
+        return bool(override)
+    env = os.environ.get("REPRO_TICK_PALLAS")
+    if env is not None:
+        return env == "1"
+    return not _interpret_default()
+
+
 def _pad_to(x, n, axis, value=0.0):
     pad = n - x.shape[axis]
     if pad <= 0:
@@ -124,6 +157,42 @@ def lif_step(state, x, params, *, block_n: int = 256,
         _pad_to(state, n_pad, 0), _pad_to(x, n_pad, 0),
         _pad_to(params, n_pad, 0), block_n=block_n, interpret=interpret)
     return new_state[:n], {k: v[:n] for k, v in obs.items()}
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lif_chunk(state, x_seq, params, *, block_n: int = 256,
+              interpret: bool | None = None):
+    """T golden LIF clock periods as ONE time-looped kernel launch.
+
+    ``x_seq`` is (T, N, 3); circuit state stays VMEM-resident across the
+    whole chunk (the lif_scan substep loop nests inside an outer tick
+    loop). Per-tick observables come back as (T, N) sequences.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    n = state.shape[0]
+    n_pad = _ceil_to(n, block_n)
+    new_state, obs = _lif.lif_chunk(
+        _pad_to(state, n_pad, 0), _pad_to(x_seq, n_pad, 1),
+        _pad_to(params, n_pad, 0), block_n=block_n, interpret=interpret)
+    return new_state[:n], {k: v[:, :n] for k, v in obs.items()}
+
+
+def network_tick(*args, **kwargs):
+    """One whole LASANA tick (idle -> act -> transition) as ONE kernel.
+
+    Thin delegate so ``ops`` stays the single kernel entry namespace; the
+    padding wrapper and kernel live in ``kernels.tick_megakernel`` (which
+    imports circuit/wrapper math, so it is imported lazily here to keep
+    ``ops`` a leaf module).
+    """
+    from repro.kernels import tick_megakernel as _tick
+    return _tick.network_tick(*args, **kwargs)
+
+
+def network_tick_chunk(*args, **kwargs):
+    """A whole chunk of LASANA ticks as ONE time-looped kernel launch."""
+    from repro.kernels import tick_megakernel as _tick
+    return _tick.network_tick_chunk(*args, **kwargs)
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))

@@ -144,14 +144,19 @@ _ENGINE_ATTR = "_lasana_engine_cache"
 
 def engine(spec: NetworkSpec, *, backend: str = "lasana",
            mode: str = "standalone", mesh=None,
-           record_hidden: bool = True) -> NetworkEngine:
+           record_hidden: bool = True, fused: bool = True,
+           fused_kernel: Optional[bool] = None) -> NetworkEngine:
     """The cached :class:`NetworkEngine` serving ``spec`` for :func:`simulate`.
 
     One engine (and therefore one set of compiled programs) exists per live
-    ``(spec, backend, mode, mesh, record_hidden)`` combination; surrogates
-    are bound per ``run()``/``simulate()`` call, not per engine. Useful
-    directly when you want explicit control or to assert on
-    ``engine(spec).compile_count`` in tests."""
+    ``(spec, backend, mode, mesh, record_hidden, fused, fused_kernel)``
+    combination; surrogates are bound per ``run()``/``simulate()`` call,
+    not per engine. ``fused`` selects the stacked ``predict_heads`` tick
+    (default) vs the per-``predict`` baseline; ``fused_kernel`` is the
+    tri-state megakernel override (``None`` defers to
+    ``REPRO_FUSED_KERNEL``, see docs/architecture.md "Inference hot
+    path"). Useful directly when you want explicit control or to assert
+    on ``engine(spec).compile_count`` in tests."""
     cache = getattr(spec, _ENGINE_ATTR, None)
     if cache is None:
         cache = {}
@@ -164,18 +169,21 @@ def engine(spec: NetworkSpec, *, backend: str = "lasana",
     # compiled for the dead mesh. Value-equal meshes share the engine
     # (same devices, same axes — same compiled program); the key keeps the
     # mesh alive only as long as the spec itself.
-    key = (backend, mode, mesh, record_hidden)
+    fused_kernel = None if fused_kernel is None else bool(fused_kernel)
+    key = (backend, mode, mesh, record_hidden, bool(fused), fused_kernel)
     eng = cache.get(key)
     if eng is None:
         eng = NetworkEngine(spec, backend=backend, mode=mode, mesh=mesh,
-                            record_hidden=record_hidden)
+                            record_hidden=record_hidden, fused=fused,
+                            fused_kernel=fused_kernel)
         cache[key] = eng
     return eng
 
 
 def simulate(spec: NetworkSpec, stimulus, *, backend: str = "lasana",
              surrogates=None, mode: str = "standalone", mesh=None,
-             record_hidden: bool = True) -> NetworkRun:
+             record_hidden: bool = True,
+             fused_kernel: Optional[bool] = None) -> NetworkRun:
     """Simulate a circuit graph and return its :class:`NetworkRun` record.
 
     One signature for all three backends (the paper's comparison set):
@@ -193,20 +201,27 @@ def simulate(spec: NetworkSpec, stimulus, *, backend: str = "lasana",
     mode        lasana only: "standalone" | "annotation"
     mesh        optional ``jax.sharding.Mesh`` — shard the batch axis
     record_hidden  keep per-layer output traces (memory-heavy at scale)
+    fused_kernel  lasana only: tri-state whole-tick-megakernel override —
+                ``True``/``False`` force it on/off, ``None`` (default)
+                defers to ``REPRO_FUSED_KERNEL`` (records match the
+                default path bitwise on discrete outputs, energies to
+                rtol 1e-5; see docs/architecture.md "Inference hot path")
 
     Surrogates pass through the compiled program as traced pytree
     arguments: repeated calls with the same live ``spec`` and retrained
     surrogates of identical structure reuse one compiled executable."""
     return engine(spec, backend=backend, mode=mode, mesh=mesh,
-                  record_hidden=record_hidden).run(stimulus,
-                                                   surrogates=surrogates)
+                  record_hidden=record_hidden,
+                  fused_kernel=fused_kernel).run(stimulus,
+                                                 surrogates=surrogates)
 
 
 def simulate_stream(spec: NetworkSpec, stimulus, *,
                     chunk_ticks: Optional[int] = None,
                     backend: str = "lasana", surrogates=None,
                     mode: str = "standalone", mesh=None,
-                    record_hidden: bool = False) -> NetworkRun:
+                    record_hidden: bool = False,
+                    fused_kernel: Optional[bool] = None) -> NetworkRun:
     """Streaming-chunked :func:`simulate`: same record, bounded memory.
 
     The stimulus T axis is cut into ``chunk_ticks``-tick chunks; each
@@ -225,9 +240,10 @@ def simulate_stream(spec: NetworkSpec, stimulus, *,
     iterator of libraries to hot-swap predictor weights per chunk with
     zero recompiles. ``record_hidden`` defaults to False here — keeping
     per-layer traces of an unbounded stream defeats the point, so opt in
-    explicitly for parity tests."""
+    explicitly for parity tests. ``fused_kernel`` as in :func:`simulate`."""
     return engine(spec, backend=backend, mode=mode, mesh=mesh,
-                  record_hidden=record_hidden).run_stream(
+                  record_hidden=record_hidden,
+                  fused_kernel=fused_kernel).run_stream(
                       stimulus, chunk_ticks=chunk_ticks,
                       surrogates=surrogates)
 
@@ -235,7 +251,8 @@ def simulate_stream(spec: NetworkSpec, stimulus, *,
 def stream(spec: NetworkSpec, stimulus, *,
            chunk_ticks: Optional[int] = None, backend: str = "lasana",
            surrogates=None, mode: str = "standalone", mesh=None,
-           record_hidden: bool = False):
+           record_hidden: bool = False,
+           fused_kernel: Optional[bool] = None):
     """Generator variant of :func:`simulate_stream` for live consumers.
 
     Yields one per-chunk :class:`NetworkRun` as its records land on the
@@ -243,9 +260,11 @@ def stream(spec: NetworkSpec, stimulus, *,
     chunk carries ``flush_energy``. Feed the chunks to
     :class:`StreamingRun` (or :meth:`NetworkRun.merge`) for the exact
     whole-run record, or consume them incrementally — live dashboards,
-    online energy monitors, early stopping."""
+    online energy monitors, early stopping. ``fused_kernel`` as in
+    :func:`simulate`."""
     return engine(spec, backend=backend, mode=mode, mesh=mesh,
-                  record_hidden=record_hidden).stream(
+                  record_hidden=record_hidden,
+                  fused_kernel=fused_kernel).stream(
                       stimulus, chunk_ticks=chunk_ticks,
                       surrogates=surrogates)
 

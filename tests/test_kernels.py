@@ -212,6 +212,107 @@ def test_flash_attention(s, d, bq, dtype):
                                rtol=tol, atol=tol)
 
 
+# --- padding inertness (the x_sd pads-with-ones bug class) ------------------
+#
+# Every ops wrapper pads N to the block size and F/H to the 128-lane
+# boundary. Padded feature columns MUST carry x_sd = 1 (a zero pad divides
+# by zero in the standardizer and poisons the whole block with NaNs) and
+# zero weights; padded rows must never leak into valid rows. One named
+# regression test per kernel.
+
+
+def test_mlp_surrogate_heads_padding_sweep_is_inert():
+    """F-to-128 sweep for mlp_surrogate_heads: widening the features with
+    garbage columns (x_sd=1 / zero-weight pads), including ACROSS the 128
+    lane boundary (120 -> 129 repads 128 -> 256), changes nothing at
+    ragged and block-multiple N."""
+    for n in (64, 97):
+        for f, extra in ((11, 1), (120, 9), (127, 2)):
+            s = _head_stack(jax.random.PRNGKey(21), 3, f, h1=32, h2=16)
+            x = jax.random.normal(jax.random.PRNGKey(f), (n, f))
+            base = ops.mlp_surrogate_heads(
+                x, s["x_mu"], s["x_sd"], s["y_mu"], s["y_sd"],
+                s["w1"], s["b1"], s["w2"], s["b2"], s["w3"], s["b3"])
+            xw = jnp.pad(x, ((0, 0), (0, extra)), constant_values=7.5)
+            widened = ops.mlp_surrogate_heads(
+                xw, jnp.pad(s["x_mu"], ((0, 0), (0, extra))),
+                jnp.pad(s["x_sd"], ((0, 0), (0, extra)),
+                        constant_values=1.0),
+                s["y_mu"], s["y_sd"],
+                jnp.pad(s["w1"], ((0, 0), (0, extra), (0, 0))), s["b1"],
+                s["w2"], s["b2"], s["w3"], s["b3"])
+            assert np.isfinite(np.asarray(widened)).all()
+            np.testing.assert_array_equal(np.asarray(base),
+                                          np.asarray(widened),
+                                          err_msg=f"n={n} f={f}+{extra}")
+
+
+def test_crossbar_target_n_padding_is_inert():
+    """N-to-block sweep for crossbar_mvm: rows are independent, so the
+    valid rows of a ragged-N call must equal the same rows computed alone
+    (padded rows never leak back)."""
+    key = jax.random.PRNGKey(33)
+    v = jax.random.uniform(key, (300, 32), minval=-0.8, maxval=0.8)
+    w = jax.random.randint(key, (300, 33), -1, 2).astype(jnp.float32)
+    for n in (1, 5, 256, 300):
+        tgt, tau = ops.crossbar_target(v[:n], w[:n])
+        assert tgt.shape == (n,) and np.isfinite(np.asarray(tgt)).all()
+        tgt_f, tau_f = ops.crossbar_target(v, w)
+        np.testing.assert_array_equal(np.asarray(tgt),
+                                      np.asarray(tgt_f[:n]))
+        np.testing.assert_array_equal(np.asarray(tau),
+                                      np.asarray(tau_f[:n]))
+
+
+def test_network_tick_x_sd_pads_with_ones(lif_bank):
+    """The tick megakernel's pack padding carries x_sd = 1 in every padded
+    feature column — the named regression for the pads-with-zeros bug
+    class — and the padded pack stays NaN-free end to end."""
+    from repro.kernels import tick_megakernel as mk
+    pack, _ = mk.pack_heads(lif_bank.to_surrogate())
+    assert pack is not None
+    pp = mk._padded_pack(pack)
+    for stk in ("a", "t"):
+        f = pack[stk]["x_sd"].shape[1]
+        pad = np.asarray(pp[stk]["x_sd"][:, f:])
+        assert pad.shape[1] > 0          # the bench widths ARE ragged
+        np.testing.assert_array_equal(pad, np.ones_like(pad))
+        np.testing.assert_array_equal(np.asarray(pp[stk]["w0"][:, f:]), 0.0)
+
+
+def test_network_tick_n_padding_is_inert(lif_bank):
+    """N-to-block sweep for the tick megakernel: circuits are independent,
+    so the valid rows of a ragged-N launch equal the same rows of a larger
+    launch — pad rows (changed=False) contribute nothing."""
+    from repro.core.wrapper import init_state
+    from repro.kernels import tick_megakernel as mk
+    pack, layout = mk.pack_heads(lif_bank.to_surrogate())
+    rng = np.random.default_rng(4)
+    n_big = 12
+    params = jnp.asarray(
+        rng.uniform(0.3, 0.7, (n_big, 4)).astype(np.float32))
+    state = init_state(n_big, params)._replace(
+        v=jnp.asarray(rng.uniform(0, 1, n_big).astype(np.float32)),
+        t_last=jnp.asarray(
+            rng.choice([0.0, 5.0], n_big).astype(np.float32)))
+    changed = jnp.asarray(rng.random(n_big) < 0.7)
+    x = jnp.asarray(rng.uniform(-1, 1, (n_big, 3)).astype(np.float32))
+    t = jnp.float32(30.0)
+
+    def tick(n):
+        return mk.network_tick(
+            pack, state.v[:n], state.o[:n], state.t_last[:n], params[:n],
+            changed[:n], x[:n], t, jnp.zeros((n,), jnp.float32),
+            circuit="lif", clock_ns=5.0, layout=layout, spiking=True)
+
+    big = tick(n_big)
+    for n in (1, 5, n_big):
+        for got, ref_full in zip(tick(n), big):
+            assert np.isfinite(np.asarray(got)).all()
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(ref_full[:n]))
+
+
 def test_flash_attention_is_causal():
     """Future tokens must not influence the output."""
     key = jax.random.PRNGKey(9)
