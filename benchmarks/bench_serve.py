@@ -1,0 +1,220 @@
+"""Serving throughput — the ISSUE-8 continuous-batching server.
+
+A mixed multi-tenant workload (two distinct network specs = two shape
+buckets, two hot-swappable surrogate versions, three tenants, random
+stimulus lengths and batch sizes) is dispatched two ways:
+
+  served   all requests submitted up-front to one ``lasana.serve()``
+           server: the continuous-batching scheduler packs them onto the
+           slot axes of (at most) one compiled program per bucket,
+           join/leave at chunk boundaries
+  serial   the pre-ISSUE-8 formulation: the same requests one
+           ``lasana.simulate`` at a time on warm engines (compile
+           excluded from both sides)
+
+Reported: requests/s and wall seconds of both paths and their ratio
+(acceptance: served >= 2x serial at full scale), the server's
+``compile_count`` (acceptance: <= bucket count — programs scale with
+shapes, never with requests/tenants/versions), mean batch occupancy,
+worst queue wait (acceptance: no starvation), and per-request record
+parity against solo runs (acceptance: bitwise on discrete records,
+rtol 1e-5 on f32 energy/latency reductions plus a one-ULP absolute
+epsilon on latency maxes — always enforced).
+
+``REPRO_BENCH_SMOKE=1`` shrinks to 64 requests / 32-tick chunks and
+relaxes the speedup floor to parity (CI containers are noisy); the
+correctness gates hard-fail either way via SystemExit with the record
+attached.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+
+N_REQUESTS, N_REQUESTS_SMOKE = 384, 64
+CHUNK, CHUNK_SMOKE = 128, 32
+T_CHOICES, T_CHOICES_SMOKE = (128, 256), (32, 64)
+SLOT_WIDTHS, SLOT_WIDTHS_SMOKE = (16,), (8,)
+N_TENANTS = 3
+
+MIN_SPEEDUP, MIN_SPEEDUP_SMOKE = 2.0, 1.0
+RTOL = 1e-5            # energy sums (reassociated f32 addition)
+ATOL_LATENCY = 1e-6    # latency maxes additionally carry one-ULP (2^-23)
+                       # vectorization-width noise, visible as absolute
+                       # epsilon on near-zero latencies
+RESULT_TIMEOUT = 600.0
+
+
+def _light_surrogate(seed=0):
+    """A fast linear-family LIF surrogate (training time is not what this
+    suite measures)."""
+    from repro.core.dataset import TestbenchConfig, build_dataset
+    from repro.core.predictors import PredictorBank
+    ds = build_dataset("lif", TestbenchConfig(n_runs=150, n_steps=80,
+                                              seed=seed))
+    return PredictorBank("lif", families=("linear",)).fit(ds).to_surrogate()
+
+
+def _spec(seed):
+    from repro.core.network import snn_spec
+    rng = np.random.default_rng(seed)
+    ws = [rng.normal(0, 0.8, (16, 10)).astype(np.float32),
+          rng.normal(0, 0.8, (10, 5)).astype(np.float32)]
+    return snn_spec(ws, [np.asarray([0.58, 0.5, 0.5, 0.5], np.float32)] * 2)
+
+
+def _workload(n_req, t_choices, rng):
+    """(spec_idx, surrogate_ref, tenant, stimulus) per request — both
+    specs, both versions, and every tenant are guaranteed to appear.
+    Requests are single-stream (batch 1, the per-tenant streaming regime
+    this service multiplexes); multi-slot requests are covered by
+    tests/test_serve.py parity."""
+    jobs = []
+    for i in range(n_req):
+        t = int(rng.choice(t_choices))
+        jobs.append({
+            "spec": i % 2,
+            "surrogate": "lif@1" if (i // 2) % 2 else "lif@2",
+            "tenant": f"tenant{i % N_TENANTS}",
+            "x": (rng.random((t, 1, 16)) < 0.2).astype(np.float32) * 1.5,
+        })
+    return jobs
+
+
+def _check_parity(solo, served) -> bool:
+    return (np.array_equal(solo.outputs, served.outputs)
+            and np.array_equal(solo.events, served.events)
+            and (solo.out_spikes is None
+                 or np.array_equal(solo.out_spikes, served.out_spikes))
+            and np.allclose(solo.energy, served.energy, rtol=RTOL, atol=0)
+            and np.allclose(solo.latency, served.latency, rtol=RTOL,
+                            atol=ATOL_LATENCY)
+            and np.allclose(solo.flush_energy, served.flush_energy,
+                            rtol=RTOL, atol=0))
+
+
+def run(full: bool = False) -> dict:
+    import repro.lasana as lasana
+
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    n_req = N_REQUESTS_SMOKE if smoke else N_REQUESTS
+    chunk = CHUNK_SMOKE if smoke else CHUNK
+    t_choices = T_CHOICES_SMOKE if smoke else T_CHOICES
+    widths = SLOT_WIDTHS_SMOKE if smoke else SLOT_WIDTHS
+
+    t0 = time.time()
+    s1, s2 = _light_surrogate(seed=0), _light_surrogate(seed=1)
+    train_s = time.time() - t0
+    specs = [_spec(0), _spec(1)]
+    rng = np.random.default_rng(0)
+    jobs = _workload(n_req, t_choices, rng)
+    surs = {"lif@1": s1, "lif@2": s2}
+    n_buckets = len(specs) * len(widths)
+
+    srv = lasana.serve(slot_widths=widths, chunk_ticks=chunk,
+                       max_in_flight=256, max_queue=1024)
+    srv.register_surrogate("lif", s1)
+    srv.register_surrogate("lif", s2)       # hot-swap: v2 is now latest
+
+    # warm every lane (one request per spec x version): compiles the slot
+    # programs once per bucket; versions reuse them
+    t0 = time.time()
+    for i, ref in enumerate(("lif@1", "lif@2", "lif@1", "lif@2")):
+        srv.submit(specs[i % 2], jobs[0]["x"][:chunk],
+                   surrogates=ref).result(timeout=RESULT_TIMEOUT)
+    warm_s = time.time() - t0
+
+    # timed served phase: everything in flight at once (the point)
+    t0 = time.time()
+    handles = [srv.submit(specs[j["spec"]], j["x"],
+                          surrogates=j["surrogate"], tenant=j["tenant"])
+               for j in jobs]
+    results = [h.result(timeout=RESULT_TIMEOUT) for h in handles]
+    served_s = time.time() - t0
+    stats = srv.stats()                     # BEFORE solo runs share engines
+    compile_count = stats["compile_count"]
+    srv.close()
+
+    # solo references double as parity oracles and as the serial warmup
+    solos = [lasana.simulate(specs[j["spec"]], j["x"],
+                             surrogates=surs[j["surrogate"]],
+                             record_hidden=False) for j in jobs]
+    mismatches = [i for i, (s, r) in enumerate(zip(solos, results))
+                  if not _check_parity(s, r)]
+
+    t0 = time.time()
+    for j in jobs:
+        lasana.simulate(specs[j["spec"]], j["x"],
+                        surrogates=surs[j["surrogate"]],
+                        record_hidden=False)
+    serial_s = time.time() - t0
+    speedup = serial_s / served_s
+
+    record = {
+        "n_requests": n_req,
+        "n_buckets": n_buckets,
+        "chunk_ticks": chunk,
+        "slot_widths": list(widths),
+        "n_tenants": N_TENANTS,
+        "train_seconds": train_s,
+        "warm_seconds": warm_s,
+        "served_seconds": served_s,
+        "serial_seconds": serial_s,
+        "requests_per_sec_served": n_req / served_s,
+        "requests_per_sec_serial": n_req / serial_s,
+        "speedup_vs_serial": speedup,
+        "compile_count": compile_count,
+        "batch_occupancy": stats["batch_occupancy"],
+        "wait_chunks_max": stats["wait_chunks_max"],
+        "chunks_total": stats["chunks_total"],
+        "events_per_sec": stats["events_per_sec"],
+        "parity_mismatches": len(mismatches),
+    }
+    emit("serve_served", served_s / n_req * 1e6,
+         f"requests_per_sec={n_req / served_s:.1f}")
+    emit("serve_serial", serial_s / n_req * 1e6,
+         f"requests_per_sec={n_req / serial_s:.1f}")
+    emit("serve_speedup", 0.0, f"x{speedup:.2f}")
+    emit("serve_compile_count", 0.0, f"{compile_count}/{n_buckets}")
+    emit("serve_occupancy", 0.0, f"{stats['batch_occupancy']:.2f}")
+    save_json("serve", record)
+
+    # acceptance gates — parity and program discipline are correctness,
+    # not performance: they hard-fail at any scale
+    if mismatches:
+        err = SystemExit(
+            f"continuous-batching parity broke for {len(mismatches)}/"
+            f"{n_req} requests (indices {mismatches[:8]}): multiplexed "
+            "records must match solo lasana.simulate")
+        err.bench_record = record
+        raise err
+    if compile_count > n_buckets:
+        err = SystemExit(
+            f"server compiled {compile_count} programs for {n_buckets} "
+            "buckets: programs must scale with shapes, not requests/"
+            "versions/tenants")
+        err.bench_record = record
+        raise err
+    if stats["wait_chunks_max"] > n_req:
+        err = SystemExit(
+            f"a request waited {stats['wait_chunks_max']} scheduler "
+            f"rounds (> {n_req}): tenant round-robin is starving")
+        err.bench_record = record
+        raise err
+    floor = MIN_SPEEDUP_SMOKE if smoke else MIN_SPEEDUP
+    if speedup < floor:
+        err = SystemExit(
+            f"served speedup {speedup:.2f}x below the {floor:.1f}x "
+            "acceptance floor vs serial dispatch")
+        err.bench_record = record
+        raise err
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -18,6 +18,7 @@ per-suite records — the perf baseline future PRs diff against (see
   mixed     heterogeneous crossbar->LIF graph       (§V-E mixed-signal)
   streaming chunked runs vs monolithic, T=10k       (ISSUE-4 tentpole)
   dse       vectorized 1024-candidate sweep vs loop (ISSUE-6 tentpole)
+  serve     multi-tenant continuous batching        (ISSUE-8 tentpole)
   roofline  dry-run roofline terms                  (EXPERIMENTS §Roofline)
 """
 
@@ -45,6 +46,7 @@ def _summary(records: dict) -> dict:
     net = records.get("network") or {}
     stream = records.get("streaming") or {}
     dse = records.get("dse") or {}
+    serve = records.get("serve") or {}
     return {
         # throughput
         "events_per_sec_engine": _get(net, "events_per_sec_engine"),
@@ -84,6 +86,11 @@ def _summary(records: dict) -> dict:
         "dse_speedup_vs_loop": _get(dse, "speedup_vs_loop"),
         "dse_compile_count": _get(dse, "compile_count"),
         "dse_pareto_size": _get(dse, "pareto_size"),
+        # the ISSUE-8 serving layer
+        "serve_requests_per_sec": _get(serve, "requests_per_sec_served"),
+        "serve_speedup_vs_serial": _get(serve, "speedup_vs_serial"),
+        "serve_compile_count": _get(serve, "compile_count"),
+        "serve_occupancy": _get(serve, "batch_occupancy"),
     }
 
 
@@ -93,7 +100,7 @@ def main() -> None:
                     help="paper-scale datasets/models (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: table1,table2,table3,table4,network,"
-                         "mixed,streaming,dse,roofline")
+                         "mixed,streaming,dse,serve,roofline")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write one machine-readable trajectory record "
                          "(summary + per-suite outputs) to PATH")
@@ -101,7 +108,8 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_dse, bench_mixed,
                             bench_models, bench_network, bench_propagation,
-                            bench_roofline, bench_scaling, bench_streaming)
+                            bench_roofline, bench_scaling, bench_serve,
+                            bench_streaming)
     suites = {
         "table1": bench_models.run,
         "table2": bench_accuracy.run,
@@ -111,6 +119,7 @@ def main() -> None:
         "mixed": bench_mixed.run,
         "streaming": bench_streaming.run,
         "dse": bench_dse.run,
+        "serve": bench_serve.run,
         "roofline": bench_roofline.run,
     }
     only = [s for s in args.only.split(",") if s] or list(suites)

@@ -88,6 +88,7 @@ Pass ``mesh=Mesh(...)`` to shard the batch axis.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from typing import Any, Optional
@@ -567,6 +568,19 @@ class StreamingRun:
             compile_seconds=self.compile_seconds)
 
 
+@dataclasses.dataclass(frozen=True)
+class SlotPrograms:
+    """The compiled continuous-batching program family for one
+    (batch width, chunk ticks, surrogate structure) bucket — what the
+    serving layer's scheduler drives (see :meth:`NetworkEngine.
+    slot_programs` for the calling conventions and parity contract)."""
+
+    step: Any                      # chunk program, donated carries
+    flush: Any                     # per-slot leave-time idle flush
+    join: Any                      # masked slot (re)initialization
+    compile_seconds: float         # 0.0 when every program was cached
+
+
 # --- the engine ----------------------------------------------------------------
 
 class NetworkEngine:
@@ -659,6 +673,10 @@ class NetworkEngine:
         # features/timestamps use each circuit's native clock (see _lif_tick)
         self.clock_ns = max(c.clock_ns for c in self.circs)
         self._sim_cache: dict = {}
+        # serializes first-compile of a program key so concurrent streams
+        # on one engine (the serving layer, threaded clients) compile each
+        # program exactly once and never race the cache dict
+        self._compile_lock = threading.Lock()
         self.compile_count = 0        # distinct compiled network programs
         self._trace_count = 0         # times a sim body was (re)traced
 
@@ -846,60 +864,72 @@ class NetworkEngine:
                 clock_ns=self.clock_ns, wall_seconds=wall,
                 circuits=spec.circuits, compile_seconds=comp_s)
 
-        while cur is not None:
-            x_chunk = jnp.asarray(cur, jnp.float32)
-            if x_chunk.shape[1] != b:
-                raise ValueError(f"stimulus chunk batch {x_chunk.shape[1]} "
-                                 f"!= first chunk batch {b}")
-            if sur_iter is not None:
-                swap = next(sur_iter, None)
-                if swap is not None:
-                    banks_dev = self._donatable_banks(
-                        self._runtime_banks(swap))
-                elif banks_dev is None:
-                    raise ValueError("surrogate iterator must yield a "
-                                     "library for the first chunk")
-            tc = x_chunk.shape[0]
-            k0_arr = jnp.asarray(k0, jnp.float32)
-            key = self._program_key("stream", b, tc, banks_dev)
-            compiled, comp_s = self._compiled(
-                key, lambda: self._build_stream_step(b, banks_dev),
-                (x_chunk, k0_arr, carries, prev_ys, banks_dev))
-            comp_seg += comp_s
-            # dispatch chunk k (async), then fetch chunk k-1's records —
-            # device compute and host transfer overlap (double buffering)
-            outs = compiled(x_chunk, k0_arr, carries, prev_ys, banks_dev)
-            carries, prev_ys, banks_dev = outs[6], outs[7], outs[8]
-            if pending is not None:
-                yield finalize(pending,
-                               np.zeros((n_layers,), np.float32))
-            pending = (*outs[:6], comp_s)
-            k0 += tc
-            if k0 > 2 ** 24 and k0 - tc <= 2 ** 24:
-                # the simulator's time axis (tick index, LasanaState.t_last)
-                # is f32: past 2^24 ticks consecutive tick times collide, so
-                # tau-dependent records (merged-E2 idle energy, flush) lose
-                # precision — the stream keeps running, but say so once
-                warnings.warn(
-                    f"stream passed tick 2^24 ({k0} ticks): f32 tick times "
-                    "can no longer distinguish consecutive ticks; "
-                    "tau-dependent energy records degrade beyond here",
-                    RuntimeWarning, stacklevel=2)
-            cur = next(chunks, None)
+        inflight = None               # latest dispatched chunk's device refs
+        try:
+            while cur is not None:
+                x_chunk = jnp.asarray(cur, jnp.float32)
+                if x_chunk.shape[1] != b:
+                    raise ValueError(
+                        f"stimulus chunk batch {x_chunk.shape[1]} "
+                        f"!= first chunk batch {b}")
+                if sur_iter is not None:
+                    swap = next(sur_iter, None)
+                    if swap is not None:
+                        banks_dev = self._donatable_banks(
+                            self._runtime_banks(swap))
+                    elif banks_dev is None:
+                        raise ValueError("surrogate iterator must yield a "
+                                         "library for the first chunk")
+                tc = x_chunk.shape[0]
+                k0_arr = jnp.asarray(k0, jnp.float32)
+                key = self._program_key("stream", b, tc, banks_dev)
+                compiled, comp_s = self._compiled(
+                    key, lambda: self._build_stream_step(b, banks_dev),
+                    (x_chunk, k0_arr, carries, prev_ys, banks_dev))
+                comp_seg += comp_s
+                # dispatch chunk k (async), then fetch chunk k-1's records —
+                # device compute and host transfer overlap (double buffering)
+                outs = compiled(x_chunk, k0_arr, carries, prev_ys, banks_dev)
+                inflight = outs
+                carries, prev_ys, banks_dev = outs[6], outs[7], outs[8]
+                if pending is not None:
+                    yield finalize(pending,
+                                   np.zeros((n_layers,), np.float32))
+                pending = (*outs[:6], comp_s)
+                k0 += tc
+                if k0 > 2 ** 24 and k0 - tc <= 2 ** 24:
+                    # the simulator's time axis (tick index,
+                    # LasanaState.t_last) is f32: past 2^24 ticks consecutive
+                    # tick times collide, so tau-dependent records (merged-E2
+                    # idle energy, flush) lose precision — the stream keeps
+                    # running, but say so once
+                    warnings.warn(
+                        f"stream passed tick 2^24 ({k0} ticks): f32 tick "
+                        "times can no longer distinguish consecutive ticks; "
+                        "tau-dependent energy records degrade beyond here",
+                        RuntimeWarning, stacklevel=2)
+                cur = next(chunks, None)
 
-        if self.backend == "lasana":
-            t_ends = jnp.asarray([np.float32(k0 * c.clock_ns)
-                                  for c in self.circs])
-            fkey = self._program_key("flush", b, None, banks_dev)
-            flush_fn, comp_s = self._compiled(
-                fkey, lambda: self._build_flush(b, banks_dev),
-                (carries, t_ends, banks_dev))
-            comp_seg += comp_s
-            flush = np.asarray(jax.device_get(
-                flush_fn(carries, t_ends, banks_dev)))
-        else:
-            flush = np.zeros((n_layers,), np.float32)
-        yield finalize(pending, flush)
+            if self.backend == "lasana":
+                t_ends = jnp.asarray([np.float32(k0 * c.clock_ns)
+                                      for c in self.circs])
+                fkey = self._program_key("flush", b, None, banks_dev)
+                flush_fn, comp_s = self._compiled(
+                    fkey, lambda: self._build_flush(b, banks_dev),
+                    (carries, t_ends, banks_dev))
+                comp_seg += comp_s
+                flush = np.asarray(jax.device_get(
+                    flush_fn(carries, t_ends, banks_dev)))
+            else:
+                flush = np.zeros((n_layers,), np.float32)
+            yield finalize(pending, flush)
+        finally:
+            # a consumer that breaks / cancels mid-stream closes this
+            # generator at a yield with one chunk still in flight on
+            # device; drain it before dropping the refs so the donated
+            # carries settle and the engine is immediately reusable
+            if inflight is not None:
+                jax.block_until_ready(inflight)
 
     @staticmethod
     def _donatable_banks(banks):
@@ -941,13 +971,16 @@ class NetworkEngine:
 
     # --- per-layer tick functions ---------------------------------------------
 
-    def _lif_tick(self, i: int):
+    def _lif_tick(self, i: int, slot_records: bool = False):
         """Returns tick(carry, drive, changed, k, bank, pack, layout) ->
         (carry', spikes (B, n), e, l, events); ``drive`` is the
         pre-combined synaptic drive and ``bank`` the layer kind's (traced)
         Surrogate, None outside the lasana backend. ``pack``/``layout``
         are the kind's megakernel head pack (built once per program call
-        by :meth:`_mk_pack`) or None for the stacked-dispatch path."""
+        by :meth:`_mk_pack`) or None for the stacked-dispatch path.
+        ``slot_records`` switches the event count from one scalar to a
+        per-batch-slot (B,) int32 vector (the continuous-batching server
+        attributes records per tenant; layouts are batch-major)."""
         layer = self.spec.layers[i]
         amp = self.spec.spike_amp
         circ = self.circs[i]
@@ -1002,14 +1035,19 @@ class NetworkEngine:
                 carry = ns
 
             spikes = spikes.reshape(-1, n_out)
-            return carry, spikes, e, l, _count_events(changed)
+            if slot_records:
+                ev = jnp.sum(changed.reshape(spikes.shape[0], -1),
+                             axis=1, dtype=jnp.int32)
+            else:
+                ev = _count_events(changed)
+            return carry, spikes, e, l, ev
 
         return tick
 
-    def _xbar_tick(self, i: int):
+    def _xbar_tick(self, i: int, slot_records: bool = False):
         """Returns tick(carry, x_volts (B, fan_in), k, bank, pack, layout)
         -> (carry', codes (B, n_out), e, l, events); ``bank``/``pack``/
-        ``layout`` as in :meth:`_lif_tick`.
+        ``layout``/``slot_records`` as in :meth:`_lif_tick`.
 
         Rows are combinational with sample-and-hold inputs: a row-segment
         fires an input event iff any of its input lines is live (|x| > eps)
@@ -1073,7 +1111,12 @@ class NetworkEngine:
             v_adc = (jnp.round((v + circ.v_sat) / (2 * circ.v_sat) * levels)
                      / levels * 2 * circ.v_sat - circ.v_sat)
             y = v_adc.reshape(-1, n_out, n_seg).sum(-1) / gain
-            return carry, y, e, l, _count_events(changed)
+            if slot_records:
+                ev = jnp.sum(changed.reshape(b_l, -1),
+                             axis=1, dtype=jnp.int32)
+            else:
+                ev = _count_events(changed)
+            return carry, y, e, l, ev
 
         return tick
 
@@ -1105,7 +1148,7 @@ class NetworkEngine:
 
     # --- the unified graph builder --------------------------------------------
 
-    def _make_cascade(self):
+    def _make_cascade(self, slot_records: bool = False):
         """Build the one-network-tick cascade shared by every program.
 
         Returns ``cascade(banks, carries, prev_ys, u_in, k) ->
@@ -1113,13 +1156,25 @@ class NetworkEngine:
         exact per-tick dataflow (adapters, event detection, bank steps).
         The monolithic program and the streaming chunk program both scan
         THIS closure, which is what makes chunked runs bit-identical to
-        monolithic ones."""
+        monolithic ones.
+
+        ``slot_records=True`` is the continuous-batching variant (the
+        slot-masked programs behind :meth:`slot_programs`): energy /
+        latency / event reductions stay per batch slot — ``(L, B)``
+        instead of ``(L,)`` — and the cascade accepts an extra
+        ``live (B,)`` bool mask. Non-live slots are frozen: their LIF
+        event detection is forced off and their crossbar input volts are
+        zeroed (below the sample-and-hold event epsilon), so a dead or
+        empty slot processes no events, charges no energy, and holds its
+        carry — which is exactly what keeps each multiplexed request
+        bit-identical to running alone."""
         spec = self.spec
         n_layers = spec.n_layers
         kinds = spec.circuits
         amp = spec.spike_amp
-        ticks = [self._lif_tick(i) if kinds[i] == "lif"
-                 else self._xbar_tick(i) for i in range(n_layers)]
+        ticks = [self._lif_tick(i, slot_records) if kinds[i] == "lif"
+                 else self._xbar_tick(i, slot_records)
+                 for i in range(n_layers)]
 
         # pre-resolved connection tables (weights, connectivity masks,
         # adapter arguments) — one entry per incoming connection per layer
@@ -1142,8 +1197,10 @@ class NetworkEngine:
                 return "tanh"
             return spec.layers[src_idx].activation
 
-        def cascade(banks, carries, prev_ys, u_in, k, packs=None):
+        def cascade(banks, carries, prev_ys, u_in, k, packs=None,
+                    live=None):
             packs = packs or {}
+            bsz = u_in.shape[0]
             cur, src_kind, src_idx = u_in, "input", None
             new_carries, new_ys = [], []
             es, ls, evs = [], [], []
@@ -1168,6 +1225,8 @@ class NetworkEngine:
                               > event_threshold(kinds[src], amp)
                               ).astype(jnp.float32)
                         incoming = incoming | ((pr @ conn) > 0.5)
+                    if live is not None:
+                        incoming = incoming & live[:, None]
                     changed = incoming.reshape(-1)
                     carry, y, e, l, ev = ticks[i](carries[i], drive,
                                                   changed, k,
@@ -1184,13 +1243,19 @@ class NetworkEngine:
                             spike_amp=amp,
                             activation=src_activation(src)) @ we
                     xv = jnp.clip(xv, circ.input_lo, circ.input_hi)
+                    if live is not None:
+                        xv = jnp.where(live[:, None], xv, 0.0)
                     carry, y, e, l, ev = ticks[i](carries[i], xv, k,
                                                   banks.get(kinds[i]),
                                                   pk, ly)
                 new_carries.append(carry)
                 new_ys.append(y)
-                es.append(jnp.sum(e))
-                ls.append(jnp.max(l))
+                if slot_records:   # per-tenant attribution: reduce per slot
+                    es.append(jnp.sum(e.reshape(bsz, -1), axis=1))
+                    ls.append(jnp.max(l.reshape(bsz, -1), axis=1))
+                else:
+                    es.append(jnp.sum(e))
+                    ls.append(jnp.max(l))
                 evs.append(ev)
                 cur, src_kind, src_idx = y, kinds[i], i
             return (new_carries, new_ys, jnp.stack(es), jnp.stack(ls),
@@ -1448,6 +1513,190 @@ class NetworkEngine:
                                 in_specs=(carry_specs, P_REPL, bank_specs),
                                 out_specs=P_REPL)
 
+    # --- continuous-batching slot programs (the serving layer) ----------------
+
+    def _build_slot_step(self, b: int, banks: SurrogateLibrary):
+        """Build the slot-masked chunk program for continuous batching.
+
+        ``step(input_seq, k0, end_ks, carries, prev_ys, banks)`` is the
+        streaming chunk program with two serving extensions:
+
+          * ``end_ks (b,)`` f32 — each slot's *global end tick*; at tick
+            ``k`` only slots with ``k < end_ks[slot]`` are live.  Dead
+            slots (request finished mid-chunk, or seat empty) are frozen
+            by the cascade's ``live`` mask: no events, no energy, carry
+            held — so one compiled program serves every mix of request
+            lengths without per-request padding artifacts.
+          * per-slot records — energy/latency ``(T, L, b)`` and event
+            counts ``(T, L, b)`` int32 stay per batch slot, so the
+            scheduler can slice each tenant's rows out of the shared
+            batch and the merged per-request :class:`NetworkRun` is
+            bit-identical (rtol 1e-5 on f32 energy sums) to running that
+            request alone.
+
+        ``carries``/``prev_ys``/``banks`` are DONATED exactly as in
+        :meth:`_build_stream_step`."""
+        spec = self.spec
+        amp = spec.spike_amp
+        cascade = self._make_cascade(slot_records=True)
+        last_lif = spec.circuits[-1] == "lif"
+        record_hidden = self.record_hidden
+
+        def step(input_seq, k0, end_ks, carries, prev_ys, banks):
+            self._trace_count += 1
+            t_steps = input_seq.shape[0]
+            ks = k0 + jnp.arange(t_steps, dtype=jnp.float32)
+            packs = self._mk_pack(banks)
+
+            def tick(state, xs):
+                carries, prev_ys = state
+                u_in, k = xs
+                live = k < end_ks
+                new_carries, new_ys, es, ls, evs = cascade(
+                    banks, carries, prev_ys, u_in, k, packs, live=live)
+                out = (new_ys[-1],
+                       tuple(new_ys) if record_hidden else (),
+                       es, ls, evs)
+                return (new_carries, new_ys), out
+
+            (carries, prev_ys), (out_seq, hidden, e_tl, l_tl, ev_tl) = \
+                jax.lax.scan(tick, (list(carries), list(prev_ys)),
+                             (input_seq, ks))
+            if last_lif:
+                primary = jnp.sum(out_seq > 0.5 * amp, axis=0)
+            else:
+                primary = out_seq
+            return (primary, out_seq, hidden, e_tl, l_tl, ev_tl,
+                    carries, prev_ys, banks)
+
+        return jax.jit(step, donate_argnums=(3, 4, 5))
+
+    def _build_slot_flush(self, b: int, banks: SurrogateLibrary):
+        """Build the per-slot leave-time flush program.
+
+        ``flush_fn(carries, t_ends, banks) -> (L, b)`` is :meth:`_flush`
+        with a per-layer per-slot end time ``t_ends (L, b)`` (f32,
+        layer-native clocks) and per-slot energy sums — when a request
+        leaves its slots mid-stream, the scheduler charges ITS trailing
+        idle energy from the live carries without disturbing the other
+        tenants (the carries are read, not donated). Slots whose
+        ``t_ends`` entry is in the past (tau <= 0, e.g. every slot not
+        owned by the leaving request) charge exactly zero."""
+        spec = self.spec
+        kinds = spec.circuits
+        n_layers = spec.n_layers
+
+        def flush_fn(carries, t_ends, banks):
+            rows = []
+            for i in range(n_layers):
+                if self.backend != "lasana" or kinds[i] == "crossbar":
+                    rows.append(jnp.zeros((b,), jnp.float32))
+                    continue
+                circ = self.circs[i]
+                lst = carries[i]
+                n_per = spec.layers[i].n_circuits(b) // b
+                tau = jnp.repeat(t_ends[i], n_per) - lst.t_last
+                feats = jnp.concatenate(
+                    [jnp.zeros((lst.v.shape[0], circ.n_inputs),
+                               jnp.float32),
+                     lst.v[:, None], tau[:, None], lst.params], axis=1)
+                e = banks.get(kinds[i]).predict("M_ES", feats)
+                e = jnp.where(tau > 0, e, 0.0)
+                rows.append(jnp.sum(e.reshape(b, -1), axis=1))
+            return jnp.stack(rows)
+
+        return jax.jit(flush_fn)
+
+    def _build_slot_join(self, b: int):
+        """Build the masked slot (re)initialization program.
+
+        ``join_fn(carries, prev_ys, mask, g0) -> (carries, prev_ys)``
+        resets the slots selected by ``mask (b,)`` to a fresh request
+        start at global tick ``g0`` (traced f32 — joins never recompile):
+        state back to :meth:`_init_carry` values, published outputs
+        zeroed, and — lasana backend — ``t_last`` set to ``g0`` in each
+        layer's native clock. Because simulation time enters the
+        surrogate features only through ``tau = t - t_last``, a request
+        whose slot starts life at offset ``g0`` sees exactly the tau
+        sequence of a request started at tick 0: that time-translation
+        invariance is what makes mid-stream joins bit-identical to solo
+        runs. Unmasked slots pass through untouched (``carries`` /
+        ``prev_ys`` are donated and alias in place)."""
+        spec = self.spec
+        n_layers = spec.n_layers
+
+        def join_fn(carries, prev_ys, mask, g0):
+            new_carries, new_prev = [], []
+            for i in range(n_layers):
+                init = self._init_carry(i, b)
+                n_per = spec.layers[i].n_circuits(b) // b
+                m = jnp.repeat(mask, n_per)
+
+                def sel(new_leaf, old_leaf):
+                    mm = m.reshape(m.shape[0],
+                                   *([1] * (old_leaf.ndim - 1)))
+                    return jnp.where(mm, new_leaf, old_leaf)
+
+                carry = jax.tree.map(sel, init, carries[i])
+                if self.backend == "lasana":
+                    clock = self.circs[i].clock_ns
+                    carry = carry._replace(
+                        t_last=jnp.where(m, g0 * clock, carry.t_last))
+                new_carries.append(carry)
+                new_prev.append(jnp.where(mask[:, None], 0.0, prev_ys[i]))
+            return new_carries, new_prev
+
+        return jax.jit(join_fn, donate_argnums=(0, 1))
+
+    def slot_programs(self, b: int, chunk_ticks: int,
+                      surrogates=None) -> SlotPrograms:
+        """Compile (or fetch) the continuous-batching program family.
+
+        One :class:`SlotPrograms` per (``b``, ``chunk_ticks``, surrogate
+        structure) — the serving layer's shape bucket. The scheduler owns
+        the calling protocol: :meth:`_build_slot_join` seats joining
+        requests, :meth:`_build_slot_step` advances all live slots one
+        chunk, :meth:`_build_slot_flush` charges leavers' trailing idle
+        energy. Programs are cached in the engine's AOT cache (only the
+        ``step`` tick-scan counts toward :attr:`compile_count`) and take
+        surrogates as traced arguments, so same-structure hot-swaps and
+        multiple co-resident surrogate versions share one executable."""
+        if self.backend != "lasana":
+            raise ValueError("slot_programs requires backend='lasana' "
+                             f"(got {self.backend!r})")
+        if self.mesh is not None:
+            raise ValueError("slot_programs does not support mesh "
+                             "sharding yet")
+        if chunk_ticks <= 0:
+            raise ValueError(f"chunk_ticks must be positive: {chunk_ticks}")
+        banks = self._runtime_banks(surrogates)
+        spec = self.spec
+        carries = [self._init_carry(i, b) for i in range(spec.n_layers)]
+        prev0 = [jnp.zeros((b, l.n_out), jnp.float32)
+                 for l in spec.layers]
+        x0 = jnp.zeros((chunk_ticks, b, spec.layers[0].fan_in),
+                       jnp.float32)
+        scal = jnp.zeros((), jnp.float32)
+        total = 0.0
+        step, cs = self._compiled(
+            self._program_key("slot", b, chunk_ticks, banks),
+            lambda: self._build_slot_step(b, banks),
+            (x0, scal, jnp.zeros((b,), jnp.float32), carries, prev0,
+             banks))
+        total += cs
+        flush, cs = self._compiled(
+            self._program_key("slotflush", b, None, banks),
+            lambda: self._build_slot_flush(b, banks),
+            (carries, jnp.zeros((spec.n_layers, b), jnp.float32), banks))
+        total += cs
+        join, cs = self._compiled(
+            self._program_key("slotjoin", b, None, banks),
+            lambda: self._build_slot_join(b),
+            (carries, prev0, jnp.zeros((b,), bool), scal))
+        total += cs
+        return SlotPrograms(step=step, flush=flush, join=join,
+                            compile_seconds=total)
+
     def _runtime_banks(self, surrogates) -> SurrogateLibrary:
         if self.backend != "lasana":
             if surrogates is not None:
@@ -1470,7 +1719,8 @@ class NetworkEngine:
         """Cache key of a compiled program: shapes + surrogate structure.
 
         ``kind`` separates the monolithic (``"mono"``), streaming-chunk
-        (``"stream"``) and stream-flush (``"flush"``) programs; the
+        (``"stream"``), stream-flush (``"flush"``) and continuous-batching
+        (``"slot"`` / ``"slotflush"`` / ``"slotjoin"``) programs; the
         engine's ``fused`` flag, the resolved fused-kernel switch
         (``fused_kernel=`` override else ``REPRO_FUSED_KERNEL``) and the
         resolved megakernel launcher (``REPRO_TICK_PALLAS``) are part of
@@ -1493,19 +1743,26 @@ class NetworkEngine:
         """AOT lower+compile ``build()`` once per cache key.
 
         Returns ``(compiled, compile_seconds)`` where ``compile_seconds``
-        is 0.0 on cache hits; tick-scan programs (``mono``/``stream``)
-        count toward :attr:`compile_count`, the tiny flush helper does
-        not (it is streaming bookkeeping, not a network program)."""
+        is 0.0 on cache hits; tick-scan programs (``mono``/``stream``/
+        ``slot``) count toward :attr:`compile_count`, the tiny flush and
+        join helpers do not (they are stream/serve bookkeeping, not
+        network programs). Thread-safe: concurrent callers racing on one
+        uncompiled key serialize on :attr:`_compile_lock` and share the
+        single resulting executable (exactly one compile)."""
         entry = self._sim_cache.get(key)
         if entry is not None:
             return entry[0], 0.0
-        fn = build()
-        t0 = time.time()
-        compiled = fn.lower(*example_args).compile()
-        compile_s = time.time() - t0
-        self._sim_cache[key] = (compiled, compile_s)
-        if key[0] != "flush":
-            self.compile_count += 1
+        with self._compile_lock:
+            entry = self._sim_cache.get(key)
+            if entry is not None:
+                return entry[0], 0.0
+            fn = build()
+            t0 = time.time()
+            compiled = fn.lower(*example_args).compile()
+            compile_s = time.time() - t0
+            self._sim_cache[key] = (compiled, compile_s)
+            if key[0] in ("mono", "stream", "slot"):
+                self.compile_count += 1
         return compiled, compile_s
 
     def _check_mesh_batch(self, b: int):

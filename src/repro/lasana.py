@@ -34,7 +34,9 @@ this facade. See docs/api.md for the full reference.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 from typing import Any, Optional
 
 from repro.core.explore import CandidateSpec, DSEReport
@@ -57,6 +59,7 @@ __all__ = [
     "explore",
     "load",
     "save",
+    "serve",
     "simulate",
     "simulate_stream",
     "stream",
@@ -134,12 +137,21 @@ def load(path: str):
 # simulate() is stateless for the caller, but compiled network programs are
 # cached per live NetworkSpec object, so calling simulate() repeatedly with
 # retrained surrogates reuses one executable instead of recompiling per
-# call. The cache dict is attached to the spec itself (not a module-level
+# call. The cache is attached to the spec itself (not a module-level
 # table): engines — and their compiled XLA executables — are released the
 # moment the spec is garbage-collected, so sweeps that build many specs
-# don't accumulate programs.
+# don't accumulate programs. Within one live spec the cache is a bounded
+# LRU over (backend, mode, mesh, record_hidden, fused, fused_kernel)
+# variants: a long-lived server process that cycles engine configurations
+# evicts the least-recently-used engine (and its executables) instead of
+# growing without bound.
 
 _ENGINE_ATTR = "_lasana_engine_cache"
+_ENGINE_LOCK = threading.Lock()
+
+# engine-variant entries kept per live spec; read at call time so tests
+# (and unusual deployments) can tune it via monkeypatching
+ENGINE_CACHE_CAPACITY = 8
 
 
 def engine(spec: NetworkSpec, *, backend: str = "lasana",
@@ -156,27 +168,39 @@ def engine(spec: NetworkSpec, *, backend: str = "lasana",
     tri-state megakernel override (``None`` defers to
     ``REPRO_FUSED_KERNEL``, see docs/architecture.md "Inference hot
     path"). Useful directly when you want explicit control or to assert
-    on ``engine(spec).compile_count`` in tests."""
-    cache = getattr(spec, _ENGINE_ATTR, None)
-    if cache is None:
-        cache = {}
-        # NetworkSpec is frozen (dataclass __setattr__ is blocked), but a
-        # private cache slot is lifecycle bookkeeping, not spec state
-        object.__setattr__(spec, _ENGINE_ATTR, cache)
+    on ``engine(spec).compile_count`` in tests.
+
+    The per-spec cache is a bounded LRU (``ENGINE_CACHE_CAPACITY``
+    variants): requesting a new combination beyond capacity evicts the
+    least-recently-used engine and its compiled executables — long-lived
+    processes (the serving layer) cannot accumulate programs without
+    bound. Thread-safe: concurrent callers racing on one spec get the
+    same engine instance."""
+    fused_kernel = None if fused_kernel is None else bool(fused_kernel)
     # the mesh keys BY VALUE (jax.sharding.Mesh hashes devices + axis
     # names), never by id(): after a mesh is garbage-collected, a new mesh
     # allocated at the same address must not silently reuse an engine
     # compiled for the dead mesh. Value-equal meshes share the engine
     # (same devices, same axes — same compiled program); the key keeps the
     # mesh alive only as long as the spec itself.
-    fused_kernel = None if fused_kernel is None else bool(fused_kernel)
     key = (backend, mode, mesh, record_hidden, bool(fused), fused_kernel)
-    eng = cache.get(key)
-    if eng is None:
-        eng = NetworkEngine(spec, backend=backend, mode=mode, mesh=mesh,
-                            record_hidden=record_hidden, fused=fused,
-                            fused_kernel=fused_kernel)
-        cache[key] = eng
+    with _ENGINE_LOCK:
+        cache = getattr(spec, _ENGINE_ATTR, None)
+        if cache is None:
+            cache = collections.OrderedDict()
+            # NetworkSpec is frozen (dataclass __setattr__ is blocked), but
+            # a private cache slot is lifecycle bookkeeping, not spec state
+            object.__setattr__(spec, _ENGINE_ATTR, cache)
+        eng = cache.get(key)
+        if eng is None:
+            eng = NetworkEngine(spec, backend=backend, mode=mode, mesh=mesh,
+                                record_hidden=record_hidden, fused=fused,
+                                fused_kernel=fused_kernel)
+            cache[key] = eng
+        else:
+            cache.move_to_end(key)
+        while len(cache) > max(int(ENGINE_CACHE_CAPACITY), 1):
+            cache.popitem(last=False)
     return eng
 
 
@@ -293,3 +317,36 @@ def explore(candidates: CandidateSpec, surrogates, *,
     space exploration")."""
     from repro.core.explore import evaluate_candidates
     return evaluate_candidates(candidates, surrogates, engine=engine)
+
+
+def serve(config=None, **overrides):
+    """Start a persistent multi-tenant simulation server (LASANA-as-a-
+    service; see docs/serving.md).
+
+    Returns a started :class:`repro.serve.SimServer`: a long-lived
+    process-local service that owns a surrogate artifact store
+    (register/hot-swap by ``name@version``), quantizes heterogeneous
+    requests onto a bounded set of compiled shape buckets, and packs
+    concurrent requests along the batch axis of one compiled program
+    (continuous batching — requests join/leave at chunk boundaries, with
+    per-slot masks keeping every tenant's energy/latency/event records
+    exactly what a solo :func:`simulate` of that request would produce).
+
+    ``config`` is a :class:`repro.serve.ServeConfig`; keyword overrides
+    are applied on top (e.g. ``lasana.serve(chunk_ticks=16,
+    max_in_flight=8)``). Use as a context manager or call ``close()``::
+
+        with lasana.serve(chunk_ticks=8) as srv:       # no-run
+            srv.register_surrogate("lif", sur)
+            h = srv.submit(spec, stimulus, surrogates="lif")
+            run = h.result()                           # NetworkRun
+            print(srv.stats()["requests_completed"])
+    """
+    from repro.serve import ServeConfig, SimServer
+    if config is None:
+        config = ServeConfig(**overrides)
+    elif overrides:
+        config = dataclasses.replace(config, **overrides)
+    srv = SimServer(config)
+    srv.start()
+    return srv

@@ -1,0 +1,34 @@
+"""LASANA-as-a-service: persistent multi-tenant simulation serving.
+
+The serving layer over the surrogate network engine (docs/serving.md):
+a long-lived :class:`SimServer` owning a versioned surrogate
+:class:`ArtifactStore`, a bounded compiled-program cache quantized by
+:class:`BucketPolicy` shape buckets, and a continuous-batching scheduler
+(:mod:`repro.serve.scheduler`) that packs concurrent requests along the
+batch axis of one compiled slot program — requests join/leave at chunk
+boundaries, per-slot masks keep every tenant's records exactly what a
+solo ``lasana.simulate`` would produce, and partial records stream back
+per chunk. ``lasana.serve()`` is the facade entry; ``python -m
+repro.serve`` is the stdin/socket driver.
+"""
+
+from repro.serve.buckets import Bucket, BucketPolicy, spec_content_key
+from repro.serve.metrics import ServerMetrics
+from repro.serve.protocol import run_stdio
+from repro.serve.scheduler import Lane, RequestHandle
+from repro.serve.server import ServeConfig, ServerBusy, SimServer
+from repro.serve.store import ArtifactStore
+
+__all__ = [
+    "ArtifactStore",
+    "Bucket",
+    "BucketPolicy",
+    "Lane",
+    "RequestHandle",
+    "ServeConfig",
+    "ServerBusy",
+    "ServerMetrics",
+    "SimServer",
+    "run_stdio",
+    "spec_content_key",
+]

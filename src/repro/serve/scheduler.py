@@ -1,0 +1,270 @@
+"""Continuous-batching scheduler: lanes of slot-multiplexed requests.
+
+A :class:`Lane` is one live instance of a compiled slot-program family
+(one :class:`~repro.serve.buckets.Bucket` × one resolved surrogate
+artifact × one engine mode): a persistent ``width``-slot batch whose
+global tick counter ``g`` advances one ``chunk_ticks`` quantum per
+:meth:`Lane.step`. Concurrent requests own disjoint slot sets inside the
+batch; they
+
+  * JOIN at a chunk boundary — the lane's ``join`` program re-initializes
+    their slots with ``t_last = g`` in each layer's native clock, which by
+    time-translation invariance makes the slot's tau sequence (and hence
+    every surrogate prediction) identical to a request started at tick 0;
+  * RUN under a per-slot live mask — each tick only slots whose request
+    still has stimulus are simulated, so co-batched requests of different
+    lengths never contaminate each other and padding is frozen, not
+    computed;
+  * LEAVE mid-stream — on the chunk where a request's stimulus ends, the
+    lane's ``flush`` program charges ITS trailing idle energy (per-slot
+    end times; all other slots charge exactly zero) and the slots return
+    to the free list for the next joiner.
+
+Per-slot record streams (energy/latency/events ``(T, L, width)``) are
+sliced back into per-request chunk :class:`NetworkRun` records and pushed
+to each request's :class:`RequestHandle`; their merge is the request's
+whole-run record, matching a solo ``lasana.simulate`` bit-for-bit on
+discrete records (rtol 1e-5 on f32 energy sums, whose slot-wise reduction
+reassociates float addition; latency maxes additionally carry a one-ULP
+absolute epsilon from vectorization-width variance in the surrogate's
+dot products, visible on near-zero elements — nothing else differs).
+
+Different surrogate *versions* cannot share a lane — the surrogate is one
+traced argument of the batched program — but lanes of equal structure
+share the compiled programs, so version rollout costs zero compiles.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import NetworkRun
+
+
+class RequestHandle:
+    """Caller-facing future for one submitted simulation request.
+
+    Chunk records stream in as the scheduler retires them (``on_chunk``
+    fires from the driver thread); :meth:`result` blocks for — and
+    merges — the complete per-request :class:`NetworkRun`."""
+
+    def __init__(self, req_id: int, tenant: str, on_chunk=None):
+        self.id = req_id
+        self.tenant = tenant
+        self._on_chunk = on_chunk
+        self._chunks: list = []
+        self._done = threading.Event()
+        self._error = None
+        self._result = None
+        self.wait_chunks = 0          # scheduler rounds spent queued
+        self.surrogate_ref = None     # (name, version) when store-resolved
+
+    def _push(self, chunk: NetworkRun):
+        self._chunks.append(chunk)
+        if self._on_chunk is not None:
+            self._on_chunk(chunk)
+
+    def _finish(self):
+        self._result = NetworkRun.merge(self._chunks)
+        self._done.set()
+
+    def _fail(self, err: Exception):
+        self._error = err
+        self._done.set()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def chunks(self) -> list:
+        """Per-chunk records received so far (complete once ``done``)."""
+        return list(self._chunks)
+
+    def result(self, timeout=None) -> NetworkRun:
+        """Block until the request completes; the merged NetworkRun."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.id} still in flight "
+                               f"after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class _Active:
+    """One seated request: its handle, stimulus, slots, and tick window."""
+
+    def __init__(self, handle: RequestHandle, stimulus: np.ndarray,
+                 slots: list, g0: int):
+        self.handle = handle
+        self.x = stimulus                # (T, b_req, fan_in) host array
+        self.slots = slots
+        self.g0 = g0                     # global join tick
+        self.t_total = stimulus.shape[0]
+
+    @property
+    def g_end(self) -> int:
+        return self.g0 + self.t_total
+
+
+class Lane:
+    """One live continuous batch driving a compiled slot-program family."""
+
+    def __init__(self, engine, spec, bucket, surrogates, *,
+                 metrics=None):
+        self.engine = engine
+        self.spec = spec
+        self.bucket = bucket
+        self.width = bucket.width
+        self.chunk_ticks = bucket.chunk_ticks
+        self.metrics = metrics
+        self.programs = engine.slot_programs(self.width, self.chunk_ticks,
+                                             surrogates)
+        if metrics is not None and self.programs.compile_seconds:
+            metrics.add(compile_seconds=self.programs.compile_seconds)
+        banks = engine._runtime_banks(surrogates)
+        self._banks = engine._donatable_banks(banks)
+        self._carries = [engine._init_carry(i, self.width)
+                         for i in range(spec.n_layers)]
+        self._prev = [jnp.zeros((self.width, l.n_out), jnp.float32)
+                      for l in spec.layers]
+        self._end_ks = np.zeros(self.width, np.float32)
+        self._clocks = [c.clock_ns for c in engine.circs]
+        self._last_lif = spec.circuits[-1] == "lif"
+        self.g = 0                       # global tick at next chunk start
+        self.free = list(range(self.width))
+        self.active: list = []
+
+    @property
+    def free_width(self) -> int:
+        return len(self.free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self.free) / self.width
+
+    def admit(self, handle: RequestHandle, stimulus: np.ndarray) -> bool:
+        """Seat a request at the NEXT chunk boundary; False if full."""
+        b_req = stimulus.shape[1]
+        if b_req > len(self.free):
+            return False
+        slots = [self.free.pop(0) for _ in range(b_req)]
+        self.active.append(_Active(handle, stimulus, slots, self.g))
+        return True
+
+    def step(self) -> dict:
+        """Advance every seated request one chunk; returns step stats.
+
+        One scheduling round: join-reset newly seated slots, advance the
+        whole batch ``chunk_ticks`` ticks under the live mask, slice each
+        tenant's rows out of the shared per-slot records, flush + free
+        the slots of requests that ended inside this chunk."""
+        if not self.active:
+            return {}
+        t0 = time.time()
+        tc, width = self.chunk_ticks, self.width
+        g = self.g
+        joiners = [a for a in self.active if a.g0 == g]
+        if joiners:
+            mask = np.zeros(width, bool)
+            for a in joiners:
+                mask[a.slots] = True
+                self._end_ks[a.slots] = np.float32(a.g_end)
+            self._carries, self._prev = self.programs.join(
+                self._carries, self._prev, jnp.asarray(mask),
+                jnp.float32(g))
+
+        fan_in = self.spec.layers[0].fan_in
+        x = np.zeros((tc, width, fan_in), np.float32)
+        live_ticks = 0
+        for a in self.active:
+            rows = min(tc, a.g_end - g)
+            lo = g - a.g0
+            x[:rows, a.slots, :] = a.x[lo:lo + rows]
+            live_ticks += rows * len(a.slots)
+
+        outs = self.programs.step(
+            jnp.asarray(x), jnp.float32(g), jnp.asarray(self._end_ks),
+            self._carries, self._prev, self._banks)
+        primary, out_seq, hidden, e_tlb, l_tlb, ev_tlb = jax.device_get(
+            outs[:6])
+        self._carries, self._prev, self._banks = outs[6], outs[7], outs[8]
+
+        leavers = [a for a in self.active if a.g_end <= g + tc]
+        flushes = None
+        if leavers:
+            t_ends = np.zeros((self.spec.n_layers, width), np.float32)
+            for a in leavers:
+                for i, clock in enumerate(self._clocks):
+                    t_ends[i, a.slots] = np.float32(a.g_end * clock)
+            flushes = np.asarray(jax.device_get(self.programs.flush(
+                self._carries, jnp.asarray(t_ends), self._banks)))
+
+        events = 0
+        for a in self.active:
+            rows = min(tc, a.g_end - g)
+            flush = np.zeros((self.spec.n_layers,), np.float32)
+            if flushes is not None and a.g_end <= g + tc:
+                flush = flushes[:, a.slots].sum(axis=1)
+            rec = self._slice(a, rows, primary, out_seq, hidden,
+                              e_tlb, l_tlb, ev_tlb, flush)
+            events += int(rec.events.sum())
+            a.handle._push(rec)
+
+        for a in leavers:
+            self.active.remove(a)
+            self.free.extend(a.slots)
+            self.free.sort()
+            a.handle._finish()
+        self.g = g + tc
+        stats = {"live_ticks": live_ticks, "events": events,
+                 "occupancy": live_ticks / (tc * width),
+                 "completed": len(leavers),
+                 "steady_seconds": time.time() - t0}
+        if self.metrics is not None:
+            self.metrics.add(chunks_total=1, ticks_live_total=live_ticks,
+                             events_total=events,
+                             occupancy_sum=stats["occupancy"],
+                             steady_seconds=stats["steady_seconds"],
+                             requests_completed=len(leavers))
+        return stats
+
+    def _slice(self, a: _Active, rows: int, primary, out_seq, hidden,
+               e_tlb, l_tlb, ev_tlb, flush) -> NetworkRun:
+        """Cut one request's per-chunk record out of the shared batch.
+
+        Slot sums/maxes over the request's own slots reproduce the solo
+        record's whole-layer reductions: energy/events sum over disjoint
+        circuit sets, latency is a max, and dead ticks/slots contribute
+        exact zeros (the live mask froze them)."""
+        S = a.slots
+        spec = self.spec
+        if self._last_lif:
+            # per-chunk spike counts: ticks past the request's end emit
+            # zero spikes under the live mask, so whole-chunk counts are
+            # exact; merge sums the integer partials
+            outputs = np.asarray(primary)[S]
+            out_spikes = np.asarray(out_seq)[:rows][:, S]
+        else:
+            outputs = np.asarray(out_seq)[rows - 1][S]
+            out_spikes = None
+        layer_spikes = None
+        if self.engine.record_hidden:
+            layer_spikes = [np.asarray(h)[:rows][:, S] for h in hidden]
+        return NetworkRun(
+            backend=self.engine.backend, mode=self.engine.mode,
+            outputs=outputs, out_spikes=out_spikes,
+            layer_spikes=layer_spikes,
+            energy=e_tlb[:rows][:, :, S].sum(axis=2),
+            latency=l_tlb[:rows][:, :, S].max(axis=2),
+            events=ev_tlb[:rows][:, :, S].sum(axis=2).astype(np.int64),
+            flush_energy=flush,
+            n_circuits=np.asarray([l.n_circuits(len(S))
+                                   for l in spec.layers]),
+            clock_ns=self.engine.clock_ns, wall_seconds=0.0,
+            circuits=spec.circuits,
+            compile_seconds=0.0)

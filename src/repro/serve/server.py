@@ -1,0 +1,360 @@
+"""The persistent multi-tenant simulation server (LASANA-as-a-service).
+
+:class:`SimServer` glues the serving subsystem together around one
+driver thread that owns all JAX dispatch:
+
+  * an :class:`~repro.serve.store.ArtifactStore` of named, versioned
+    surrogates (register/hot-swap; in-flight requests keep the version
+    they resolved at submit);
+  * a canonical-spec table + the facade's bounded per-spec engine cache:
+    content-equal :class:`NetworkSpec`s from different clients collapse
+    onto ONE engine and its AOT program cache, so the number of compiled
+    slot programs is bounded by the number of shape buckets — not by
+    request count, tenant count, or surrogate versions;
+  * a :class:`~repro.serve.buckets.BucketPolicy` quantizing request
+    shapes, and one :class:`~repro.serve.scheduler.Lane` per (bucket,
+    surrogate version, mode) continuously batching its requests;
+  * admission control: a bounded submit queue (``ServerBusy``
+    backpressure), a global in-flight cap, and round-robin per-tenant
+    fairness so one chatty tenant cannot starve another's queue;
+  * :class:`~repro.serve.metrics.ServerMetrics` behind :meth:`stats`.
+
+Threading contract: ``submit``/``register_*``/``stats`` are safe from any
+thread; simulation itself happens on the driver thread (``start()``) or
+under the caller of ``run_until_idle()`` — never both at once.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.network import NetworkSpec
+from repro.serve.buckets import BucketPolicy, spec_content_key
+from repro.serve.metrics import ServerMetrics
+from repro.serve.scheduler import Lane, RequestHandle
+from repro.serve.store import ArtifactStore
+
+
+class ServerBusy(RuntimeError):
+    """Backpressure: the submit queue is at capacity — retry later."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Server shape/capacity knobs (see docs/serving.md).
+
+    slot_widths     batch-width ladder of the bucket policy
+    chunk_ticks     continuous-batching quantum (join/leave granularity)
+    max_in_flight   seated (admitted, unfinished) request cap
+    max_queue       submit-queue cap beyond which submit raises
+                    :class:`ServerBusy`
+    record_hidden   keep per-layer spike traces in request records
+                    (parity tests); default off — serving unbounded
+                    streams of hidden traces defeats bounded memory
+    poll_seconds    driver-thread sleep when idle
+    """
+
+    slot_widths: tuple = (4,)
+    chunk_ticks: int = 16
+    max_in_flight: int = 32
+    max_queue: int = 256
+    record_hidden: bool = False
+    poll_seconds: float = 0.01
+
+
+class _Queued:
+    """A submitted-but-not-yet-seated request."""
+
+    def __init__(self, handle, spec_key, spec, stimulus, surrogates,
+                 sur_token, mode):
+        self.handle = handle
+        self.spec_key = spec_key
+        self.spec = spec
+        self.stimulus = stimulus
+        self.surrogates = surrogates
+        self.sur_token = sur_token      # lane-identity of the artifact
+        self.mode = mode
+
+
+class SimServer:
+    """Persistent simulation server over the slot-program engine layer."""
+
+    def __init__(self, config: Optional[ServeConfig] = None):
+        self.config = config or ServeConfig()
+        self.policy = BucketPolicy(slot_widths=self.config.slot_widths,
+                                   chunk_ticks=self.config.chunk_ticks)
+        self.store = ArtifactStore()
+        self.metrics = ServerMetrics()
+        self._lock = threading.Lock()          # queues + tables
+        self._wake = threading.Condition(self._lock)
+        self._queues: dict = collections.OrderedDict()  # tenant -> deque
+        self._specs: dict = {}                 # spec_key -> canonical spec
+        self._spec_names: dict = {}            # name -> canonical spec
+        self._lanes: dict = {}                 # lane key -> Lane
+        self._in_flight = 0                    # seated, unfinished
+        self._next_id = 0
+        self._thread = None
+        self._stop = threading.Event()
+        self._closed = False
+
+    # --- registration ---------------------------------------------------------
+
+    def register_surrogate(self, name: str, surrogate, *,
+                           version=None) -> int:
+        """Store a surrogate under ``name``; returns its new version."""
+        return self.store.register(name, surrogate, version=version)
+
+    def register_spec(self, name: str, spec: NetworkSpec) -> str:
+        """Name a spec for by-reference submission (wire protocol)."""
+        with self._lock:
+            self._spec_names[name] = self._canonical(spec)
+        return spec_content_key(spec)
+
+    def _canonical(self, spec: NetworkSpec):
+        """Collapse content-equal specs onto one engine-owning object."""
+        key = spec_content_key(spec)
+        return self._specs.setdefault(key, spec)
+
+    # --- submission -----------------------------------------------------------
+
+    def submit(self, spec, stimulus, *, surrogates, tenant: str = "default",
+               mode: str = "standalone", on_chunk=None) -> RequestHandle:
+        """Queue one simulation request; returns its handle immediately.
+
+        spec        a :class:`NetworkSpec` or the name of a
+                    :meth:`register_spec`-registered one
+        stimulus    (T, B, fan_in) drive in the first layer's native
+                    units ((B, fan_in) promotes to one tick)
+        surrogates  a store ref (``"name"`` = latest, ``"name@ver"`` =
+                    pinned) or a direct surrogate object
+        tenant      fairness domain: queued requests are admitted
+                    round-robin across tenants, FIFO per lane within
+                    one (a full lane never blocks queued requests
+                    bound for other lanes)
+        on_chunk    optional callback fired (from the driver thread) per
+                    streamed chunk record
+
+        Raises :class:`ServerBusy` when the queue is full (backpressure)
+        and ``ValueError`` for malformed requests — both synchronously,
+        never parked on the queue."""
+        if self._closed:
+            raise RuntimeError("server is closed")
+        if isinstance(spec, str):
+            with self._lock:
+                got = self._spec_names.get(spec)
+            if got is None:
+                raise KeyError(f"no spec registered under {spec!r}")
+            spec = got
+        x = np.asarray(stimulus, np.float32)
+        if x.ndim == 2:
+            x = x[None]
+        if x.ndim != 3:
+            raise ValueError(f"stimulus must be (T, B, n_in) or (B, n_in), "
+                             f"got shape {tuple(x.shape)}")
+        if x.shape[-1] != spec.layers[0].fan_in:
+            raise ValueError(f"input width {x.shape[-1]} != layer-0 "
+                             f"fan_in {spec.layers[0].fan_in}")
+        self.policy.width_for(x.shape[1])      # reject oversize batches now
+        if isinstance(surrogates, str):
+            ref, sur = self.store.resolve(surrogates)
+            sur_token = ref                     # (name, version)
+        else:
+            sur, sur_token = surrogates, ("<direct>", id(surrogates))
+
+        with self._lock:
+            depth = sum(len(q) for q in self._queues.values())
+            if depth >= self.config.max_queue:
+                self.metrics.add(requests_rejected=1)
+                raise ServerBusy(
+                    f"submit queue full ({depth}/{self.config.max_queue})")
+            self._next_id += 1
+            handle = RequestHandle(self._next_id, tenant,
+                                   on_chunk=on_chunk)
+            handle.surrogate_ref = sur_token
+            spec_c = self._canonical(spec)
+            self._queues.setdefault(tenant, collections.deque()).append(
+                _Queued(handle, spec_content_key(spec_c), spec_c, x, sur,
+                        sur_token, mode))
+            self.metrics.add(requests_submitted=1)
+            self._wake.notify_all()
+        return handle
+
+    # --- scheduling -----------------------------------------------------------
+
+    def _lane_for(self, q: _Queued) -> Lane:
+        import repro.lasana as lasana
+        bucket = self.policy.bucket_for(q.spec_key, q.stimulus.shape[1])
+        key = (bucket.key, q.sur_token, q.mode)
+        lane = self._lanes.get(key)
+        if lane is None:
+            eng = lasana.engine(q.spec, mode=q.mode,
+                                record_hidden=self.config.record_hidden)
+            lane = Lane(eng, q.spec, bucket, q.surrogates,
+                        metrics=self.metrics)
+            self._lanes[key] = lane
+        return lane
+
+    def _admit(self) -> bool:
+        """One round-robin admission sweep across tenant queues.
+
+        A request whose lane is full does NOT block the requests queued
+        behind it that target OTHER lanes (classic head-of-line blocking
+        would cap occupancy across a mixed-bucket workload); once a lane
+        rejects, later same-tenant requests for that lane are skipped
+        too, so per-lane FIFO order within a tenant is preserved."""
+        admitted = False
+        with self._lock:
+            tenants = list(self._queues)
+            for tenant in tenants:
+                queue = self._queues[tenant]
+                blocked: set = set()       # lanes that rejected this sweep
+                skipped: list = []
+                while queue:
+                    if self._in_flight >= self.config.max_in_flight:
+                        break
+                    q = queue.popleft()
+                    lane = self._lane_for(q)
+                    if (id(lane) in blocked
+                            or not lane.admit(q.handle, q.stimulus)):
+                        blocked.add(id(lane))
+                        skipped.append(q)
+                        continue
+                    self._in_flight += 1
+                    admitted = True
+                queue.extendleft(reversed(skipped))
+                if not queue:
+                    del self._queues[tenant]
+            # rotate start tenant so admission order is fair over rounds
+            if self._queues:
+                first = next(iter(self._queues))
+                self._queues.move_to_end(first)
+                for q in [r for dq in self._queues.values() for r in dq]:
+                    q.handle.wait_chunks += 1
+                    self.metrics.note_wait(q.handle.wait_chunks)
+        return admitted
+
+    def step(self) -> bool:
+        """One scheduling round: admit, then advance every live lane.
+
+        Returns True when any work happened — the driver loop (or an
+        external caller in un-threaded mode) idles when it returns
+        False."""
+        worked = self._admit()
+        for lane in list(self._lanes.values()):
+            if not lane.active:
+                continue
+            stats = lane.step()
+            if stats:
+                worked = True
+                with self._lock:
+                    self._in_flight -= stats["completed"]
+                    if stats["completed"]:
+                        self._wake.notify_all()
+        return worked
+
+    def run_until_idle(self, *, max_rounds: int = 100000) -> None:
+        """Drive scheduling on the CALLING thread until no work remains."""
+        if self._thread is not None:
+            raise RuntimeError("driver thread is running; use handles "
+                               "or stats() instead")
+        for _ in range(max_rounds):
+            if not self.step():
+                with self._lock:
+                    if not self._queues and self._in_flight == 0:
+                        return
+        raise RuntimeError(f"not idle after {max_rounds} rounds")
+
+    # --- lifecycle ------------------------------------------------------------
+
+    def start(self) -> "SimServer":
+        """Spawn the driver thread (idempotent); returns self."""
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._drive,
+                                            name="lasana-serve",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def _drive(self):
+        while not self._stop.is_set():
+            try:
+                worked = self.step()
+            except Exception as err:        # fail loudly per request
+                self._fail_all(err)
+                raise
+            if not worked:
+                with self._wake:
+                    if not self._queues:
+                        self._wake.wait(self.config.poll_seconds)
+
+    def _fail_all(self, err: Exception):
+        with self._lock:
+            for queue in self._queues.values():
+                for q in queue:
+                    q.handle._fail(err)
+            self._queues.clear()
+            for lane in self._lanes.values():
+                for a in list(lane.active):
+                    a.handle._fail(err)
+
+    def close(self, *, drain: bool = True, timeout: float = 60.0):
+        """Stop the driver thread; ``drain`` finishes in-flight work."""
+        if drain and self._thread is not None:
+            import time as _time
+            deadline = _time.time() + timeout
+            while _time.time() < deadline and self._thread.is_alive():
+                with self._lock:
+                    if not self._queues and self._in_flight == 0:
+                        break
+                _time.sleep(0.005)
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+        self._closed = True
+
+    def __enter__(self) -> "SimServer":
+        return self
+
+    def __exit__(self, *exc):
+        self.close(drain=exc[0] is None)
+
+    # --- observability --------------------------------------------------------
+
+    def compile_count(self) -> int:
+        """Compiled tick-scan programs across the server's engines."""
+        with self._lock:
+            engines = {id(l.engine): l.engine for l in self._lanes.values()}
+        return sum(e.compile_count for e in engines.values())
+
+    def stats(self) -> dict:
+        """The ``/stats`` report: counters, rates, queues, lanes."""
+        with self._lock:
+            by_bucket: dict = {}
+            for queue in self._queues.values():
+                for q in queue:
+                    b = self.policy.bucket_for(q.spec_key,
+                                               q.stimulus.shape[1])
+                    name = f"{b.spec_key[:8]}/w{b.width}/c{b.chunk_ticks}"
+                    by_bucket[name] = by_bucket.get(name, 0) + 1
+            lanes = [{
+                "bucket": f"{l.bucket.spec_key[:8]}/w{l.width}"
+                          f"/c{l.chunk_ticks}",
+                "surrogate": str(getattr(l, "sur_token", key[1])),
+                "occupancy": l.occupancy,
+                "active_requests": len(l.active),
+                "global_tick": l.g,
+            } for key, l in self._lanes.items()]
+        out = self.metrics.snapshot(queue_depth_by_bucket=by_bucket,
+                                    lanes=lanes)
+        out["compile_count"] = self.compile_count()
+        out["n_lanes"] = len(lanes)
+        out["surrogates"] = {n: self.store.versions(n)
+                             for n in self.store.names()}
+        return out

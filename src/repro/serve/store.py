@@ -1,0 +1,103 @@
+"""Surrogate artifact store: named, versioned, hot-swappable.
+
+The serving counterpart of ``lasana.save``/``lasana.load``: a process-
+local registry mapping ``name -> {version -> surrogate}`` so requests
+reference predictor artifacts by a stable string (``"lif"`` or pinned
+``"lif@2"``) instead of shipping arrays. Registering a retrained artifact
+under an existing name mints the next version and becomes the default for
+new requests — in-flight requests keep the version they resolved at
+submit, so a hot-swap never changes a running simulation's results. Same-
+structure versions share compiled programs (surrogates are traced
+arguments of every network program), which is what makes version rollout
+free of recompiles.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.core.surrogate import as_surrogate
+
+
+def parse_ref(ref: str) -> tuple:
+    """``"name"`` -> (name, None); ``"name@3"`` -> (name, 3)."""
+    if "@" not in ref:
+        return ref, None
+    name, _, ver = ref.rpartition("@")
+    if not name:
+        raise ValueError(f"bad surrogate ref {ref!r}: expected "
+                         "'name' or 'name@version'")
+    try:
+        return name, int(ver)
+    except ValueError:
+        raise ValueError(f"bad surrogate ref {ref!r}: version "
+                         f"{ver!r} is not an integer") from None
+
+
+class ArtifactStore:
+    """Thread-safe ``name@version`` registry of surrogate artifacts.
+
+    Values are whatever the engine accepts as ``surrogates=``: a
+    :class:`Surrogate`, a :class:`SurrogateLibrary`, or a ``{circuit:
+    Surrogate}`` mapping (mixed graphs); single artifacts are normalized
+    through ``as_surrogate`` at registration so legacy ``PredictorBank``
+    values freeze exactly once."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._artifacts: dict = {}      # name -> {version: object}
+
+    def register(self, name: str, surrogate, *, version=None) -> int:
+        """Register ``surrogate`` under ``name``; returns its version.
+
+        Versions auto-increment from 1 per name; an explicit ``version``
+        may fill gaps but never overwrite (hot-swap means *new* version,
+        old results must stay reproducible)."""
+        if not name or "@" in name:
+            raise ValueError(f"artifact name must be non-empty and "
+                             f"'@'-free: {name!r}")
+        if not isinstance(surrogate, dict) and not hasattr(surrogate,
+                                                           "kinds"):
+            surrogate = as_surrogate(surrogate)
+        with self._lock:
+            versions = self._artifacts.setdefault(name, {})
+            if version is None:
+                version = max(versions, default=0) + 1
+            version = int(version)
+            if version in versions:
+                raise ValueError(
+                    f"{name}@{version} already registered; surrogate "
+                    "versions are immutable — register a new version")
+            versions[version] = surrogate
+        return version
+
+    def resolve(self, ref: str) -> tuple:
+        """``"name[@version]"`` -> ((name, version), surrogate).
+
+        A bare name resolves to the LATEST version at call time — the
+        hot-swap default — while the pinned identity is returned so a
+        request's records stay attributed to the exact artifact that
+        produced them."""
+        name, version = parse_ref(ref)
+        with self._lock:
+            versions = self._artifacts.get(name)
+            if not versions:
+                raise KeyError(f"no surrogate registered under {name!r}")
+            if version is None:
+                version = max(versions)
+            if version not in versions:
+                raise KeyError(f"{name}@{version} not registered "
+                               f"(have {sorted(versions)})")
+            return (name, version), versions[version]
+
+    def get(self, name: str, version=None):
+        ref = name if version is None else f"{name}@{version}"
+        return self.resolve(ref)[1]
+
+    def names(self) -> list:
+        with self._lock:
+            return sorted(self._artifacts)
+
+    def versions(self, name: str) -> list:
+        with self._lock:
+            return sorted(self._artifacts.get(name, ()))

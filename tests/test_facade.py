@@ -276,6 +276,38 @@ def test_engine_cache_keys_mesh_by_value(small_net):
         gc.collect()
 
 
+def test_engine_cache_lru_bounded(monkeypatch):
+    """The per-spec engine cache is a bounded LRU (ISSUE-8 satellite):
+    beyond ENGINE_CACHE_CAPACITY variants the least-recently-USED engine
+    is evicted — a recency hit protects an old entry — so long-lived
+    serving processes cannot accumulate compiled programs without bound."""
+    monkeypatch.setattr(lasana, "ENGINE_CACHE_CAPACITY", 2)
+    spec = snn_spec(
+        [jax.random.normal(jax.random.PRNGKey(41), (6, 5)) * 0.8,
+         jax.random.normal(jax.random.PRNGKey(42), (5, 3)) * 0.8],
+        [jnp.asarray([0.58, 0.5, 0.5, 0.5])] * 2)
+    e_std = lasana.engine(spec)
+    e_hid = lasana.engine(spec, record_hidden=False)
+    assert lasana.engine(spec) is e_std            # refresh e_std's recency
+    e_ann = lasana.engine(spec, mode="annotation")  # 3rd entry: evicts LRU
+    cache = getattr(spec, "_lasana_engine_cache")
+    assert len(cache) == 2
+    assert lasana.engine(spec) is e_std             # survived (recent)
+    assert lasana.engine(spec, mode="annotation") is e_ann
+    # e_hid was least-recently-used: evicted, a fresh request rebuilds
+    # (and that rebuild in turn evicts today's LRU, e_std)
+    rebuilt = lasana.engine(spec, record_hidden=False)
+    assert rebuilt is not e_hid
+    assert len(cache) == 2
+    assert lasana.engine(spec) is not e_std
+    # capacity is read live: raising it stops eviction immediately
+    monkeypatch.setattr(lasana, "ENGINE_CACHE_CAPACITY", 8)
+    e_fused = lasana.engine(spec, fused=False)
+    assert len(cache) >= 3
+    assert lasana.engine(spec, fused=False) is e_fused
+    assert lasana.engine(spec, record_hidden=False) is rebuilt
+
+
 def test_check_api_tool_passes():
     """The CI API guard agrees with the committed snapshot."""
     import pathlib

@@ -332,6 +332,66 @@ def test_facade_stream_generator(lif_surrogate, small_net):
     _assert_runs_identical(mono, merged, hidden=False)
 
 
+# --- generator cleanup + thread safety (ISSUE-8 satellites) -------------------
+
+def test_stream_generator_early_close_settles(lif_surrogate, small_net):
+    """Abandoning a stream mid-run (break / close / GC) settles the
+    in-flight chunk — donated device buffers are not left dangling — and
+    the SAME engine re-streams afterwards with zero recompiles and an
+    untouched record."""
+    import gc
+    spec, spikes = small_net
+    eng = NetworkEngine(spec, backend="lasana", surrogates=lif_surrogate)
+    mono = eng.run(spikes)
+    gen = eng.stream(spikes, chunk_ticks=8)
+    next(gen)
+    gen.close()                        # explicit close after one chunk
+    for rec in eng.stream(spikes, chunk_ticks=8):
+        break                          # for-loop break (implicit close)
+    dangling = eng.stream(spikes, chunk_ticks=8)
+    next(dangling)
+    del dangling                       # GC finalization path
+    gc.collect()
+    compiles = eng.compile_count
+    st = NetworkRun.merge(list(eng.stream(spikes, chunk_ticks=8)))
+    assert eng.compile_count == compiles
+    _assert_runs_identical(mono, st)
+
+
+def test_concurrent_streams_share_one_program(two_stream_surrogates,
+                                              small_net):
+    """Two threads streaming through ONE engine — different stimuli,
+    different (equal-structure) surrogates — race on first use yet
+    compile exactly one chunk program, and each thread's record is
+    bit-identical to its sequential run."""
+    import threading
+    s1, s2 = two_stream_surrogates
+    spec, spikes = small_net
+    x2 = jnp.roll(spikes, 3, axis=0)
+    eng_seq = NetworkEngine(spec, backend="lasana")
+    want = {"a": eng_seq.run_stream(spikes, chunk_ticks=8, surrogates=s1),
+            "b": eng_seq.run_stream(x2, chunk_ticks=8, surrogates=s2)}
+    eng = NetworkEngine(spec, backend="lasana")
+    got, errors = {}, []
+
+    def work(name, x, s):
+        try:
+            got[name] = eng.run_stream(x, chunk_ticks=8, surrogates=s)
+        except Exception as err:               # surface in the main thread
+            errors.append((name, err))
+
+    threads = [threading.Thread(target=work, args=("a", spikes, s1)),
+               threading.Thread(target=work, args=("b", x2, s2))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert eng.compile_count == 1              # the race compiled ONCE
+    _assert_runs_identical(want["a"], got["a"])
+    _assert_runs_identical(want["b"], got["b"])
+
+
 @pytest.fixture(scope="module")
 def two_stream_surrogates(lif_dataset):
     """Two equal-structure surrogates with different weights (mean+linear
