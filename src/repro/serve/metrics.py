@@ -23,6 +23,8 @@ class ServerMetrics:
         self.requests_submitted = 0
         self.requests_completed = 0
         self.requests_rejected = 0      # backpressure (ServerBusy)
+        self.requests_failed = 0        # per-request errors after submit
+        self.lanes_retired = 0          # idle lanes freed (or poisoned)
         self.chunks_total = 0           # lane steps executed
         self.ticks_live_total = 0       # live slot-ticks simulated
         self.events_total = 0           # input events across all tenants
@@ -50,9 +52,12 @@ class ServerMetrics:
                 "requests_submitted": self.requests_submitted,
                 "requests_completed": self.requests_completed,
                 "requests_rejected": self.requests_rejected,
+                "requests_failed": self.requests_failed,
                 "requests_in_flight": (self.requests_submitted
-                                       - self.requests_completed),
+                                       - self.requests_completed
+                                       - self.requests_failed),
                 "requests_per_sec": self.requests_completed / wall,
+                "lanes_retired": self.lanes_retired,
                 "chunks_total": self.chunks_total,
                 "ticks_live_total": self.ticks_live_total,
                 "events_total": self.events_total,

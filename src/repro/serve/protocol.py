@@ -17,13 +17,17 @@ loop serves stdin/stdout (``python -m repro.serve``), a TCP socket
    "stimulus": [[[...]]]}``
     submit one request and stream until done. Response carries the
     merged record's headline numbers (outputs, energy, events, ticks).
+    Spec names resolve from this connection's registrations first, then
+    the server-wide registry (names survive reconnects).
     ``"stimulus_spikes": {"t": T, "b": B, "rate": p, "seed": s}``
     generates a Bernoulli spike train server-side instead of shipping
     the array.
 ``{"op": "simulate_batch", "requests": [...]}``
     submit every entry (same fields as ``simulate``) BEFORE collecting
     any result — this is the op that exercises continuous batching over
-    the wire.
+    the wire. If a later submit is rejected (bad entry, ``ServerBusy``),
+    the already-submitted requests are still collected: the response is
+    ``{"ok": false, "error": msg, "results": [...partials...]}``.
 ``{"op": "stats"}`` / ``{"op": "shutdown"}``
     the ``/stats`` report; drain and stop.
 
@@ -79,6 +83,10 @@ def _summarize(run, req_id) -> dict:
 def _submit(server, req: dict, specs: dict):
     name = req.get("spec")
     spec = specs.get(name)
+    if spec is None and isinstance(name, str):
+        # fall back to the server-side registry so a reconnecting client
+        # can keep using names registered on an earlier connection
+        spec = server.spec(name)
     if spec is None:
         raise KeyError(f"no spec registered under {name!r}")
     return server.submit(
@@ -113,10 +121,17 @@ def handle_op(server, obj: dict, specs: dict):
         handle, req_id = _submit(server, obj, specs)
         return _summarize(handle.result(), req_id), True
     if op == "simulate_batch":
-        handles = [_submit(server, r, specs) for r in obj["requests"]]
-        return {"ok": True,
-                "results": [_summarize(h.result(), rid)
-                            for h, rid in handles]}, True
+        handles, error = [], None
+        for r in obj["requests"]:
+            try:
+                handles.append(_submit(server, r, specs))
+            except Exception as err:   # collect what WAS submitted — the
+                error = f"{type(err).__name__}: {err}"   # work is in
+                break                                    # flight either way
+        results = [_summarize(h.result(), rid) for h, rid in handles]
+        if error is not None:
+            return {"ok": False, "error": error, "results": results}, True
+        return {"ok": True, "results": results}, True
     if op == "stats":
         return {"ok": True, "stats": server.stats()}, True
     if op == "shutdown":

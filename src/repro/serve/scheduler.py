@@ -67,7 +67,11 @@ class RequestHandle:
     def _push(self, chunk: NetworkRun):
         self._chunks.append(chunk)
         if self._on_chunk is not None:
-            self._on_chunk(chunk)
+            try:
+                self._on_chunk(chunk)
+            except Exception as err:   # a user callback raising must fail
+                self._on_chunk = None  # ITS request, not the driver thread
+                self._fail(err)
 
     def _finish(self):
         self._result = NetworkRun.merge(self._chunks)
@@ -122,6 +126,12 @@ class Lane:
         self.width = bucket.width
         self.chunk_ticks = bucket.chunk_ticks
         self.metrics = metrics
+        # strong reference: the server's lane key embeds id(surrogates)
+        # for directly-passed artifacts, which is only stable while the
+        # object is alive — holding it here pins the id for the lane's
+        # lifetime (retirement drops key and reference together)
+        self.surrogates = surrogates
+        self.idle_rounds = 0             # rounds with no active requests
         self.programs = engine.slot_programs(self.width, self.chunk_ticks,
                                              surrogates)
         if metrics is not None and self.programs.compile_seconds:

@@ -17,6 +17,12 @@ driver thread that owns all JAX dispatch:
   * admission control: a bounded submit queue (``ServerBusy``
     backpressure), a global in-flight cap, and round-robin per-tenant
     fairness so one chatty tenant cannot starve another's queue;
+  * fault isolation + bounded device memory: a request the engine
+    rejects at lane creation (or whose ``on_chunk`` callback raises)
+    fails ITS OWN handle while the driver keeps serving everyone else,
+    and lanes idle for ``lane_idle_rounds`` rounds are retired — device
+    state is pinned by live work, not by every (bucket, surrogate
+    version, mode) the server ever saw;
   * :class:`~repro.serve.metrics.ServerMetrics` behind :meth:`stats`.
 
 Threading contract: ``submit``/``register_*``/``stats`` are safe from any
@@ -33,7 +39,7 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.network import NetworkSpec
+from repro.core.network import MODES, NetworkSpec
 from repro.serve.buckets import BucketPolicy, spec_content_key
 from repro.serve.metrics import ServerMetrics
 from repro.serve.scheduler import Lane, RequestHandle
@@ -57,6 +63,14 @@ class ServeConfig:
                     (parity tests); default off — serving unbounded
                     streams of hidden traces defeats bounded memory
     poll_seconds    driver-thread sleep when idle
+    lane_idle_rounds  scheduling rounds a lane may sit with no active
+                    requests before it is retired, freeing its
+                    device-resident carries and surrogate banks (compiled
+                    programs stay cached on the engine, so a later
+                    request for the same key re-creates the lane with
+                    zero recompiles) — without retirement every (bucket,
+                    surrogate version, mode) ever served would pin device
+                    memory forever
     """
 
     slot_widths: tuple = (4,)
@@ -65,6 +79,7 @@ class ServeConfig:
     max_queue: int = 256
     record_hidden: bool = False
     poll_seconds: float = 0.01
+    lane_idle_rounds: int = 50
 
 
 class _Queued:
@@ -120,6 +135,14 @@ class SimServer:
         key = spec_content_key(spec)
         return self._specs.setdefault(key, spec)
 
+    def spec(self, name: str):
+        """The :meth:`register_spec`-registered spec, or None.
+
+        The server-side registry outlives wire connections: a client that
+        reconnects can keep submitting against names registered earlier."""
+        with self._lock:
+            return self._spec_names.get(name)
+
     # --- submission -----------------------------------------------------------
 
     def submit(self, spec, stimulus, *, surrogates, tenant: str = "default",
@@ -159,6 +182,9 @@ class SimServer:
         if x.shape[-1] != spec.layers[0].fan_in:
             raise ValueError(f"input width {x.shape[-1]} != layer-0 "
                              f"fan_in {spec.layers[0].fan_in}")
+        if mode not in MODES:                  # engine() would reject it on
+            raise ValueError(                  # the driver thread otherwise
+                f"mode must be one of {MODES}: {mode}")
         self.policy.width_for(x.shape[1])      # reject oversize batches now
         if isinstance(surrogates, str):
             ref, sur = self.store.resolve(surrogates)
@@ -187,16 +213,29 @@ class SimServer:
     # --- scheduling -----------------------------------------------------------
 
     def _lane_for(self, q: _Queued) -> Lane:
+        """The (existing or new) lane serving one queued request.
+
+        Engine resolution and lane construction — which may AOT-compile
+        for seconds on first touch — run WITHOUT the server lock, so
+        submitters and stats readers never stall behind a compile; only
+        the lane-table lookups take the lock. The lane keeps a strong
+        reference to the surrogate object (``Lane.surrogates``), so a
+        directly-passed surrogate's ``id()`` — part of the lane key —
+        cannot be recycled onto a different object while the key is
+        live; retirement drops the key and the reference together."""
         import repro.lasana as lasana
         bucket = self.policy.bucket_for(q.spec_key, q.stimulus.shape[1])
         key = (bucket.key, q.sur_token, q.mode)
-        lane = self._lanes.get(key)
+        with self._lock:
+            lane = self._lanes.get(key)
         if lane is None:
             eng = lasana.engine(q.spec, mode=q.mode,
                                 record_hidden=self.config.record_hidden)
             lane = Lane(eng, q.spec, bucket, q.surrogates,
                         metrics=self.metrics)
-            self._lanes[key] = lane
+            lane.sur_token = q.sur_token
+            with self._lock:
+                lane = self._lanes.setdefault(key, lane)
         return lane
 
     def _admit(self) -> bool:
@@ -206,29 +245,51 @@ class SimServer:
         behind it that target OTHER lanes (classic head-of-line blocking
         would cap occupancy across a mixed-bucket workload); once a lane
         rejects, later same-tenant requests for that lane are skipped
-        too, so per-lane FIFO order within a tenant is preserved."""
+        too, so per-lane FIFO order within a tenant is preserved.
+
+        A request whose LANE CREATION fails (e.g. a directly-passed
+        surrogate the engine rejects — submit cannot validate those
+        cheaply) fails ITS OWN handle and the sweep continues: one bad
+        request must never kill the driver thread or other tenants'
+        work. The lock is dropped around :meth:`_lane_for` (first-touch
+        compiles run unlocked; admission itself is driver-thread-only,
+        other threads only append to queues)."""
         admitted = False
         with self._lock:
             tenants = list(self._queues)
-            for tenant in tenants:
-                queue = self._queues[tenant]
-                blocked: set = set()       # lanes that rejected this sweep
-                skipped: list = []
-                while queue:
-                    if self._in_flight >= self.config.max_in_flight:
+        for tenant in tenants:
+            blocked: set = set()           # lanes that rejected this sweep
+            skipped: list = []
+            while True:
+                with self._lock:
+                    queue = self._queues.get(tenant)
+                    if (not queue
+                            or self._in_flight >= self.config.max_in_flight):
                         break
                     q = queue.popleft()
+                try:
                     lane = self._lane_for(q)
-                    if (id(lane) in blocked
-                            or not lane.admit(q.handle, q.stimulus)):
-                        blocked.add(id(lane))
-                        skipped.append(q)
-                        continue
+                except Exception as err:   # per-request failure, contained
+                    self.metrics.add(requests_failed=1)
+                    q.handle._fail(err)
+                    continue
+                if (id(lane) in blocked
+                        or not lane.admit(q.handle, q.stimulus)):
+                    blocked.add(id(lane))
+                    skipped.append(q)
+                    continue
+                lane.idle_rounds = 0
+                with self._lock:
                     self._in_flight += 1
-                    admitted = True
-                queue.extendleft(reversed(skipped))
-                if not queue:
-                    del self._queues[tenant]
+                admitted = True
+            with self._lock:
+                if skipped:
+                    queue = self._queues.setdefault(tenant,
+                                                    collections.deque())
+                    queue.extendleft(reversed(skipped))
+                elif not self._queues.get(tenant):
+                    self._queues.pop(tenant, None)
+        with self._lock:
             # rotate start tenant so admission order is fair over rounds
             if self._queues:
                 first = next(iter(self._queues))
@@ -239,22 +300,50 @@ class SimServer:
         return admitted
 
     def step(self) -> bool:
-        """One scheduling round: admit, then advance every live lane.
+        """One scheduling round: admit, advance live lanes, retire idle.
 
         Returns True when any work happened — the driver loop (or an
         external caller in un-threaded mode) idles when it returns
-        False."""
+        False. A lane whose step fails mid-chunk has corrupted carries
+        for everyone seated in it: its requests fail and the lane is
+        dropped, but OTHER lanes (and the driver) keep serving. A lane
+        idle for ``lane_idle_rounds`` consecutive rounds is retired,
+        releasing its device-resident carries and banks; the engine's
+        compiled programs survive, so re-creation is compile-free."""
         worked = self._admit()
-        for lane in list(self._lanes.values()):
+        with self._lock:
+            lanes = list(self._lanes.items())
+        retired: list = []
+        for key, lane in lanes:
             if not lane.active:
+                lane.idle_rounds += 1
+                if lane.idle_rounds >= self.config.lane_idle_rounds:
+                    retired.append(key)
                 continue
-            stats = lane.step()
+            lane.idle_rounds = 0
+            try:
+                stats = lane.step()
+            except Exception as err:       # lane poisoned, server survives
+                n = len(lane.active)
+                for a in list(lane.active):
+                    a.handle._fail(err)
+                self.metrics.add(requests_failed=n)
+                with self._lock:
+                    self._in_flight -= n
+                    self._lanes.pop(key, None)
+                    self._wake.notify_all()
+                continue
             if stats:
                 worked = True
                 with self._lock:
                     self._in_flight -= stats["completed"]
                     if stats["completed"]:
                         self._wake.notify_all()
+        if retired:
+            with self._lock:
+                for key in retired:
+                    if self._lanes.pop(key, None) is not None:
+                        self.metrics.add(lanes_retired=1)
         return worked
 
     def run_until_idle(self, *, max_rounds: int = 100000) -> None:

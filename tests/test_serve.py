@@ -16,6 +16,10 @@ Acceptance properties:
     compiled slot program, compile_count == bucket count);
   * admission control: round-robin tenant fairness (no starvation),
     bounded-queue backpressure (``ServerBusy``), oversize rejection;
+  * fault isolation + lane lifecycle: per-request errors (bad mode,
+    engine-rejected surrogates, exploding on_chunk callbacks) fail only
+    their own handle; idle lanes retire (bounded lane table, surrogate
+    reference dropped with the key) and re-create compile-free;
   * store semantics (immutable versions, latest-resolve, pinned refs)
     and the JSON-lines wire protocol end to end.
 """
@@ -254,6 +258,104 @@ def test_backpressure_and_validation(lif_surrogate, shared_spec):
     assert srv.stats()["requests_rejected"] == 1
 
 
+def test_invalid_mode_rejected_synchronously(lif_surrogate, shared_spec):
+    """A bad mode raises in submit() — it must never reach the driver
+    thread, where the engine's ValueError would have killed it."""
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK))
+    with pytest.raises(ValueError, match="mode must be one of"):
+        srv.submit(shared_spec, np.zeros((4, 1, 12), np.float32),
+                   surrogates=lif_surrogate, mode="bogus")
+
+
+def test_bad_request_does_not_kill_server(lif_surrogate, shared_spec):
+    """Per-request fault isolation: a request whose lane creation the
+    engine rejects (a direct surrogate object submit cannot cheaply
+    validate) fails ITS OWN handle — no hang, no driver-thread death,
+    no collateral failures — and the started server keeps serving."""
+    rng = np.random.default_rng(11)
+    x = _stim(rng, 12, 1)
+    with lasana.serve(slot_widths=(4,), chunk_ticks=CHUNK) as srv:
+        good1 = srv.submit(shared_spec, x, surrogates=lif_surrogate,
+                           tenant="a")
+        bad = srv.submit(shared_spec, _stim(rng, 12, 1),
+                         surrogates={"not-a-kind": object()}, tenant="b")
+        good1.result(timeout=120)
+        with pytest.raises(Exception):
+            bad.result(timeout=120)          # fails, never blocks forever
+        good2 = srv.submit(shared_spec, x, surrogates=lif_surrogate,
+                           tenant="c")       # driver is still alive
+        served = good2.result(timeout=120)
+        st = srv.stats()
+    solo = lasana.simulate(shared_spec, x, surrogates=lif_surrogate,
+                           record_hidden=False)
+    _assert_request_parity(solo, served)
+    assert st["requests_failed"] == 1
+    assert st["requests_in_flight"] == 0     # failed request not leaked
+
+
+def test_on_chunk_error_fails_only_that_request(lif_surrogate,
+                                                shared_spec):
+    """A user on_chunk callback raising fails its request, not the
+    driver thread or its co-batched neighbours."""
+    rng = np.random.default_rng(14)
+    x = _stim(rng, 12, 1)
+
+    def boom(rec):
+        raise RuntimeError("chunk consumer exploded")
+
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK))
+    h_bad = srv.submit(shared_spec, _stim(rng, 12, 1),
+                       surrogates=lif_surrogate, on_chunk=boom)
+    h_good = srv.submit(shared_spec, x, surrogates=lif_surrogate)
+    srv.run_until_idle()
+    with pytest.raises(RuntimeError, match="chunk consumer exploded"):
+        h_bad.result()
+    solo = lasana.simulate(shared_spec, x, surrogates=lif_surrogate,
+                           record_hidden=False)
+    _assert_request_parity(solo, h_good.result())
+
+
+def test_idle_lane_retirement_and_surrogate_liveness(lif_surrogate,
+                                                     shared_spec):
+    """Review fixes, both lane-lifecycle halves: (1) the lane holds the
+    directly-passed surrogate alive, so the id()-keyed lane identity
+    cannot silently alias a new object at a recycled address; (2) lanes
+    idle for lane_idle_rounds rounds are retired — dropping key and
+    reference together, bounding the lane table — and re-creation is
+    compile-free because the engine keeps its compiled programs."""
+    import copy
+    import gc
+    import weakref
+    rng = np.random.default_rng(12)
+    x = _stim(rng, CHUNK, 1)
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK,
+                                lane_idle_rounds=3))
+    dup = copy.copy(lif_surrogate)
+    wr = weakref.ref(dup)
+    h = srv.submit(shared_spec, x, surrogates=dup)
+    del dup
+    srv.run_until_idle()
+    h.result()
+    gc.collect()
+    assert wr() is not None                  # lane pins the surrogate
+    assert srv.stats()["n_lanes"] == 1
+    # solo reference now: its mono program lands on the shared engine
+    # BEFORE the compile-count snapshot the retirement path must hold
+    solo = lasana.simulate(shared_spec, x, surrogates=lif_surrogate,
+                           record_hidden=False)
+    compiles = srv.compile_count()
+    for _ in range(3):                       # idle rounds -> retirement
+        assert not srv.step()
+    gc.collect()
+    assert wr() is None                      # key + reference both gone
+    st = srv.stats()
+    assert st["n_lanes"] == 0 and st["lanes_retired"] == 1
+    h2 = srv.submit(shared_spec, x, surrogates=lif_surrogate)
+    srv.run_until_idle()
+    _assert_request_parity(solo, h2.result())
+    assert srv.compile_count() == compiles   # re-created, zero recompiles
+
+
 def test_lifecycle_guards(shared_spec):
     srv = SimServer()
     srv.start()
@@ -379,3 +481,38 @@ def test_protocol_stdio_roundtrip(lif_surrogate):
     assert resps[3]["id"] == "bad" and "no spec" in resps[3]["error"]
     st = resps[4]["stats"]
     assert st["requests_completed"] == 4 and st["compile_count"] >= 1
+
+
+def test_protocol_spec_registry_survives_reconnect(lif_surrogate):
+    """Review fixes on the wire path: (1) spec names registered on one
+    connection resolve on the next — _submit falls back to the server-
+    side registry; (2) a simulate_batch that fails partway still
+    collects the already-submitted requests' results."""
+    rng = np.random.default_rng(13)
+    w = rng.normal(0, 0.8, (6, 3)).astype(np.float32)
+    conn1 = [{"op": "register_spec", "name": "net",
+              "snn": {"weights": [w.tolist()], "params": [PARAMS]}}]
+    conn2 = [
+        {"op": "simulate", "id": "r", "spec": "net", "surrogate": "lif",
+         "stimulus_spikes": {"t": 8, "b": 1, "seed": 3}},
+        {"op": "simulate_batch", "requests": [
+            {"id": "ok", "spec": "net", "surrogate": "lif",
+             "stimulus_spikes": {"t": 8, "b": 1, "seed": 4}},
+            {"id": "bad", "spec": "ghost", "surrogate": "lif",
+             "stimulus_spikes": {"t": 8, "b": 1}}]},
+    ]
+    feed = lambda ops: io.StringIO(
+        "\n".join(json.dumps(o) for o in ops) + "\n")
+    out1, out2 = io.StringIO(), io.StringIO()
+    with lasana.serve(slot_widths=(4,), chunk_ticks=CHUNK) as srv:
+        srv.register_surrogate("lif", lif_surrogate)
+        run_stdio(srv, feed(conn1), out1)    # first "connection"
+        run_stdio(srv, feed(conn2), out2)    # reconnect: fresh specs dict
+    r1 = [json.loads(l) for l in out1.getvalue().splitlines()]
+    r2 = [json.loads(l) for l in out2.getvalue().splitlines()]
+    assert r1[0]["ok"]
+    assert r2[0]["ok"] and r2[0]["ticks"] == 8        # registry fallback
+    batch = r2[1]
+    assert not batch["ok"] and "ghost" in batch["error"]
+    assert [r["id"] for r in batch["results"]] == ["ok"]  # partials kept
+    assert batch["results"][0]["ticks"] == 8
