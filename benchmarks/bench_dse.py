@@ -25,7 +25,6 @@ hard-fail the CI smoke leg via SystemExit with the record attached.
 
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
@@ -56,7 +55,8 @@ def _light_surrogate(seed=0):
 def run(full: bool = False) -> dict:
     from repro.core.explore import CandidateSpec, DSEEngine
 
-    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    from repro.kernels import ops
+    smoke = ops.bench_smoke()
     n_cand = N_CANDIDATES_FULL if full else N_CANDIDATES
     n_loop = LOOP_SUBSET_SMOKE if smoke else LOOP_SUBSET
 

@@ -34,7 +34,6 @@ enforces the >= 1.0x floor + record parity for CI.
 
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
@@ -236,7 +235,8 @@ def run(full: bool = False):
     import repro.lasana as lasana
     from repro.core.network import snn_spec
 
-    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    from repro.kernels import ops
+    smoke = ops.bench_smoke()
 
     # --- ISSUE-5 fused-vs-unfused A/B (the CI smoke contract) ------------
     ab = run_fused_ab(full, smoke)

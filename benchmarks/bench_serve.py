@@ -29,7 +29,6 @@ attached.
 
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
@@ -101,7 +100,8 @@ def _check_parity(solo, served) -> bool:
 def run(full: bool = False) -> dict:
     import repro.lasana as lasana
 
-    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    from repro.kernels import ops
+    smoke = ops.bench_smoke()
     n_req = N_REQUESTS_SMOKE if smoke else N_REQUESTS
     chunk = CHUNK_SMOKE if smoke else CHUNK
     t_choices = T_CHOICES_SMOKE if smoke else T_CHOICES

@@ -25,7 +25,6 @@ watermark).
 from __future__ import annotations
 
 import itertools
-import os
 import threading
 import time
 
@@ -103,8 +102,8 @@ def _stimulus_blocks(t_steps: int, block: int = BLOCK):
 def run(full: bool = False):
     import repro.lasana as lasana
 
-    t_steps = T_STEPS_SMOKE if os.environ.get("REPRO_BENCH_SMOKE") \
-        else T_STEPS
+    from repro.kernels import ops
+    t_steps = T_STEPS_SMOKE if ops.bench_smoke() else T_STEPS
     spec = _make_spec()
     fams = ("mean", "linear")
     banks = {"lif": surrogate("lif", full, families=fams),

@@ -17,7 +17,9 @@ import time
 
 import numpy as np
 
-RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/benchmarks")
+from repro.kernels import ops
+
+RESULTS_DIR = ops.bench_results_dir()
 
 # default scale (CPU container); --full switches to paper scale
 SCALE = {

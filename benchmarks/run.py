@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import time
 
@@ -146,12 +145,14 @@ def main() -> None:
 
     if args.json:
         import jax
+
+        from repro.kernels import ops
         payload = {
             "schema": 1,
             "generated_by": "benchmarks.run",
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
             "full": bool(args.full),
-            "smoke": bool(os.environ.get("REPRO_BENCH_SMOKE")),
+            "smoke": ops.bench_smoke(),
             "jax": jax.__version__,
             "backend": jax.default_backend(),
             "suites_run": only,

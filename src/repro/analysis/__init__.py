@@ -1,0 +1,45 @@
+"""Static analysis gates for the LASANA hot paths (docs/analysis.md).
+
+Two passes, both CI legs (``tools/check_programs.py`` /
+``tools/check_threads.py``):
+
+``jaxpr_audit``
+    traces every hot-path entrypoint registered with
+    ``kernels.ops.register_entrypoint`` and verifies the program-level
+    invariants the benchmarks otherwise only observe at runtime:
+    per-tick dispatch budgets (fused <= 3 stacked dispatches, megakernel
+    == 1), dot/scan counts frozen in ``tests/data/program_budgets.json``,
+    donation discipline (every ``donate_argnums`` leaf actually aliased,
+    none silently dropped), no fp64 promotion or host-callback primitives
+    in traced bodies, cache-key completeness for every program/engine
+    cache (including the ``id(...)``-in-a-cache-key AST ban), and the
+    environment-read discipline (``kernels/ops.py`` is the only module
+    reading ``REPRO_*`` configuration).
+
+``thread_lint``
+    an AST lint of the threaded serve subsystem driven by per-class
+    locking-discipline tables: guarded-state access outside ``with
+    self._lock``, blocking work (compiles, ``block_until_ready``) or user
+    callbacks (``on_chunk``) invoked while holding the lock, and
+    driver-thread-only state touched from foreign methods.
+"""
+
+from repro.analysis.jaxpr_audit import (Finding, ProgramMetrics,
+                                        audit_entry, collect_budgets,
+                                        run_audit, synthetic_surrogate)
+from repro.analysis.thread_lint import (ClassDiscipline, LINT_TABLE,
+                                        lint_file, lint_source, run_lint)
+
+__all__ = [
+    "ClassDiscipline",
+    "Finding",
+    "LINT_TABLE",
+    "ProgramMetrics",
+    "audit_entry",
+    "collect_budgets",
+    "lint_file",
+    "lint_source",
+    "run_audit",
+    "run_lint",
+    "synthetic_surrogate",
+]

@@ -428,21 +428,35 @@ class NetworkRun:
         produced it, so mixed-graph energy breakdowns stay attributable."""
         t_steps, n_layers = self.energy.shape
         circuits = self.circuits or ("?",) * n_layers
+        # ONE host transfer for every reduction below (fields may still be
+        # device arrays), then vectorized per-layer aggregation — report()
+        # on a fresh run must not issue 5 blocking fetches per layer
+        energy, latency, events, flush_energy, n_circuits = (
+            np.asarray(a) for a in jax.device_get(
+                (self.energy, self.latency, self.events,
+                 self.flush_energy, self.n_circuits)))
+        e_layer = energy.sum(axis=0) + flush_energy             # (L,)
+        ev_layer = events.sum(axis=0)                           # (L,)
+        max_lat = latency.max(axis=0, initial=0.0)              # (L,)
+        # a zero-tick run (T=0: e.g. a drained stream's empty tail chunk)
+        # has no ticks to average over — report 0.0, not NaN + a numpy
+        # RuntimeWarning from mean() on the empty slice
+        mean_lat = (latency.mean(axis=0) if t_steps
+                    else np.zeros(n_layers, np.float64))
         layers = []
         for i in range(n_layers):
             layers.append({
                 "layer": i,
                 "circuit": circuits[i],
                 "backend": self.backend,
-                "n_circuits": int(self.n_circuits[i]),
-                "energy_j": float(self.energy[:, i].sum()
-                                  + self.flush_energy[i]),
-                "flush_energy_j": float(self.flush_energy[i]),
-                "events": int(self.events[:, i].sum()),
-                "max_latency_ns": float(self.latency[:, i].max(initial=0.0)),
-                "mean_tick_latency_ns": float(self.latency[:, i].mean()),
+                "n_circuits": int(n_circuits[i]),
+                "energy_j": float(e_layer[i]),
+                "flush_energy_j": float(flush_energy[i]),
+                "events": int(ev_layer[i]),
+                "max_latency_ns": float(max_lat[i]),
+                "mean_tick_latency_ns": float(mean_lat[i]),
             })
-        total_events = int(self.events.sum())
+        total_events = int(ev_layer.sum()) if n_layers else 0
         by_kind: dict = {}
         for l in layers:
             agg = by_kind.setdefault(l["circuit"],

@@ -368,6 +368,8 @@ class Surrogate:
         ``feats`` are raw ``(x, v, tau, params[, o_prev, o_new])`` rows;
         the circuit's derived interface features are appended here. Pure in
         the pytree leaves — traceable with ``self`` as a jit argument."""
+        from repro.kernels import ops
+        ops.record_dispatch("predict")
         feats = _augment(self.manifest.circuit, jnp.asarray(feats))
         y = FAMILY_PREDICT[self.manifest.family_of(pname)](
             self.params[pname], feats)
@@ -418,6 +420,8 @@ class Surrogate:
         Returns ``{variant: {pname: (N,) predictions}}`` in physical
         units.
         """
+        from repro.kernels import ops
+        ops.record_dispatch("predict_heads")
         mats = {"idle": feats_idle, "act": feats_act, "tr": feats_tr}
         mats = {v: jnp.asarray(m) for v, m in mats.items() if m is not None}
         if not mats:

@@ -12,6 +12,7 @@ block size.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -59,6 +60,101 @@ def tick_pallas_enabled(override: bool | None = None) -> bool:
     if env is not None:
         return env == "1"
     return not _interpret_default()
+
+
+def bench_smoke() -> bool:
+    """The ``REPRO_BENCH_SMOKE`` knob: CI-scale benchmark inputs.
+
+    Benchmarks resolve smoke mode through this accessor (never the raw
+    environment) so the program auditor's environment-discipline pass can
+    verify ``ops`` is the only module reading configuration state."""
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+
+def bench_results_dir(default: str = "results/benchmarks") -> str:
+    """Where benchmark CSV/JSON artifacts land (``REPRO_BENCH_DIR``)."""
+    return os.environ.get("REPRO_BENCH_DIR", default)
+
+
+def engine_cache_capacity(default: int = 8) -> int:
+    """Per-spec engine-LRU capacity (``REPRO_ENGINE_CACHE``).
+
+    ``default`` is the caller's compiled-in capacity
+    (``lasana.ENGINE_CACHE_CAPACITY``, which tests monkeypatch); the env
+    var lets a deployment retune a running server without code changes.
+    """
+    env = os.environ.get("REPRO_ENGINE_CACHE")
+    return int(env) if env else int(default)
+
+
+def moe_capacity_factor(default: float) -> float:
+    """Expert capacity-factor override (``REPRO_MOE_CF``); ``default`` is
+    the model config's compiled-in factor."""
+    return float(os.environ.get("REPRO_MOE_CF", default))
+
+
+def microbatches_override():
+    """``REPRO_MICROBATCHES`` as an int, or None when unset/empty."""
+    env = os.environ.get("REPRO_MICROBATCHES")
+    return int(env) if env else None
+
+
+# --- trace-time dispatch accounting (the program auditor's hook) --------------
+#
+# Hot-path inference entrypoints (Surrogate.predict / predict_heads, the
+# whole-tick megakernel) report each surrogate dispatch here AT TRACE TIME.
+# Scan bodies trace exactly once, so the count observed while tracing a
+# tick program is its per-tick dispatch count — the quantity the frozen
+# budgets in tests/data/program_budgets.json gate (fused <= 3 stacked
+# dispatches, megakernel == 1; see docs/analysis.md). Outside an active
+# scope (the production path) record_dispatch is a no-op attribute check.
+
+_DISPATCH_SCOPE = None
+
+
+def record_dispatch(name: str) -> None:
+    """Report one surrogate dispatch (trace-time; no-op outside audits)."""
+    if _DISPATCH_SCOPE is not None:
+        _DISPATCH_SCOPE.append(name)
+
+
+@contextlib.contextmanager
+def dispatch_scope():
+    """Collect ``record_dispatch`` names emitted while tracing under it.
+
+    Yields the (live) list of dispatch names; scopes nest by save/restore
+    so an audit inside an audit never double-counts."""
+    global _DISPATCH_SCOPE
+    prev, log = _DISPATCH_SCOPE, []
+    _DISPATCH_SCOPE = log
+    try:
+        yield log
+    finally:
+        _DISPATCH_SCOPE = prev
+
+
+# --- hot-path entrypoint registry ---------------------------------------------
+#
+# The program auditor (repro.analysis.jaxpr_audit) traces every registered
+# entrypoint and checks its dispatch/dot budgets, donation discipline, and
+# dtype/callback hygiene. The registry lives here — ops is the leaf module
+# every hot path already imports — so registration can never cycle; the
+# audit module registers the builders at ITS import time.
+
+_ENTRYPOINTS: dict = {}
+
+
+def register_entrypoint(name: str):
+    """Decorator: register an audit entrypoint builder under ``name``."""
+    def deco(builder):
+        _ENTRYPOINTS[name] = builder
+        return builder
+    return deco
+
+
+def registered_entrypoints() -> dict:
+    """Name -> builder snapshot of the audit entrypoint registry."""
+    return dict(_ENTRYPOINTS)
 
 
 def _pad_to(x, n, axis, value=0.0):

@@ -378,6 +378,7 @@ def megakernel_step(pack, circuit, state, changed, x, t, clock_ns, *,
     additionally wraps the whole tick in ``lax.cond(any(changed))`` —
     exact, because every record and state write-back is masked by
     ``changed`` in ``_finish_tick``."""
+    ops.record_dispatch("megakernel_step")
     if pallas is None:
         pallas = ops.tick_pallas_enabled()
     annotate = known_out is not None

@@ -150,7 +150,8 @@ _ENGINE_ATTR = "_lasana_engine_cache"
 _ENGINE_LOCK = threading.Lock()
 
 # engine-variant entries kept per live spec; read at call time so tests
-# (and unusual deployments) can tune it via monkeypatching
+# can tune it via monkeypatching, and resolved through
+# ops.engine_cache_capacity so REPRO_ENGINE_CACHE can retune a deployment
 ENGINE_CACHE_CAPACITY = 8
 
 
@@ -199,7 +200,9 @@ def engine(spec: NetworkSpec, *, backend: str = "lasana",
             cache[key] = eng
         else:
             cache.move_to_end(key)
-        while len(cache) > max(int(ENGINE_CACHE_CAPACITY), 1):
+        from repro.kernels import ops
+        capacity = ops.engine_cache_capacity(ENGINE_CACHE_CAPACITY)
+        while len(cache) > max(int(capacity), 1):
             cache.popitem(last=False)
     return eng
 

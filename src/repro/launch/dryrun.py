@@ -41,10 +41,11 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     """Build the jitted step for one cell and lower it. Returns (lowered, meta)."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    mb_override = os.environ.get("REPRO_MICROBATCHES")
+    from repro.kernels import ops
+    mb_override = ops.microbatches_override()
     if mb_override and shape.kind == "train":
         import dataclasses as _dc
-        shape = _dc.replace(shape, num_microbatches=int(mb_override))
+        shape = _dc.replace(shape, num_microbatches=mb_override)
     mesh = make_production_mesh(multi_pod=multi_pod)
     rules = train_rules(mesh, **(rule_opts or {}))
     model = Model(cfg, mesh=mesh, rules=rules)

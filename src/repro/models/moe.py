@@ -17,13 +17,13 @@ exactly expert parallelism (the reshard is XLA's all-to-all).
 from __future__ import annotations
 
 import math
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models.params import ParamSpec
 
 
@@ -50,7 +50,7 @@ def moe_specs(cfg: ModelConfig) -> dict:
 
 def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
     m = cfg.moe
-    cf = float(os.environ.get("REPRO_MOE_CF", m.capacity_factor))
+    cf = ops.moe_capacity_factor(m.capacity_factor)
     c = math.ceil(tokens_per_group * m.top_k * cf / m.n_experts)
     return max(8, -(-c // 8) * 8)     # round up to a multiple of 8
 

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""CI gate: trace-time program audit of every registered hot-path
+entrypoint (see repro/analysis/jaxpr_audit.py and docs/analysis.md).
+
+Checks, against tests/data/program_budgets.json and the hard-coded
+architectural ceilings:
+
+  * per-tick dispatch budgets (fused <= 3, annotation/megakernel == 1)
+  * dot_general / scan / pallas_call counts per traced program
+  * donation discipline (every donate_argnums leaf actually aliased)
+  * no fp64 promotion / host-callback primitives in traced bodies
+  * cache-key completeness + the id()-in-a-cache-key ban
+  * environment-read discipline (kernels/ops.py is the only reader)
+
+Exit 0 when the repo is clean; exit 1 with one line per finding, each
+naming the entrypoint/cache/file. Intentional program changes:
+
+    PYTHONPATH=src python tools/check_programs.py --regen
+
+then review the program_budgets.json diff like any frozen surface
+(tests/data/api_surface.txt has the same workflow). Ceilings are not
+regenerable — a program exceeding them must be fixed, not re-frozen.
+"""
+
+import argparse
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--regen", action="store_true",
+        help="re-freeze tests/data/program_budgets.json from the "
+             "current programs (ceilings still apply)")
+    args = parser.parse_args()
+
+    from repro.analysis import jaxpr_audit
+
+    if args.regen:
+        rows = jaxpr_audit.collect_budgets()
+        jaxpr_audit.save_budgets(rows)
+        print(f"re-froze {len(rows)} entrypoint budgets -> "
+              f"{jaxpr_audit.BUDGETS_PATH.relative_to(ROOT)}")
+        # even a regen must respect the architectural ceilings and the
+        # non-budget checks — re-run the full audit against the fresh file
+        findings = jaxpr_audit.run_audit(jaxpr_audit.load_budgets())
+    else:
+        findings = jaxpr_audit.run_audit(jaxpr_audit.load_budgets())
+
+    if findings:
+        print(f"program audit: {len(findings)} finding(s)",
+              file=sys.stderr)
+        for f in findings:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("program audit: clean "
+          f"({len(jaxpr_audit.load_budgets())} entrypoints)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+#!/usr/bin/env python
+"""CI gate: AST concurrency lint of the threaded serve subsystem
+(see repro/analysis/thread_lint.py and docs/analysis.md).
+
+Every field of SimServer / Lane / ArtifactStore is annotated in
+thread_lint.LINT_TABLE as lock-guarded, driver-thread-only, immutable-
+after-init, lifecycle-only, or internally-synchronized; the lint flags
+guarded state touched outside ``with self._lock``, blocking work
+(compiles, device syncs, lane construction) or user callbacks
+(``on_chunk``) invoked while holding the lock, driver-owned state
+touched from foreign threads, and any *unannotated* field (the table
+must stay complete — adding a field without classifying its locking
+discipline is itself a finding).
+
+Exit 0 when clean; exit 1 with one line per finding, each naming
+file:Class.method and the offending field/call.
+"""
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def main() -> int:
+    from repro.analysis import thread_lint
+
+    findings = thread_lint.run_lint(root=ROOT)
+    if findings:
+        print(f"thread lint: {len(findings)} finding(s)", file=sys.stderr)
+        for f in findings:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    n_classes = sum(len(c) for c in thread_lint.LINT_TABLE.values())
+    print(f"thread lint: clean ({n_classes} annotated classes, "
+          f"{len(thread_lint.LINT_TABLE)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
