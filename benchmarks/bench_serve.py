@@ -21,6 +21,11 @@ parity against solo runs (acceptance: bitwise on discrete records,
 rtol 1e-5 on f32 energy/latency reductions plus a one-ULP absolute
 epsilon on latency maxes — always enforced).
 
+A fault-arm smoke then replays a slice of the workload through a
+retry-enabled server while a seeded ``FaultPlan`` injects lane-step
+crashes and NaN bursts at rate (ISSUE-10): every request must still
+complete with the same record parity and zero leaked in-flight work.
+
 ``REPRO_BENCH_SMOKE=1`` shrinks to 64 requests / 32-tick chunks and
 relaxes the speedup floor to parity (CI containers are noisy); the
 correctness gates hard-fail either way via SystemExit with the record
@@ -155,6 +160,42 @@ def run(full: bool = False) -> dict:
     serial_s = time.time() - t0
     speedup = serial_s / served_s
 
+    # fault-arm smoke: replay a slice of the workload through a server
+    # with retries enabled while a seeded plan injects lane-step crashes
+    # and NaN bursts at rate (bounded by max_fires). Acceptance: every
+    # request still completes with full record parity and nothing leaks
+    # in flight — recovery is a correctness gate, not a perf number.
+    # Degradation is disabled here: a behavioral fallback is correct
+    # service behavior but would (by design) break the energy parity
+    # oracle this bench enforces.
+    from repro.resilience import FaultPlan, faults
+    n_fault = min(32, n_req)
+    # explicit early ordinals guarantee fires even at smoke scale (a
+    # rate-only plan can roll zero hits over a few dozen lane steps and
+    # silently turn this arm into a no-op); the rate rides on top
+    plan = FaultPlan(seed=42, sites={
+        "lane.step": {"at": [1, 4], "rate": 0.05, "max_fires": 4},
+        "surrogate.nan": {"at": [2], "rate": 0.03, "max_fires": 3},
+    })
+    fsrv = lasana.serve(slot_widths=widths, chunk_ticks=chunk,
+                        max_in_flight=256, max_queue=1024,
+                        max_retries=6, retry_backoff_ms=2.0,
+                        degrade_after=None)
+    fsrv.register_surrogate("lif", s1)
+    fsrv.register_surrogate("lif", s2)      # same v1/v2 ladder as above
+    t0 = time.time()
+    with faults.use_plan(plan):
+        fhandles = [fsrv.submit(specs[j["spec"]], j["x"],
+                                surrogates=j["surrogate"],
+                                tenant=j["tenant"])
+                    for j in jobs[:n_fault]]
+        fresults = [h.result(timeout=RESULT_TIMEOUT) for h in fhandles]
+    fault_s = time.time() - t0
+    fstats = fsrv.stats()
+    fsrv.close()
+    fault_mismatches = [i for i in range(n_fault)
+                        if not _check_parity(solos[i], fresults[i])]
+
     record = {
         "n_requests": n_req,
         "n_buckets": n_buckets,
@@ -174,6 +215,15 @@ def run(full: bool = False) -> dict:
         "chunks_total": stats["chunks_total"],
         "events_per_sec": stats["events_per_sec"],
         "parity_mismatches": len(mismatches),
+        "fault_arm": {
+            "n_requests": n_fault,
+            "seconds": fault_s,
+            "requests_retried": fstats["requests_retried"],
+            "numerical_faults": fstats["numerical_faults"],
+            "lane_hangs": fstats["lane_hangs"],
+            "faults_injected": {s: plan.fired[s] for s in sorted(plan.sites)},
+            "parity_mismatches": len(fault_mismatches),
+        },
     }
     emit("serve_served", served_s / n_req * 1e6,
          f"requests_per_sec={n_req / served_s:.1f}")
@@ -182,6 +232,10 @@ def run(full: bool = False) -> dict:
     emit("serve_speedup", 0.0, f"x{speedup:.2f}")
     emit("serve_compile_count", 0.0, f"{compile_count}/{n_buckets}")
     emit("serve_occupancy", 0.0, f"{stats['batch_occupancy']:.2f}")
+    emit("serve_fault_arm", fault_s / n_fault * 1e6,
+         f"injected={sum(plan.fired.values())} "
+         f"retried={fstats['requests_retried']} parity_ok="
+         f"{len(fault_mismatches) == 0}")
     save_json("serve", record)
 
     # acceptance gates — parity and program discipline are correctness,
@@ -204,6 +258,29 @@ def run(full: bool = False) -> dict:
         err = SystemExit(
             f"a request waited {stats['wait_chunks_max']} scheduler "
             f"rounds (> {n_req}): tenant round-robin is starving")
+        err.bench_record = record
+        raise err
+    if fault_mismatches:
+        err = SystemExit(
+            f"fault-arm parity broke for {len(fault_mismatches)}/"
+            f"{n_fault} requests (indices {fault_mismatches[:8]}): a "
+            "retried/quarantined request must replay to the same record "
+            "as a clean solo run")
+        err.bench_record = record
+        raise err
+    if sum(plan.fired.values()) < 3:
+        err = SystemExit(
+            f"fault arm injected only {sum(plan.fired.values())} faults "
+            "(expected >= 3 from the explicit ordinals): the recovery "
+            "path was not actually exercised")
+        err.bench_record = record
+        raise err
+    if fstats["requests_in_flight"] != 0 or fstats["requests_failed"] != 0:
+        err = SystemExit(
+            f"fault arm leaked work: in_flight="
+            f"{fstats['requests_in_flight']}, failed="
+            f"{fstats['requests_failed']} after every request was "
+            "collected — recovery must drain cleanly")
         err.bench_record = record
         raise err
     floor = MIN_SPEEDUP_SMOKE if smoke else MIN_SPEEDUP

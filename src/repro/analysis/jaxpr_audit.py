@@ -413,6 +413,29 @@ def _entry_slot_flush(ctx: AuditContext) -> TracedEntry:
                        max_dispatch={"predict": L, "predict_heads": 0})
 
 
+@ops.register_entrypoint("serve_slot_step_behavioral")
+def _entry_slot_step_behavioral(ctx: AuditContext) -> TracedEntry:
+    """Graceful-degradation slot chunk: the behavioral-backend lane the
+    server falls back to after repeated surrogate faults. No surrogate
+    banks — zero predict dispatches is the ceiling AND the point."""
+    from repro.core.network import NetworkEngine
+    eng = NetworkEngine(ctx.spec, backend="behavioral",
+                        record_hidden=False)
+    banks = eng._runtime_banks(None)
+    carries = [eng._init_carry(i, ctx.b)
+               for i in range(ctx.spec.n_layers)]
+    prev0 = [jnp.zeros((ctx.b, l.n_out), jnp.float32)
+             for l in ctx.spec.layers]
+    x_seq = jnp.zeros((ctx.chunk, ctx.b, ctx.spec.layers[0].fan_in),
+                      jnp.float32)
+    end_ks = jnp.zeros((ctx.b,), jnp.float32)
+    return TracedEntry(fn=eng._build_slot_step(ctx.b, banks),
+                       args=(x_seq, jnp.float32(0.0), end_ks, carries,
+                             prev0, banks),
+                       donate=(3, 4, 5),
+                       max_dispatch={"predict_heads": 0, "predict": 0})
+
+
 @ops.register_entrypoint("serve_slot_join")
 def _entry_slot_join(ctx: AuditContext) -> TracedEntry:
     """Masked slot (re)initialization at a chunk boundary (Lane.admit)."""
@@ -501,7 +524,10 @@ def pinned_env():
     reproducible regardless of the caller's environment (the megakernel
     entrypoint opts in explicitly via ``fused_kernel=True``)."""
     pins = {"REPRO_FUSED_KERNEL": "0", "REPRO_TICK_PALLAS": "0",
-            "REPRO_PALLAS_INTERPRET": "1"}
+            "REPRO_PALLAS_INTERPRET": "1",
+            # fault injection must never perturb traced programs or
+            # their budgets ("" reads as no plan via fault_plan_path)
+            "REPRO_FAULT_PLAN": ""}
     saved = {k: os.environ.get(k) for k in pins}
     os.environ.update(pins)
     try:
@@ -602,7 +628,7 @@ CACHE_KEY_REGISTRY = (
         required=("c", "n_samples", "structure_key")),
     CacheKeySpec(
         "serve-lane-table", "repro.serve.server", "SimServer._lane_for",
-        required=("bucket", "sur_token", "mode")),
+        required=("bucket", "sur_token", "mode", "degraded")),
 )
 
 

@@ -47,6 +47,7 @@ from repro.analysis.jaxpr_audit import Finding, REPO_ROOT
 BLOCKING_CALLS = frozenset({
     "compile", "lower", "block_until_ready", "device_get",
     "slot_programs", "sleep", "join", "result", "_push", "wait",
+    "load_artifact", "stall",
 })
 # Constructing a Lane compiles its engine programs — same ban.
 BLOCKING_CONSTRUCTORS = frozenset({"Lane"})
@@ -83,13 +84,22 @@ LINT_TABLE = {
             lock="_lock",
             lock_aliases=frozenset({"_wake"}),
             locked=frozenset({"_queues", "_specs", "_spec_names",
-                              "_lanes", "_in_flight", "_next_id"}),
-            init=frozenset({"config", "policy", "store", "metrics"}),
+                              "_lanes", "_in_flight", "_next_id",
+                              "_fault_counts", "_degraded", "_hung"}),
+            init=frozenset({"config", "policy", "store", "metrics",
+                            "_watchdog"}),
             control=frozenset({"_thread"}),
             safe=frozenset({"_stop", "_closed"}),
+            # _stepping_lane: driver stores the key around each lane.step;
+            # the watchdog timer thread's racy read is tolerated by design
+            # (worst case it misses one borderline hang, never fingers a
+            # wrong lane — the key is popped + re-checked under the lock)
+            driver=frozenset({"_step_count"}),
+            driver_write=frozenset({"_stepping_lane"}),
             driver_methods=frozenset({"_lane_for", "_admit", "step",
                                       "run_until_idle", "_drive",
-                                      "_fail_all"}),
+                                      "_fail_all", "_requeue",
+                                      "_note_fault"}),
             control_methods=frozenset({"start", "close",
                                        "run_until_idle"}),
             lock_held_methods=frozenset({"_canonical"}),
@@ -100,11 +110,15 @@ LINT_TABLE = {
             lock="_lock",
             init=frozenset({"engine", "spec", "bucket", "width",
                             "chunk_ticks", "metrics", "surrogates",
-                            "programs", "_clocks", "_last_lif"}),
+                            "programs", "_clocks", "_last_lif",
+                            "degraded"}),
             driver=frozenset({"_banks", "_carries", "_prev", "_end_ks"}),
             driver_write=frozenset({"g", "free", "active", "idle_rounds",
                                     "sur_token"}),
-            driver_methods=frozenset({"admit", "step", "_slice"}),
+            safe=frozenset({"_poison"}),   # threading.Event: watchdog
+                                           # timer thread sets, driver reads
+            driver_methods=frozenset({"admit", "step", "_slice",
+                                      "_quarantine"}),
         ),
     },
     "src/repro/serve/store.py": {

@@ -351,7 +351,7 @@ def _row_segments(w, seg_width: int):
                           axis=1).astype(np.float32)
 
 
-def _iter_chunks(stimulus, chunk_ticks, fan_in: int):
+def _iter_chunks(stimulus, chunk_ticks, fan_in: int, skip_ticks: int = 0):
     """Yield (t_i, B, fan_in) stimulus chunks for the streaming path.
 
     ``stimulus`` is either one (T, B, fan_in) array — sliced into
@@ -359,7 +359,10 @@ def _iter_chunks(stimulus, chunk_ticks, fan_in: int):
     on device when it lives in host memory — or an iterator of
     (t_i, B, fan_in) blocks, re-buffered to ``chunk_ticks`` ticks when a
     chunk size is given (the last chunk may be short). 2-D (B, fan_in)
-    blocks promote to one tick."""
+    blocks promote to one tick. ``skip_ticks`` drops the leading ticks
+    before chunking (checkpoint resume: the caller re-supplies the FULL
+    original stimulus and the consumed prefix is skipped here, so the
+    tail re-chunks exactly as the uninterrupted run would have)."""
     if chunk_ticks is not None and chunk_ticks <= 0:
         raise ValueError(f"chunk_ticks must be positive: {chunk_ticks}")
 
@@ -374,8 +377,9 @@ def _iter_chunks(stimulus, chunk_ticks, fan_in: int):
                              f"fan_in {fan_in}")
         return blk
 
+    skip = int(skip_ticks)
     if hasattr(stimulus, "ndim"):              # one whole array
-        x = check(stimulus)
+        x = check(stimulus)[skip:]
         step = int(chunk_ticks) if chunk_ticks else x.shape[0]
         for a in range(0, x.shape[0], step):
             yield x[a:a + step]
@@ -383,6 +387,12 @@ def _iter_chunks(stimulus, chunk_ticks, fan_in: int):
     parts, have = [], 0                        # iterator of blocks
     for block in stimulus:
         blk = check(np.asarray(block, np.float32))
+        if skip:                               # resume: drop consumed prefix
+            if blk.shape[0] <= skip:
+                skip -= blk.shape[0]
+                continue
+            blk = blk[skip:]
+            skip = 0
         if chunk_ticks is None:
             yield blk
             continue
@@ -420,6 +430,11 @@ class NetworkRun:
     wall_seconds: float           # steady-state execution only (no compile)
     circuits: tuple = ()          # (L,) per-layer circuit kind
     compile_seconds: float = 0.0  # one-time trace+compile of this program
+    checkpoint: Optional[Any] = None   # StreamCheckpoint when this chunk
+                                  # closed a checkpoint interval (streaming
+                                  # with checkpoint_every=; see
+                                  # repro.resilience.checkpoint); merge/
+                                  # StreamingRun ignore it
 
     def report(self) -> dict:
         """Aggregate per-layer energy/latency/events + network totals.
@@ -794,7 +809,8 @@ class NetworkEngine:
         return acc.result()
 
     def stream(self, stimulus, *, chunk_ticks: Optional[int] = None,
-               surrogates=None):
+               surrogates=None, checkpoint_every: Optional[int] = None,
+               resume_from=None):
         """Generator variant of :meth:`run_stream` for live consumers.
 
         Yields one :class:`NetworkRun` per chunk as its records land on
@@ -802,15 +818,50 @@ class NetworkEngine:
         only the final chunk carries ``flush_energy``. Feed the records to
         :class:`StreamingRun` / :meth:`NetworkRun.merge` for the exact
         whole-run record, or consume them incrementally (dashboards,
-        online monitors). Arguments as :meth:`run_stream`.
+        online monitors). Arguments as :meth:`run_stream`, plus:
+
+        checkpoint_every  attach a resumable
+                    :class:`~repro.resilience.checkpoint.StreamCheckpoint`
+                    to every Nth chunk's record (``.checkpoint``; the
+                    flush-bearing final chunk never carries one).
+                    Requires ``chunk_ticks`` — checkpoints sit at chunk
+                    boundaries so a resumed tail re-chunks (and reuses
+                    the compiled chunk program) exactly. Taking a
+                    checkpoint synchronizes on that chunk's carries (one
+                    device fetch) — that is its entire cost.
+        resume_from  a ``StreamCheckpoint`` (from a previous stream's
+                    record): restore carries/offset and continue. The
+                    caller re-supplies the FULL original stimulus — the
+                    consumed prefix is skipped — and only post-resume
+                    chunks are yielded; merge them onto
+                    ``resume_from.acc_run`` (``lasana.resume`` does) for
+                    the whole-run record, bit-identical to the
+                    uninterrupted run.
 
         Argument errors (bad ``chunk_ticks``, array-stimulus shape
-        mismatch, missing surrogates) raise HERE, not at the first
-        ``next()`` — a dropped or late-consumed generator must not hide
-        them."""
+        mismatch, missing surrogates, checkpoint/engine mismatch) raise
+        HERE, not at the first ``next()`` — a dropped or late-consumed
+        generator must not hide them."""
         spec = self.spec
         if chunk_ticks is not None and chunk_ticks <= 0:
             raise ValueError(f"chunk_ticks must be positive: {chunk_ticks}")
+        if checkpoint_every is not None:
+            if checkpoint_every <= 0:
+                raise ValueError("checkpoint_every must be positive: "
+                                 f"{checkpoint_every}")
+            if chunk_ticks is None:
+                raise ValueError(
+                    "checkpoint_every requires chunk_ticks: checkpoints "
+                    "sit at chunk boundaries")
+        if resume_from is not None:
+            resume_from.verify_engine(self, spec)
+            if chunk_ticks is None:
+                chunk_ticks = resume_from.chunk_ticks
+            elif chunk_ticks != resume_from.chunk_ticks:
+                raise ValueError(
+                    f"chunk_ticks {chunk_ticks} != checkpoint's "
+                    f"{resume_from.chunk_ticks}: the resumed tail must "
+                    "re-chunk exactly as the original stream")
         if hasattr(stimulus, "ndim"):
             if stimulus.ndim not in (2, 3):
                 raise ValueError("stimulus must be (T, B, n_in) or "
@@ -826,17 +877,22 @@ class NetworkEngine:
         else:
             static_banks = self._runtime_banks(surrogates)
         return self._stream_gen(stimulus, chunk_ticks, static_banks,
-                                sur_iter)
+                                sur_iter, checkpoint_every, resume_from)
 
-    def _stream_gen(self, stimulus, chunk_ticks, static_banks, sur_iter):
+    def _stream_gen(self, stimulus, chunk_ticks, static_banks, sur_iter,
+                    checkpoint_every=None, resume_from=None):
+        from repro.resilience import faults
         spec = self.spec
         chunks = _iter_chunks(stimulus, chunk_ticks,
-                              spec.layers[0].fan_in)
+                              spec.layers[0].fan_in,
+                              skip_ticks=(resume_from.k0
+                                          if resume_from is not None else 0))
 
         cur = next(chunks, None)
         if cur is None:
             raise ValueError("streaming run needs at least one stimulus "
-                             "tick")
+                             "tick" + (" past the checkpoint offset"
+                                       if resume_from is not None else ""))
         b = cur.shape[1]
         self._check_mesh_batch(b)
         n_layers = spec.n_layers
@@ -844,17 +900,32 @@ class NetworkEngine:
         carries = [self._init_carry(i, b) for i in range(n_layers)]
         prev_ys = [jnp.zeros((b, l.n_out), jnp.float32)
                    for l in spec.layers]
+        k0 = 0
+        if resume_from is not None:
+            carries, prev_ys = self._restore_state(resume_from, carries,
+                                                   prev_ys, b)
+            k0 = int(resume_from.k0)
         banks_dev = None
         if sur_iter is None:
             banks_dev = self._donatable_banks(static_banks)
 
+        # checkpoint bookkeeping: the accumulator mirrors every yielded
+        # record so a checkpoint can carry the exact merged prefix; a
+        # snapshot taken at dispatch time attaches to ITS chunk's record
+        # when that record is finalized one iteration later
+        acc = None
+        if checkpoint_every is not None:
+            acc = StreamingRun()
+            if resume_from is not None:
+                acc.update(resume_from.acc_run)
+        ckpt_pending = None            # (carry snapshot, prev snapshot, k0)
+
         mark = time.time()             # segment boundary for wall split
         comp_seg = 0.0                 # compile seconds in current segment
         pending = None                 # prior chunk's device refs + meta
-        k0 = 0
 
-        def finalize(pend, flush):
-            nonlocal mark, comp_seg
+        def finalize(pend, flush, attach_ckpt=True):
+            nonlocal mark, comp_seg, ckpt_pending
             primary, out_seq, hidden, e_tl, l_tl, ev_tl, comp_s = pend
             if not last_lif:
                 out_seq = None       # unused (primary == last tick's codes):
@@ -864,7 +935,7 @@ class NetworkEngine:
             now = time.time()
             wall = max(now - mark - comp_seg, 0.0)
             mark, comp_seg = now, 0.0
-            return NetworkRun(
+            run = NetworkRun(
                 backend=self.backend, mode=self.mode,
                 outputs=np.asarray(primary),
                 out_spikes=np.asarray(out_seq) if last_lif else None,
@@ -877,10 +948,19 @@ class NetworkEngine:
                                        for l in spec.layers]),
                 clock_ns=self.clock_ns, wall_seconds=wall,
                 circuits=spec.circuits, compile_seconds=comp_s)
+            if acc is not None:
+                acc.update(run)
+                if ckpt_pending is not None and attach_ckpt:
+                    snap_c, snap_p, snap_k = ckpt_pending
+                    ckpt_pending = None
+                    run.checkpoint = self._make_checkpoint(
+                        snap_c, snap_p, snap_k, int(chunk_ticks), b, acc)
+            return run
 
         inflight = None               # latest dispatched chunk's device refs
         try:
             while cur is not None:
+                faults.stall("chunk.stall")
                 x_chunk = jnp.asarray(cur, jnp.float32)
                 if x_chunk.shape[1] != b:
                     raise ValueError(
@@ -911,6 +991,15 @@ class NetworkEngine:
                                    np.zeros((n_layers,), np.float32))
                 pending = (*outs[:6], comp_s)
                 k0 += tc
+                if acc is not None:
+                    n_chunk = k0 // int(chunk_ticks) \
+                        + bool(k0 % int(chunk_ticks))
+                    if n_chunk % checkpoint_every == 0:
+                        # synchronizing on this chunk's carries is the
+                        # checkpoint's whole cost; the snapshot attaches
+                        # to this chunk's record at its finalize
+                        ckpt_pending = (*jax.device_get((carries,
+                                                         prev_ys)), k0)
                 if k0 > 2 ** 24 and k0 - tc <= 2 ** 24:
                     # the simulator's time axis (tick index,
                     # LasanaState.t_last) is f32: past 2^24 ticks consecutive
@@ -936,7 +1025,9 @@ class NetworkEngine:
                     flush_fn(carries, t_ends, banks_dev)))
             else:
                 flush = np.zeros((n_layers,), np.float32)
-            yield finalize(pending, flush)
+            # the final chunk never carries a checkpoint: its record holds
+            # the end-of-run flush, which a resumed tail would re-charge
+            yield finalize(pending, flush, attach_ckpt=False)
         finally:
             # a consumer that breaks / cancels mid-stream closes this
             # generator at a yield with one chunk still in flight on
@@ -944,6 +1035,58 @@ class NetworkEngine:
             # carries settle and the engine is immediately reusable
             if inflight is not None:
                 jax.block_until_ready(inflight)
+
+    def _restore_state(self, ckpt, init_carries, init_prev, b: int):
+        """Rebuild device carries/prev_ys from a checkpoint's host leaves.
+
+        ``init_carries``/``init_prev`` are fresh tick-0 structures for
+        batch ``b`` — they supply the pytree treedefs (and the shape
+        oracle) that the flat npz leaves are poured back into. Shape
+        mismatches fail loudly here, at resume, not as silent divergence
+        mid-stream."""
+        if ckpt.batch != b:
+            raise ValueError(f"checkpoint batch {ckpt.batch} != stimulus "
+                             f"batch {b}")
+        flat, treedef = jax.tree_util.tree_flatten(init_carries)
+        if len(ckpt.carry_leaves) != len(flat):
+            raise ValueError(
+                f"checkpoint has {len(ckpt.carry_leaves)} carry leaves, "
+                f"engine expects {len(flat)} — different network or "
+                "backend")
+        leaves = []
+        for ref, leaf in zip(flat, ckpt.carry_leaves):
+            if tuple(ref.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"checkpoint carry leaf shape {tuple(np.shape(leaf))} "
+                    f"!= engine's {tuple(ref.shape)}")
+            leaves.append(jnp.asarray(leaf, ref.dtype))
+        carries = jax.tree_util.tree_unflatten(treedef, leaves)
+        if len(ckpt.prev_ys) != len(init_prev):
+            raise ValueError(
+                f"checkpoint has {len(ckpt.prev_ys)} prev_ys entries, "
+                f"engine expects {len(init_prev)}")
+        prev_ys = []
+        for ref, p in zip(init_prev, ckpt.prev_ys):
+            if tuple(ref.shape) != tuple(np.shape(p)):
+                raise ValueError(
+                    f"checkpoint prev_ys shape {tuple(np.shape(p))} != "
+                    f"engine's {tuple(ref.shape)}")
+            prev_ys.append(jnp.asarray(p, jnp.float32))
+        return carries, prev_ys
+
+    def _make_checkpoint(self, snap_carries, snap_prev, k0: int,
+                         chunk_ticks: int, b: int, acc):
+        """Freeze one dispatch-time snapshot into a StreamCheckpoint."""
+        from repro.resilience.checkpoint import StreamCheckpoint, spec_key_of
+        leaves = [np.asarray(l)
+                  for l in jax.tree_util.tree_flatten(snap_carries)[0]]
+        return StreamCheckpoint(
+            k0=int(k0), chunk_ticks=int(chunk_ticks), batch=int(b),
+            spec_key=spec_key_of(self.spec), backend=self.backend,
+            mode=self.mode, record_hidden=self.record_hidden,
+            carry_leaves=leaves,
+            prev_ys=[np.asarray(p) for p in snap_prev],
+            acc_run=acc.result())
 
     @staticmethod
     def _donatable_banks(banks):
@@ -1675,9 +1818,13 @@ class NetworkEngine:
         ``step`` tick-scan counts toward :attr:`compile_count`) and take
         surrogates as traced arguments, so same-structure hot-swaps and
         multiple co-resident surrogate versions share one executable."""
-        if self.backend != "lasana":
-            raise ValueError("slot_programs requires backend='lasana' "
-                             f"(got {self.backend!r})")
+        if self.backend not in ("lasana", "behavioral"):
+            # behavioral is the serve layer's graceful-degradation
+            # fallback (quarantined specs re-admit on the paper's
+            # annotation substrate); golden stays out — its ODE stepping
+            # is orders of magnitude off serving latency budgets
+            raise ValueError("slot_programs requires backend='lasana' or "
+                             f"'behavioral' (got {self.backend!r})")
         if self.mesh is not None:
             raise ValueError("slot_programs does not support mesh "
                              "sharding yet")

@@ -99,6 +99,17 @@ def microbatches_override():
     return int(env) if env else None
 
 
+def fault_plan_path():
+    """``REPRO_FAULT_PLAN``: path of a JSON fault-injection plan, or None.
+
+    The resilience layer (``repro.resilience.faults``) resolves the
+    ambient plan through this accessor — like every other knob, the raw
+    environment is read only here so the program auditor's env-discipline
+    pass keeps ``ops`` the single configuration reader. An empty value
+    means no ambient plan (injection sites are no-op pass-throughs)."""
+    return os.environ.get("REPRO_FAULT_PLAN") or None
+
+
 # --- trace-time dispatch accounting (the program auditor's hook) --------------
 #
 # Hot-path inference entrypoints (Surrogate.predict / predict_heads, the

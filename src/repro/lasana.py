@@ -44,6 +44,7 @@ from repro.core.network import (NetworkEngine, NetworkRun, NetworkSpec,
                                 StreamingRun)
 from repro.core.surrogate import (FORMAT_VERSION, Manifest, Surrogate,
                                   SurrogateLibrary)
+from repro.resilience.checkpoint import StreamCheckpoint
 
 __all__ = [
     "FORMAT_VERSION",
@@ -51,6 +52,7 @@ __all__ = [
     "DSEReport",
     "Manifest",
     "NetworkRun",
+    "StreamCheckpoint",
     "StreamingRun",
     "Surrogate",
     "SurrogateLibrary",
@@ -58,6 +60,7 @@ __all__ = [
     "engine",
     "explore",
     "load",
+    "resume",
     "save",
     "serve",
     "simulate",
@@ -279,7 +282,8 @@ def stream(spec: NetworkSpec, stimulus, *,
            chunk_ticks: Optional[int] = None, backend: str = "lasana",
            surrogates=None, mode: str = "standalone", mesh=None,
            record_hidden: bool = False,
-           fused_kernel: Optional[bool] = None):
+           fused_kernel: Optional[bool] = None,
+           checkpoint_every: Optional[int] = None):
     """Generator variant of :func:`simulate_stream` for live consumers.
 
     Yields one per-chunk :class:`NetworkRun` as its records land on the
@@ -288,12 +292,53 @@ def stream(spec: NetworkSpec, stimulus, *,
     :class:`StreamingRun` (or :meth:`NetworkRun.merge`) for the exact
     whole-run record, or consume them incrementally — live dashboards,
     online energy monitors, early stopping. ``fused_kernel`` as in
-    :func:`simulate`."""
+    :func:`simulate`.
+
+    ``checkpoint_every=N`` attaches a resumable
+    :class:`~repro.resilience.StreamCheckpoint` to every Nth chunk's
+    record (``run.checkpoint``; persist with ``.save(path)``). A killed
+    stream continues from its last checkpoint via :func:`resume`, and
+    the merged record is bit-identical to the uninterrupted run — see
+    docs/resilience.md. Requires ``chunk_ticks``."""
     return engine(spec, backend=backend, mode=mode, mesh=mesh,
                   record_hidden=record_hidden,
                   fused_kernel=fused_kernel).stream(
                       stimulus, chunk_ticks=chunk_ticks,
-                      surrogates=surrogates)
+                      surrogates=surrogates,
+                      checkpoint_every=checkpoint_every)
+
+
+def resume(checkpoint, spec: NetworkSpec, stimulus, *, surrogates=None,
+           mesh=None, fused_kernel: Optional[bool] = None,
+           checkpoint_every: Optional[int] = None) -> NetworkRun:
+    """Continue a checkpointed stream to completion and merge the record.
+
+    ``checkpoint`` is a :class:`~repro.resilience.StreamCheckpoint` (or a
+    path to one saved with ``.save``); ``spec`` and ``stimulus`` are the
+    ORIGINAL network spec and full stimulus — the checkpoint pins the
+    backend/mode/chunking and validates the spec's content hash, and the
+    already-consumed stimulus prefix is skipped. Returns the whole-run
+    :class:`NetworkRun`: the checkpoint's accumulated prefix merged with
+    the freshly streamed tail, **bit-identical** to the uninterrupted
+    run (discrete fields bitwise; energy within float tolerance), with
+    zero extra compiles on a warm engine — the tail re-chunks exactly,
+    so the donated-carry chunk program is reused as-is.
+
+    ``checkpoint_every`` re-arms checkpointing on the resumed tail
+    (multi-failure runs keep making progress)."""
+    from repro.resilience import StreamCheckpoint
+    if isinstance(checkpoint, str):
+        checkpoint = StreamCheckpoint.load(checkpoint)
+    eng = engine(spec, backend=checkpoint.backend, mode=checkpoint.mode,
+                 mesh=mesh, record_hidden=checkpoint.record_hidden,
+                 fused_kernel=fused_kernel)
+    acc = StreamingRun()
+    acc.update(checkpoint.acc_run)
+    for chunk in eng.stream(stimulus, surrogates=surrogates,
+                            resume_from=checkpoint,
+                            checkpoint_every=checkpoint_every):
+        acc.update(chunk)
+    return acc.result()
 
 
 def explore(candidates: CandidateSpec, surrogates, *,

@@ -1,0 +1,29 @@
+"""Resilience layer: deterministic fault injection + recovery machinery.
+
+Two halves, threaded through streaming (`core/network.py`), serving
+(`repro.serve`), and the `repro.lasana` facade:
+
+- :mod:`repro.resilience.faults` — seeded :class:`FaultPlan` schedules
+  driving named host-side injection sites (`REPRO_FAULT_PLAN` or
+  :func:`faults.use_plan`); every failure replayable from the seed.
+- :mod:`repro.resilience.checkpoint` — :class:`StreamCheckpoint`
+  chunk-boundary snapshots behind ``lasana.stream(checkpoint_every=)``
+  and ``lasana.resume``.
+
+See docs/resilience.md for the end-to-end semantics.
+"""
+
+from repro.resilience.checkpoint import CKPT_FORMAT_VERSION, StreamCheckpoint
+from repro.resilience.faults import (FAULT_SITES, FaultInjected, FaultPlan,
+                                     SiteSchedule, active_plan, use_plan)
+
+__all__ = [
+    "CKPT_FORMAT_VERSION",
+    "FAULT_SITES",
+    "FaultInjected",
+    "FaultPlan",
+    "SiteSchedule",
+    "StreamCheckpoint",
+    "active_plan",
+    "use_plan",
+]

@@ -16,13 +16,16 @@ from repro.serve.buckets import Bucket, BucketPolicy, spec_content_key
 from repro.serve.metrics import ServerMetrics
 from repro.serve.protocol import run_stdio
 from repro.serve.scheduler import Lane, RequestHandle
-from repro.serve.server import ServeConfig, ServerBusy, SimServer
-from repro.serve.store import ArtifactStore
+from repro.serve.server import (DeadlineExceeded, ServeConfig, ServerBusy,
+                                SimServer)
+from repro.serve.store import ArtifactError, ArtifactStore
 
 __all__ = [
+    "ArtifactError",
     "ArtifactStore",
     "Bucket",
     "BucketPolicy",
+    "DeadlineExceeded",
     "Lane",
     "RequestHandle",
     "ServeConfig",

@@ -24,6 +24,14 @@ class ServerMetrics:
         self.requests_completed = 0
         self.requests_rejected = 0      # backpressure (ServerBusy)
         self.requests_failed = 0        # per-request errors after submit
+        self.requests_retried = 0       # re-queued after a recoverable fault
+        self.requests_deadline_exceeded = 0   # expired in queue (subset of
+                                        # requests_failed: every expiry is
+                                        # terminal)
+        self.requests_degraded = 0      # completed on the behavioral
+                                        # fallback (subset of completed)
+        self.numerical_faults = 0       # NaN/Inf bursts quarantined
+        self.lane_hangs = 0             # watchdog-detected hung lane steps
         self.lanes_retired = 0          # idle lanes freed (or poisoned)
         self.chunks_total = 0           # lane steps executed
         self.ticks_live_total = 0       # live slot-ticks simulated
@@ -53,10 +61,21 @@ class ServerMetrics:
                 "requests_completed": self.requests_completed,
                 "requests_rejected": self.requests_rejected,
                 "requests_failed": self.requests_failed,
+                "requests_retried": self.requests_retried,
+                "requests_deadline_exceeded":
+                    self.requests_deadline_exceeded,
+                "requests_degraded": self.requests_degraded,
+                # derived, never stored: every submitted request ends in
+                # exactly one of completed/failed (retries are neither —
+                # the request stays in flight), so this cannot go
+                # negative while that accounting holds (tested in
+                # tests/test_serve.py)
                 "requests_in_flight": (self.requests_submitted
                                        - self.requests_completed
                                        - self.requests_failed),
                 "requests_per_sec": self.requests_completed / wall,
+                "numerical_faults": self.numerical_faults,
+                "lane_hangs": self.lane_hangs,
                 "lanes_retired": self.lanes_retired,
                 "chunks_total": self.chunks_total,
                 "ticks_live_total": self.ticks_live_total,

@@ -16,7 +16,10 @@ loop serves stdin/stdout (``python -m repro.serve``), a TCP socket
 ``{"op": "simulate", "spec": N, "surrogate": "name[@ver]",
    "stimulus": [[[...]]]}``
     submit one request and stream until done. Response carries the
-    merged record's headline numbers (outputs, energy, events, ticks).
+    merged record's headline numbers (outputs, energy, events, ticks)
+    plus a ``"degraded"`` flag (True when served by the behavioral
+    fallback). Optional ``"deadline_ms"`` / ``"max_retries"`` map to the
+    same-named ``submit`` arguments (see docs/resilience.md).
     Spec names resolve from this connection's registrations first, then
     the server-wide registry (names survive reconnects).
     ``"stimulus_spikes": {"t": T, "b": B, "rate": p, "seed": s}``
@@ -68,13 +71,15 @@ def _stimulus(req: dict, spec) -> np.ndarray:
             ).astype(np.float32) * amp
 
 
-def _summarize(run, req_id) -> dict:
+def _summarize(handle, req_id) -> dict:
+    run = handle.result()
     rep = run.report()["network"]
     out = {"ok": True,
            "outputs": np.asarray(run.outputs).tolist(),
            "energy_j": rep["energy_j"],
            "events": rep["events"],
-           "ticks": rep["ticks"]}
+           "ticks": rep["ticks"],
+           "degraded": bool(handle.degraded)}
     if req_id is not None:
         out["id"] = req_id
     return out
@@ -89,10 +94,15 @@ def _submit(server, req: dict, specs: dict):
         spec = server.spec(name)
     if spec is None:
         raise KeyError(f"no spec registered under {name!r}")
+    kw = {}
+    if req.get("deadline_ms") is not None:
+        kw["deadline_ms"] = float(req["deadline_ms"])
+    if req.get("max_retries") is not None:
+        kw["max_retries"] = int(req["max_retries"])
     return server.submit(
         spec, _stimulus(req, spec), surrogates=req["surrogate"],
         tenant=str(req.get("tenant", "default")),
-        mode=str(req.get("mode", "standalone"))), req.get("id")
+        mode=str(req.get("mode", "standalone")), **kw), req.get("id")
 
 
 def handle_op(server, obj: dict, specs: dict):
@@ -101,8 +111,14 @@ def handle_op(server, obj: dict, specs: dict):
     if op == "register_surrogate":
         import repro.lasana as lasana
         if "path" in obj:
-            artifact = lasana.load(obj["path"])
-        elif "train" in obj:
+            # lazy: the artifact loads on first resolve, so a corrupt
+            # file fails the requesting simulate (ArtifactError naming
+            # name@version + path), never this registration
+            version = server.register_surrogate_path(obj["name"],
+                                                     obj["path"])
+            return ({"ok": True, "name": obj["name"],
+                     "version": version}, True)
+        if "train" in obj:
             t = dict(obj["train"])
             circuit = t.pop("circuit", "lif")
             t.setdefault("families", ("mean", "linear"))
@@ -119,7 +135,7 @@ def handle_op(server, obj: dict, specs: dict):
         return {"ok": True, "name": obj["name"]}, True
     if op == "simulate":
         handle, req_id = _submit(server, obj, specs)
-        return _summarize(handle.result(), req_id), True
+        return _summarize(handle, req_id), True
     if op == "simulate_batch":
         handles, error = [], None
         for r in obj["requests"]:
@@ -128,7 +144,7 @@ def handle_op(server, obj: dict, specs: dict):
             except Exception as err:   # collect what WAS submitted — the
                 error = f"{type(err).__name__}: {err}"   # work is in
                 break                                    # flight either way
-        results = [_summarize(h.result(), rid) for h, rid in handles]
+        results = [_summarize(h, rid) for h, rid in handles]
         if error is not None:
             return {"ok": False, "error": error, "results": results}, True
         return {"ok": True, "results": results}, True

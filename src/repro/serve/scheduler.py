@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.network import NetworkRun
+from repro.resilience import faults
 
 
 class RequestHandle:
@@ -63,15 +64,24 @@ class RequestHandle:
         self._result = None
         self.wait_chunks = 0          # scheduler rounds spent queued
         self.surrogate_ref = None     # (name, version) when store-resolved
+        self.degraded = False         # served on the behavioral fallback
+        self.attempts = 0             # admissions consumed (1 + retries)
 
     def _push(self, chunk: NetworkRun):
         self._chunks.append(chunk)
         if self._on_chunk is not None:
             try:
+                faults.check("callback.explode")
                 self._on_chunk(chunk)
             except Exception as err:   # a user callback raising must fail
                 self._on_chunk = None  # ITS request, not the driver thread
                 self._fail(err)
+
+    def _reset_for_retry(self):
+        """Drop partial chunk records so a re-admission replays the whole
+        request — the merged result must match a clean solo run bitwise,
+        and chunks from the faulted attempt can never mix into it."""
+        self._chunks = []
 
     def _finish(self):
         self._result = NetworkRun.merge(self._chunks)
@@ -100,15 +110,19 @@ class RequestHandle:
 
 
 class _Active:
-    """One seated request: its handle, stimulus, slots, and tick window."""
+    """One seated request: its queue entry, slots, and tick window.
 
-    def __init__(self, handle: RequestHandle, stimulus: np.ndarray,
-                 slots: list, g0: int):
-        self.handle = handle
-        self.x = stimulus                # (T, b_req, fan_in) host array
+    Keeps the full ``_Queued`` so the server can requeue a quarantined
+    or fault-hit request for another attempt (retry-with-backoff) without
+    re-deriving its spec/surrogate resolution."""
+
+    def __init__(self, q, slots: list, g0: int):
+        self.q = q                       # server _Queued (for requeue)
+        self.handle = q.handle
+        self.x = q.stimulus              # (T, b_req, fan_in) host array
         self.slots = slots
         self.g0 = g0                     # global join tick
-        self.t_total = stimulus.shape[0]
+        self.t_total = self.x.shape[0]
 
     @property
     def g_end(self) -> int:
@@ -131,6 +145,13 @@ class Lane:
         # object is alive — holding it here pins the id for the lane's
         # lifetime (retirement drops key and reference together)
         self.surrogates = surrogates
+        # behavioral-backend lanes are the graceful-degradation fallback:
+        # every request they complete is flagged ``handle.degraded``
+        self.degraded = engine.backend == "behavioral"
+        # set by the server watchdog (timer thread) when this lane's step
+        # overran the hang limit: the step must not push records or count
+        # completions — its requests were already failed
+        self._poison = threading.Event()
         self.idle_rounds = 0             # rounds with no active requests
         self.programs = engine.slot_programs(self.width, self.chunk_ticks,
                                              surrogates)
@@ -157,13 +178,15 @@ class Lane:
     def occupancy(self) -> float:
         return 1.0 - len(self.free) / self.width
 
-    def admit(self, handle: RequestHandle, stimulus: np.ndarray) -> bool:
-        """Seat a request at the NEXT chunk boundary; False if full."""
-        b_req = stimulus.shape[1]
+    def admit(self, q) -> bool:
+        """Seat a queued request at the NEXT chunk boundary; False if full."""
+        b_req = q.stimulus.shape[1]
         if b_req > len(self.free):
             return False
         slots = [self.free.pop(0) for _ in range(b_req)]
-        self.active.append(_Active(handle, stimulus, slots, self.g))
+        self.active.append(_Active(q, slots, self.g))
+        q.handle.attempts += 1
+        q.handle.degraded = self.degraded
         return True
 
     def step(self) -> dict:
@@ -175,6 +198,10 @@ class Lane:
         the slots of requests that ended inside this chunk."""
         if not self.active:
             return {}
+        faults.check("lane.step")        # injected driver-visible failure
+        faults.stall("chunk.stall")      # injected slow chunk (watchdog)
+        if self._poison.is_set():        # the watchdog killed this lane
+            return {}                    # while we were stuck above
         t0 = time.time()
         tc, width = self.chunk_ticks, self.width
         g = self.g
@@ -203,6 +230,24 @@ class Lane:
         primary, out_seq, hidden, e_tlb, l_tlb, ev_tlb = jax.device_get(
             outs[:6])
         self._carries, self._prev, self._banks = outs[6], outs[7], outs[8]
+        if self._poison.is_set():
+            # the watchdog failed this lane's requests mid-dispatch:
+            # records of a hung step are dead — push and count nothing
+            return {}
+
+        if faults.should_fire("surrogate.nan"):
+            # host-side NaN burst into the fetched head outputs of ONE
+            # deterministic victim; device carries stay clean, so what is
+            # under test is the sentinel + quarantine + requeue path (a
+            # replay from scratch is exact), not NaN laundering
+            victim = self.active[int(faults.draw("surrogate.nan")
+                                     * len(self.active))
+                                 % len(self.active)]
+            e_tlb = np.array(e_tlb)      # device_get arrays may be
+            l_tlb = np.array(l_tlb)      # read-only views
+            e_tlb[:, :, victim.slots] = np.nan
+            l_tlb[:, :, victim.slots] = np.inf
+        quarantined = self._quarantine(primary, out_seq, e_tlb, l_tlb)
 
         leavers = [a for a in self.active if a.g_end <= g + tc]
         flushes = None
@@ -234,14 +279,53 @@ class Lane:
         stats = {"live_ticks": live_ticks, "events": events,
                  "occupancy": live_ticks / (tc * width),
                  "completed": len(leavers),
+                 "quarantined": quarantined,
                  "steady_seconds": time.time() - t0}
         if self.metrics is not None:
             self.metrics.add(chunks_total=1, ticks_live_total=live_ticks,
                              events_total=events,
                              occupancy_sum=stats["occupancy"],
                              steady_seconds=stats["steady_seconds"],
-                             requests_completed=len(leavers))
+                             requests_completed=len(leavers),
+                             requests_degraded=(len(leavers)
+                                                if self.degraded else 0))
         return stats
+
+    def _quarantine(self, primary, out_seq, e_tlb, l_tlb) -> list:
+        """Evict requests whose OWN slot outputs went non-finite.
+
+        The NaN/Inf sentinel on the fetched head outputs attributes the
+        burst per request over its disjoint slot set: only offending
+        requests are unseated (slots freed, their end-ticks zeroed so the
+        live mask goes dead next chunk) and returned for the server to
+        requeue or fail — no record is pushed for them, and co-tenants'
+        slices are untouched, so their merged records stay bitwise
+        identical to a solo run. The whole-batch finiteness check is the
+        fast path: on clean chunks (the overwhelming majority) this is
+        one fused reduction, no per-request work."""
+        arrs = [e_tlb, l_tlb, np.asarray(out_seq)]
+        if self._last_lif:
+            arrs.append(np.asarray(primary))
+        if all(np.isfinite(v).all() for v in arrs):
+            return []
+        quarantined: list = []
+        for a in list(self.active):
+            S = a.slots
+            bad = (not np.isfinite(e_tlb[:, :, S]).all()
+                   or not np.isfinite(l_tlb[:, :, S]).all()
+                   or not np.isfinite(np.asarray(out_seq)[:, S]).all()
+                   or (self._last_lif
+                       and not np.isfinite(np.asarray(primary)[S]).all()))
+            if not bad:
+                continue
+            self.active.remove(a)
+            self.free.extend(S)
+            self._end_ks[S] = np.float32(0.0)   # live mask: dead next chunk
+            quarantined.append(a)
+        self.free.sort()
+        if quarantined and self.metrics is not None:
+            self.metrics.add(numerical_faults=len(quarantined))
+        return quarantined
 
     def _slice(self, a: _Active, rows: int, primary, out_seq, hidden,
                e_tlb, l_tlb, ev_tlb, flush) -> NetworkRun:

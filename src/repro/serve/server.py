@@ -35,11 +35,13 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import time
 from typing import Any, Optional
 
 import numpy as np
 
 from repro.core.network import MODES, NetworkSpec
+from repro.ft.watchdog import StepWatchdog
 from repro.serve.buckets import BucketPolicy, spec_content_key
 from repro.serve.metrics import ServerMetrics
 from repro.serve.scheduler import Lane, RequestHandle
@@ -48,6 +50,15 @@ from repro.serve.store import ArtifactStore
 
 class ServerBusy(RuntimeError):
     """Backpressure: the submit queue is at capacity — retry later."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's ``deadline_ms`` expired before it could be seated.
+
+    Raised from ``handle.result()``. Expiry is checked at admission (and
+    re-checked on every retry requeue), so an expired request fails fast
+    in the queue — it never occupies a lane slot, and never displaces
+    work that can still meet its own deadline."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +82,25 @@ class ServeConfig:
                     zero recompiles) — without retirement every (bucket,
                     surrogate version, mode) ever served would pin device
                     memory forever
+
+    Resilience knobs (see docs/resilience.md):
+
+    default_deadline_ms  per-request deadline when ``submit`` gives none;
+                    None = requests wait in queue indefinitely
+    max_retries     default re-admission budget after a recoverable fault
+                    (lane-step failure, NaN/Inf quarantine); a retried
+                    request replays from scratch so its merged record is
+                    exact. 0 = any fault is terminal for the request
+    retry_backoff_ms  delay before a faulted request may be re-admitted,
+                    doubled per attempt (the queue is never slept on —
+                    the request is simply skipped until its time)
+    degrade_after   surrogate faults on one spec before NEW admissions of
+                    that spec fall back to the behavioral backend
+                    (``handle.degraded`` + ``/stats`` flag them); None
+                    disables degradation
+    hang_timeout_s  watchdog limit on one lane step; a step exceeding it
+                    fails the lane's requests and drops the lane while
+                    the server keeps serving. None disables the watchdog
     """
 
     slot_widths: tuple = (4,)
@@ -80,13 +110,19 @@ class ServeConfig:
     record_hidden: bool = False
     poll_seconds: float = 0.01
     lane_idle_rounds: int = 50
+    default_deadline_ms: Optional[float] = None
+    max_retries: int = 0
+    retry_backoff_ms: float = 10.0
+    degrade_after: Optional[int] = 3
+    hang_timeout_s: Optional[float] = None
 
 
 class _Queued:
     """A submitted-but-not-yet-seated request."""
 
     def __init__(self, handle, spec_key, spec, stimulus, surrogates,
-                 sur_token, mode):
+                 sur_token, mode, *, deadline=None, retries_left=0,
+                 backoff_s=0.0):
         self.handle = handle
         self.spec_key = spec_key
         self.spec = spec
@@ -94,6 +130,10 @@ class _Queued:
         self.surrogates = surrogates
         self.sur_token = sur_token      # lane-identity of the artifact
         self.mode = mode
+        self.deadline = deadline        # monotonic seconds, or None
+        self.retries_left = retries_left
+        self.backoff_s = backoff_s      # next retry delay (doubles)
+        self.not_before = 0.0           # monotonic gate after a requeue
 
 
 class SimServer:
@@ -113,6 +153,16 @@ class SimServer:
         self._lanes: dict = {}                 # lane key -> Lane
         self._in_flight = 0                    # seated, unfinished
         self._next_id = 0
+        self._fault_counts: dict = {}          # spec_key -> surrogate faults
+        self._degraded: set = set()            # spec_keys on the fallback
+        self._hung: set = set()                # lane keys killed by watchdog
+        self._stepping_lane = None             # lane key inside lane.step()
+        self._step_count = 0                   # watchdog step generation
+        self._watchdog = None
+        if self.config.hang_timeout_s is not None:
+            self._watchdog = StepWatchdog(
+                hang_timeout=self.config.hang_timeout_s,
+                on_hang=self._on_hang)
         self._thread = None
         self._stop = threading.Event()
         self._closed = False
@@ -123,6 +173,16 @@ class SimServer:
                            version=None) -> int:
         """Store a surrogate under ``name``; returns its new version."""
         return self.store.register(name, surrogate, version=version)
+
+    def register_surrogate_path(self, name: str, path: str, *,
+                                version=None) -> int:
+        """Register an on-disk artifact lazily; returns its new version.
+
+        The file is read on first resolve, not here — a truncated or
+        corrupt artifact fails only the request that forced the load
+        (with :class:`~repro.serve.store.ArtifactError`), never the
+        registration or the server."""
+        return self.store.register_path(name, path, version=version)
 
     def register_spec(self, name: str, spec: NetworkSpec) -> str:
         """Name a spec for by-reference submission (wire protocol)."""
@@ -146,7 +206,9 @@ class SimServer:
     # --- submission -----------------------------------------------------------
 
     def submit(self, spec, stimulus, *, surrogates, tenant: str = "default",
-               mode: str = "standalone", on_chunk=None) -> RequestHandle:
+               mode: str = "standalone", on_chunk=None,
+               deadline_ms: Optional[float] = None,
+               max_retries: Optional[int] = None) -> RequestHandle:
         """Queue one simulation request; returns its handle immediately.
 
         spec        a :class:`NetworkSpec` or the name of a
@@ -161,6 +223,13 @@ class SimServer:
                     bound for other lanes)
         on_chunk    optional callback fired (from the driver thread) per
                     streamed chunk record
+        deadline_ms admission deadline: if the request is still queued
+                    when it expires, it fails fast with
+                    :class:`DeadlineExceeded` and never takes a slot
+                    (default: ``config.default_deadline_ms``)
+        max_retries re-admissions allowed after a recoverable fault; a
+                    retried request replays from scratch, so its merged
+                    record is exact (default: ``config.max_retries``)
 
         Raises :class:`ServerBusy` when the queue is full (backpressure)
         and ``ValueError`` for malformed requests — both synchronously,
@@ -191,6 +260,14 @@ class SimServer:
             sur_token = ref                     # (name, version)
         else:
             sur, sur_token = surrogates, ("<direct>", id(surrogates))
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be positive: {deadline_ms}")
+        deadline = (None if deadline_ms is None
+                    else time.monotonic() + deadline_ms / 1000.0)
+        if max_retries is None:
+            max_retries = self.config.max_retries
 
         with self._lock:
             depth = sum(len(q) for q in self._queues.values())
@@ -205,7 +282,9 @@ class SimServer:
             spec_c = self._canonical(spec)
             self._queues.setdefault(tenant, collections.deque()).append(
                 _Queued(handle, spec_content_key(spec_c), spec_c, x, sur,
-                        sur_token, mode))
+                        sur_token, mode, deadline=deadline,
+                        retries_left=int(max_retries),
+                        backoff_s=self.config.retry_backoff_ms / 1000.0))
             self.metrics.add(requests_submitted=1)
             self._wake.notify_all()
         return handle
@@ -225,14 +304,29 @@ class SimServer:
         live; retirement drops the key and the reference together."""
         import repro.lasana as lasana
         bucket = self.policy.bucket_for(q.spec_key, q.stimulus.shape[1])
-        key = (bucket.key, q.sur_token, q.mode)
+        with self._lock:
+            # graceful degradation: once a spec has burned through its
+            # surrogate-fault budget, NEW admissions go to a behavioral-
+            # backend lane (annotation substrate, no surrogate) — the
+            # flag is part of the lane key so degraded and healthy lanes
+            # never share carries or programs
+            degraded = q.spec_key in self._degraded
+        key = (bucket.key, q.sur_token, q.mode, degraded)
         with self._lock:
             lane = self._lanes.get(key)
         if lane is None:
-            eng = lasana.engine(q.spec, mode=q.mode,
-                                record_hidden=self.config.record_hidden)
-            lane = Lane(eng, q.spec, bucket, q.surrogates,
-                        metrics=self.metrics)
+            if degraded:
+                eng = lasana.engine(
+                    q.spec, backend="behavioral", mode=q.mode,
+                    record_hidden=self.config.record_hidden)
+                lane = Lane(eng, q.spec, bucket, None,
+                            metrics=self.metrics)
+            else:
+                eng = lasana.engine(
+                    q.spec, mode=q.mode,
+                    record_hidden=self.config.record_hidden)
+                lane = Lane(eng, q.spec, bucket, q.surrogates,
+                            metrics=self.metrics)
             lane.sur_token = q.sur_token
             with self._lock:
                 lane = self._lanes.setdefault(key, lane)
@@ -267,14 +361,26 @@ class SimServer:
                             or self._in_flight >= self.config.max_in_flight):
                         break
                     q = queue.popleft()
+                now = time.monotonic()
+                if q.deadline is not None and now > q.deadline:
+                    # fail fast IN the queue: an expired request never
+                    # takes a slot from work that can still make it
+                    self.metrics.add(requests_failed=1,
+                                     requests_deadline_exceeded=1)
+                    q.handle._fail(DeadlineExceeded(
+                        f"request {q.handle.id} missed its deadline "
+                        f"after {q.handle.wait_chunks} queued rounds"))
+                    continue
+                if q.not_before > now:
+                    skipped.append(q)      # retry backoff: not yet — the
+                    continue               # sweep never sleeps on it
                 try:
                     lane = self._lane_for(q)
                 except Exception as err:   # per-request failure, contained
                     self.metrics.add(requests_failed=1)
                     q.handle._fail(err)
                     continue
-                if (id(lane) in blocked
-                        or not lane.admit(q.handle, q.stimulus)):
+                if id(lane) in blocked or not lane.admit(q):
                     blocked.add(id(lane))
                     skipped.append(q)
                     continue
@@ -299,17 +405,86 @@ class SimServer:
                     self.metrics.note_wait(q.handle.wait_chunks)
         return admitted
 
+    def _requeue(self, q: _Queued, error: Exception) -> bool:
+        """Give a faulted request another attempt, if budget remains.
+
+        Clears the handle's partial chunks (a retry replays the request
+        from scratch, so the merged record stays exact), arms the
+        exponential backoff gate, and puts the request back at the FRONT
+        of its tenant's queue — bypassing ``max_queue``, which governs
+        NEW work, not work the server already accepted. With the retry
+        budget exhausted the handle fails with ``error``; returns whether
+        the request was requeued."""
+        if q.retries_left <= 0:
+            self.metrics.add(requests_failed=1)
+            q.handle._fail(error)
+            return False
+        q.retries_left -= 1
+        q.handle._reset_for_retry()
+        q.not_before = time.monotonic() + q.backoff_s
+        q.backoff_s *= 2.0
+        with self._lock:
+            self._queues.setdefault(q.handle.tenant,
+                                    collections.deque()).appendleft(q)
+        self.metrics.add(requests_retried=1)
+        return True
+
+    def _note_fault(self, spec_key: str):
+        """Count one surrogate fault against a spec; trip degradation.
+
+        At ``degrade_after`` faults the spec key joins ``_degraded``:
+        from then on NEW admissions of that spec build behavioral-backend
+        lanes (see :meth:`_lane_for`) — results stay available, flagged
+        ``degraded`` on handles and in ``/stats``."""
+        after = self.config.degrade_after
+        with self._lock:
+            n = self._fault_counts.get(spec_key, 0) + 1
+            self._fault_counts[spec_key] = n
+            if after is not None and n >= after:
+                self._degraded.add(spec_key)
+
+    def _on_hang(self):
+        """Watchdog callback (timer thread): a lane step blew past
+        ``hang_timeout_s``. Fail the hung lane's requests and drop the
+        lane NOW so their waiters unblock; the driver thread — still
+        stuck inside ``lane.step`` — finds the key in ``_hung`` when
+        (if) the step finally returns and discards its results."""
+        key = self._stepping_lane       # driver-write field; a racy read
+        if key is None:                 # at worst misses one borderline
+            return                      # hang, never fingers a wrong lane
+        with self._lock:
+            lane = self._lanes.pop(key, None)
+            if lane is None:
+                return
+            self._hung.add(key)
+            actives = list(lane.active)
+            self._in_flight -= len(actives)
+            self._wake.notify_all()
+        # poison before failing handles: if the stuck step eventually
+        # limps home it must push no records and count no completions
+        # (the requests below are already failed)
+        lane._poison.set()
+        self.metrics.add(lane_hangs=1, requests_failed=len(actives))
+        for a in actives:
+            a.handle._fail(RuntimeError(
+                f"request {a.handle.id} failed by the watchdog: lane "
+                f"step exceeded hang_timeout_s="
+                f"{self.config.hang_timeout_s}"))
+
     def step(self) -> bool:
         """One scheduling round: admit, advance live lanes, retire idle.
 
         Returns True when any work happened — the driver loop (or an
         external caller in un-threaded mode) idles when it returns
         False. A lane whose step fails mid-chunk has corrupted carries
-        for everyone seated in it: its requests fail and the lane is
-        dropped, but OTHER lanes (and the driver) keep serving. A lane
-        idle for ``lane_idle_rounds`` consecutive rounds is retired,
-        releasing its device-resident carries and banks; the engine's
-        compiled programs survive, so re-creation is compile-free."""
+        for everyone seated in it: its requests are requeued for a fresh
+        attempt (or failed once out of retries) and the lane is dropped,
+        but OTHER lanes (and the driver) keep serving. Requests the
+        NaN/Inf sentinel quarantined follow the same retry path, and
+        count toward their spec's degradation budget. A lane idle for
+        ``lane_idle_rounds`` consecutive rounds is retired, releasing
+        its device-resident carries and banks; the engine's compiled
+        programs survive, so re-creation is compile-free."""
         worked = self._admit()
         with self._lock:
             lanes = list(self._lanes.items())
@@ -321,24 +496,49 @@ class SimServer:
                     retired.append(key)
                 continue
             lane.idle_rounds = 0
+            hung = False
             try:
-                stats = lane.step()
+                try:
+                    if self._watchdog is not None:
+                        self._stepping_lane = key
+                        self._watchdog.step_begin()
+                    stats = lane.step()
+                finally:
+                    if self._watchdog is not None:
+                        self._step_count += 1
+                        self._watchdog.step_end(self._step_count)
+                        self._stepping_lane = None
+                    with self._lock:
+                        hung = key in self._hung
+                        self._hung.discard(key)
             except Exception as err:       # lane poisoned, server survives
-                n = len(lane.active)
-                for a in list(lane.active):
-                    a.handle._fail(err)
-                self.metrics.add(requests_failed=n)
+                if hung:                   # watchdog already failed these
+                    worked = True          # requests and dropped the lane
+                    continue
+                actives = list(lane.active)
                 with self._lock:
-                    self._in_flight -= n
+                    self._in_flight -= len(actives)
                     self._lanes.pop(key, None)
                     self._wake.notify_all()
+                for a in actives:
+                    self._requeue(a.q, err)
                 continue
+            if hung:
+                worked = True              # results of a hung step are
+                continue                   # dead: requests already failed
             if stats:
                 worked = True
                 with self._lock:
-                    self._in_flight -= stats["completed"]
+                    self._in_flight -= (stats["completed"]
+                                        + len(stats["quarantined"]))
                     if stats["completed"]:
                         self._wake.notify_all()
+                for a in stats["quarantined"]:
+                    self._note_fault(a.q.spec_key)
+                    self._requeue(a.q, RuntimeError(
+                        f"request {a.handle.id}: non-finite surrogate "
+                        "outputs (NaN/Inf burst) quarantined by the "
+                        "lane sentinel"))
         if retired:
             with self._lock:
                 for key in retired:
@@ -378,9 +578,11 @@ class SimServer:
                 self._fail_all(err)
                 raise
             if not worked:
+                # also parks when queued work is only backoff-gated
+                # retries: submissions and completions notify _wake, so
+                # the wait never delays genuinely admissible work
                 with self._wake:
-                    if not self._queues:
-                        self._wake.wait(self.config.poll_seconds)
+                    self._wake.wait(self.config.poll_seconds)
 
     def _fail_all(self, err: Exception):
         with self._lock:
@@ -439,9 +641,12 @@ class SimServer:
                 "occupancy": l.occupancy,
                 "active_requests": len(l.active),
                 "global_tick": l.g,
+                "degraded": l.degraded,
             } for key, l in self._lanes.items()]
+            degraded_specs = sorted(self._degraded)
         out = self.metrics.snapshot(queue_depth_by_bucket=by_bucket,
                                     lanes=lanes)
+        out["degraded_specs"] = degraded_specs
         out["compile_count"] = self.compile_count()
         out["n_lanes"] = len(lanes)
         out["surrogates"] = {n: self.store.versions(n)

@@ -17,6 +17,51 @@ from __future__ import annotations
 import threading
 
 from repro.core.surrogate import as_surrogate
+from repro.resilience import faults
+
+
+class ArtifactError(RuntimeError):
+    """A surrogate artifact failed to load or validate.
+
+    Raised (in place of raw ``zipfile``/``ValueError`` internals) when a
+    path-registered artifact turns out truncated or corrupt, naming the
+    ``name@version`` identity and the file path. Only the request that
+    forced the load sees it — the store entry stays resolvable-but-
+    broken, other names/versions are untouched."""
+
+
+def load_artifact(path: str, *, name=None, version=None):
+    """``lasana.load`` with corruption wrapped in :class:`ArtifactError`.
+
+    ``name``/``version`` give the error its artifact identity (lazy
+    path-registered entries resolve through here). A missing file keeps
+    its raw ``FileNotFoundError`` (it already names every path tried);
+    everything else — bad zip, short read, version mismatch, missing
+    manifest — becomes one clean ArtifactError with the cause chained.
+    Injection site ``artifact.load`` fires here."""
+    ref = name if version is None else f"{name}@{version}"
+    import repro.lasana as lasana
+    try:
+        faults.check("artifact.load")
+        return lasana.load(path)
+    except FileNotFoundError:
+        raise
+    except Exception as err:
+        who = f"artifact {ref!r} " if name else "artifact "
+        raise ArtifactError(
+            f"{who}at {path!r} is corrupt or unreadable "
+            f"({type(err).__name__}: {err}); re-save it with "
+            "lasana.save / Surrogate.save") from err
+
+
+class _LazyArtifact:
+    """A path-registered artifact not yet loaded (see
+    :meth:`ArtifactStore.register_path`)."""
+
+    __slots__ = ("path",)
+
+    def __init__(self, path: str):
+        self.path = path
 
 
 def parse_ref(ref: str) -> tuple:
@@ -71,13 +116,39 @@ class ArtifactStore:
             versions[version] = surrogate
         return version
 
+    def register_path(self, name: str, path: str, *, version=None) -> int:
+        """Register an on-disk ``.npz`` artifact lazily; returns version.
+
+        The file is NOT read here: the first request that resolves this
+        version loads it (through :func:`load_artifact`), so a truncated
+        or corrupt file fails only that requesting caller — with a clean
+        :class:`ArtifactError` naming ``name@version`` and the path —
+        and never the registration, the server, or other artifacts. A
+        successful load is cached in place; later resolves are free."""
+        if not name or "@" in name:
+            raise ValueError(f"artifact name must be non-empty and "
+                             f"'@'-free: {name!r}")
+        with self._lock:
+            versions = self._artifacts.setdefault(name, {})
+            if version is None:
+                version = max(versions, default=0) + 1
+            version = int(version)
+            if version in versions:
+                raise ValueError(
+                    f"{name}@{version} already registered; surrogate "
+                    "versions are immutable — register a new version")
+            versions[version] = _LazyArtifact(path)
+        return version
+
     def resolve(self, ref: str) -> tuple:
         """``"name[@version]"`` -> ((name, version), surrogate).
 
         A bare name resolves to the LATEST version at call time — the
         hot-swap default — while the pinned identity is returned so a
         request's records stay attributed to the exact artifact that
-        produced them."""
+        produced them. Path-registered entries load on first resolve
+        (outside the store lock; see :meth:`register_path`) and raise
+        :class:`ArtifactError` to THIS caller when the file is corrupt."""
         name, version = parse_ref(ref)
         with self._lock:
             versions = self._artifacts.get(name)
@@ -88,7 +159,16 @@ class ArtifactStore:
             if version not in versions:
                 raise KeyError(f"{name}@{version} not registered "
                                f"(have {sorted(versions)})")
-            return (name, version), versions[version]
+            entry = versions[version]
+        if isinstance(entry, _LazyArtifact):
+            loaded = load_artifact(entry.path, name=name, version=version)
+            with self._lock:
+                # another resolver may have raced the load; first one wins
+                # so every request sees ONE loaded object
+                entry = self._artifacts[name][version]
+                if isinstance(entry, _LazyArtifact):
+                    self._artifacts[name][version] = entry = loaded
+        return (name, version), entry
 
     def get(self, name: str, version=None):
         ref = name if version is None else f"{name}@{version}"

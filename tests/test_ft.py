@@ -29,6 +29,52 @@ def test_watchdog_flags_straggler():
     assert wd.stragglers == 1
 
 
+def test_watchdog_uses_monotonic_clock(monkeypatch):
+    """A wall-clock jump must not corrupt timing: the watchdog never
+    reads time.time() (NTP slew / manual reset immunity)."""
+    import time
+
+    def _wall_clock_banned():
+        raise AssertionError("watchdog read time.time()")
+
+    monkeypatch.setattr(time, "time", _wall_clock_banned)
+    wd = StepWatchdog(hang_timeout=1e9)
+    wd.step_begin()
+    out = wd.step_end(0)
+    assert out["step_seconds"] >= 0.0
+
+
+def test_watchdog_hang_fires_once_for_real_hang():
+    import time
+    fired = []
+    wd = StepWatchdog(hang_timeout=0.02, on_hang=lambda: fired.append(1))
+    wd.step_begin()
+    time.sleep(0.15)                 # step genuinely overruns the limit
+    assert fired == [1]
+    assert wd.hangs == 1
+    wd.step_end(0)                   # completion after the fire is fine
+
+
+def test_watchdog_never_fires_after_completion():
+    """The step_end/timer race: a timer thread already past its wait when
+    cancel lands must still see the step closed (generation + open flag
+    re-checked under the lock) and stay silent."""
+    import time
+    fired = []
+    wd = StepWatchdog(hang_timeout=60.0, on_hang=lambda: fired.append(1))
+    wd.step_begin()
+    gen = wd._gen
+    wd.step_end(0)
+    # simulate the losing timer thread firing after cancel was too late
+    wd._fire(gen)
+    assert fired == [] and wd.hangs == 0
+    # a stale generation must also be inert while a NEW step is open
+    wd.step_begin()
+    wd._fire(gen)                    # old gen, new step in flight
+    assert fired == [] and wd.hangs == 0
+    wd.step_end(1)
+
+
 def _run_train(tmp, devices, extra):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"

@@ -1,0 +1,566 @@
+"""Deterministic fault injection + end-to-end recovery (ISSUE-10).
+
+Acceptance properties:
+
+  * fault plans are replayable: firing is a pure function of (seed,
+    per-site invocation ordinal) — never wall clock or interleaving —
+    and round-trips through JSON;
+  * stream checkpoint/resume: a run killed at a chunk-boundary
+    checkpoint and resumed on a FRESH engine merges bit-identical to the
+    uninterrupted monolithic run (discrete records bitwise, energy
+    rtol 1e-5) with ZERO extra compiled programs on a warm engine;
+  * serve deadlines: an expired request fails fast with
+    ``DeadlineExceeded`` from the queue — it never occupies a slot;
+  * serve retries: a lane-step fault or NaN/Inf quarantine requeues the
+    request with backoff; a retried request replays from scratch, so its
+    merged record still matches a solo run exactly, and co-tenants of a
+    quarantined request keep records bitwise identical to solo;
+  * graceful degradation: after ``degrade_after`` surrogate faults on a
+    spec, new admissions serve on the behavioral backend, flagged
+    ``degraded`` on the handle and in ``/stats``;
+  * watchdog: a lane step hung past ``hang_timeout_s`` fails only its
+    own requests while the server keeps serving;
+  * artifact quarantine: a corrupt on-disk surrogate fails only the
+    requesting caller, with ``ArtifactError`` naming ``name@version``
+    and the path.
+
+Every test pins its own plan via ``faults.use_plan`` (shadowing any
+ambient ``REPRO_FAULT_PLAN``), so this file behaves identically under
+tier-1 and under the CI faults leg; the final sentinel test drives the
+canned CI plan (or the ambient env plan when one is set) through a
+workload that fires EVERY site at least once.
+"""
+
+import math
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.lasana as lasana
+from repro.core.network import snn_spec
+from repro.resilience import (FAULT_SITES, FaultInjected, FaultPlan,
+                              SiteSchedule, StreamCheckpoint, faults)
+from repro.serve import (ArtifactError, DeadlineExceeded, ServeConfig,
+                         SimServer)
+
+CHUNK = 8
+PARAMS = [0.58, 0.5, 0.5, 0.5]
+_CI_PLAN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "data", "fault_plan_ci.json")
+
+
+def _make_spec(seed=0):
+    k1, k2 = jax.random.PRNGKey(seed), jax.random.PRNGKey(seed + 100)
+    w1 = jax.random.normal(k1, (12, 8)) * 0.8
+    w2 = jax.random.normal(k2, (8, 4)) * 0.8
+    return snn_spec([w1, w2], [jnp.asarray(PARAMS)] * 2)
+
+
+def _stim(rng, t, b, n_in=12, rate=0.2, amp=1.5):
+    return (rng.random((t, b, n_in)) < rate).astype(np.float32) * amp
+
+
+def _assert_runs_equal(a, b, *, energy_rtol=1e-5):
+    np.testing.assert_array_equal(a.outputs, b.outputs)
+    np.testing.assert_array_equal(a.events, b.events)
+    if a.out_spikes is not None:
+        np.testing.assert_array_equal(a.out_spikes, b.out_spikes)
+    np.testing.assert_allclose(a.energy, b.energy, rtol=energy_rtol,
+                               atol=0)
+    np.testing.assert_allclose(a.latency, b.latency, rtol=energy_rtol,
+                               atol=1e-6)
+    np.testing.assert_allclose(a.flush_energy, b.flush_energy,
+                               rtol=energy_rtol, atol=0)
+
+
+@pytest.fixture(scope="module")
+def lif_surrogate(lif_bank):
+    return lif_bank.to_surrogate()
+
+
+@pytest.fixture(scope="module")
+def shared_spec():
+    return _make_spec(0)
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_faults():
+    """Isolation: each test opts into its own plan; the ambient env plan
+    (CI faults leg) is consumed only by the sentinel test below."""
+    with faults.use_plan(None):
+        yield
+
+
+# --- fault-plan semantics -----------------------------------------------------
+
+def test_plan_fires_are_deterministic():
+    def pattern(seed):
+        plan = FaultPlan(seed, {"lane.step": {"rate": 0.3},
+                                "chunk.stall": {"at": [2, 5]}})
+        return ([plan.should_fire("lane.step") for _ in range(50)],
+                [plan.should_fire("chunk.stall") for _ in range(8)])
+    lane_a, stall_a = pattern(7)
+    lane_b, stall_b = pattern(7)
+    assert lane_a == lane_b and any(lane_a) and not all(lane_a)
+    assert stall_a == stall_b
+    assert [i for i, f in enumerate(stall_a) if f] == [2, 5]
+    lane_c, _ = pattern(8)
+    assert lane_c != lane_a                 # seed actually matters
+
+
+def test_plan_at_hits_never_shift_the_rate_stream():
+    """The rate draw is consumed unconditionally, so adding explicit
+    'at' indices cannot change which OTHER ordinals rate-fire."""
+    base = FaultPlan(3, {"lane.step": {"rate": 0.2}})
+    with_at = FaultPlan(3, {"lane.step": {"rate": 0.2, "at": [0]}})
+    a = [base.should_fire("lane.step") for _ in range(40)]
+    b = [with_at.should_fire("lane.step") for _ in range(40)]
+    assert b[0] and a[1:] == b[1:]
+
+
+def test_plan_max_fires_bounds_disruption():
+    plan = FaultPlan(0, {"chunk.stall": {"rate": 1.0, "max_fires": 2}})
+    fires = [plan.should_fire("chunk.stall") for _ in range(10)]
+    assert sum(fires) == 2 and fires[:2] == [True, True]
+
+
+def test_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(11, {"surrogate.nan": {"at": [1], "rate": 0.5,
+                                            "max_fires": 4}},
+                     stall_seconds=0.5)
+    path = plan.save(str(tmp_path / "plan.json"))
+    back = FaultPlan.load(path)
+    assert back.seed == 11 and back.stall_seconds == 0.5
+    assert back.sites["surrogate.nan"] == SiteSchedule(
+        at=(1,), rate=0.5, max_fires=4)
+    a = [plan.should_fire("surrogate.nan") for _ in range(30)]
+    b = [back.should_fire("surrogate.nan") for _ in range(30)]
+    assert a == b
+
+
+def test_plan_rejects_unknown_site_and_newer_format():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(0, {"lane.stepp": {"rate": 0.1}})
+    with pytest.raises(ValueError, match="newer than supported"):
+        FaultPlan.from_json({"format_version": 99, "seed": 0})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(0, {}).should_fire("not.a.site")
+
+
+def test_hooks_are_noops_without_a_plan():
+    assert faults.active_plan() is None     # autouse fixture pins None
+    assert not faults.should_fire("lane.step")
+    faults.check("lane.step")               # no raise
+    assert faults.stall() == 0.0
+    assert faults.draw("surrogate.nan") == 0.0
+
+
+# --- stream checkpoint / resume -----------------------------------------------
+
+def test_checkpoint_resume_bit_identical(lif_surrogate, shared_spec,
+                                         tmp_path):
+    """Kill-and-resume == uninterrupted run, with zero extra compiles.
+
+    A stream with ``checkpoint_every`` attaches carry snapshots at chunk
+    boundaries; cutting the run at EVERY available checkpoint and
+    resuming on a fresh engine must merge bit-identical to the
+    monolithic record (energy rtol 1e-5 for the float sums), and the
+    resumed tail re-chunks onto the same compiled stream program."""
+    rng = np.random.default_rng(42)
+    x = _stim(rng, 26, 3)
+    full = lasana.simulate(shared_spec, x, surrogates=lif_surrogate,
+                           record_hidden=False)
+    chunks = list(lasana.stream(shared_spec, x, surrogates=lif_surrogate,
+                                chunk_ticks=CHUNK, checkpoint_every=1))
+    assert len(chunks) == math.ceil(26 / CHUNK)
+    ckpts = [c.checkpoint for c in chunks]
+    assert all(c is not None for c in ckpts[:-1])
+    assert ckpts[-1] is None                # flush chunk never checkpoints
+    for i, ckpt in enumerate(ckpts[:-1]):
+        assert ckpt.k0 == (i + 1) * CHUNK
+        path = str(tmp_path / f"ck{i}.npz")
+        ckpt.save(path)
+        resumed = lasana.resume(path, shared_spec, x,
+                                surrogates=lif_surrogate)
+        _assert_runs_equal(full, resumed)
+    eng = lasana.engine(shared_spec, record_hidden=False)
+    before = eng.compile_count
+    again = lasana.resume(ckpts[0], shared_spec, x,
+                          surrogates=lif_surrogate)
+    _assert_runs_equal(full, again)
+    assert eng.compile_count == before      # ZERO extra compiled programs
+
+
+def test_checkpoint_verifies_engine_and_shapes(lif_surrogate, shared_spec,
+                                               tmp_path):
+    rng = np.random.default_rng(5)
+    x = _stim(rng, 16, 2)
+    chunks = list(lasana.stream(shared_spec, x, surrogates=lif_surrogate,
+                                chunk_ticks=CHUNK, checkpoint_every=1))
+    ckpt = chunks[0].checkpoint
+    with pytest.raises(ValueError, match="spec"):
+        lasana.resume(ckpt, _make_spec(9), x, surrogates=lif_surrogate)
+    path = str(tmp_path / "ck")
+    ckpt.save(path)
+    loaded = StreamCheckpoint.load(path)    # extension-optional
+    assert loaded.k0 == ckpt.k0 and loaded.backend == ckpt.backend
+    with pytest.raises(FileNotFoundError):
+        StreamCheckpoint.load(str(tmp_path / "missing"))
+
+
+def test_stream_completes_under_stall_faults(lif_surrogate, shared_spec):
+    """chunk.stall only slows chunks; records stay bit-identical."""
+    rng = np.random.default_rng(6)
+    x = _stim(rng, 16, 2)
+    clean = lasana.simulate_stream(shared_spec, x,
+                                   surrogates=lif_surrogate,
+                                   chunk_ticks=CHUNK)
+    plan = FaultPlan(0, {"chunk.stall": {"rate": 1.0, "max_fires": 2}},
+                     stall_seconds=0.01)
+    with faults.use_plan(plan):
+        stalled = lasana.simulate_stream(shared_spec, x,
+                                         surrogates=lif_surrogate,
+                                         chunk_ticks=CHUNK)
+    assert plan.fired["chunk.stall"] == 2
+    _assert_runs_equal(clean, stalled, energy_rtol=0)
+
+
+# --- serve deadlines ----------------------------------------------------------
+
+def test_deadline_expired_fails_fast_without_a_slot(lif_surrogate,
+                                                    shared_spec):
+    import time
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK))
+    h = srv.submit(shared_spec, _stim(np.random.default_rng(0), 8, 1),
+                   surrogates=lif_surrogate, deadline_ms=1.0)
+    time.sleep(0.02)                        # expire while still queued
+    srv.step()
+    with pytest.raises(DeadlineExceeded):
+        h.result(timeout=5)
+    stats = srv.stats()
+    assert stats["requests_deadline_exceeded"] == 1
+    assert stats["requests_failed"] == 1
+    assert stats["requests_in_flight"] == 0
+    assert stats["requests_completed"] == 0
+    assert srv.compile_count() == 0         # never seated, never compiled
+
+
+def test_deadline_validation(lif_surrogate, shared_spec):
+    srv = SimServer()
+    with pytest.raises(ValueError, match="deadline_ms"):
+        srv.submit(shared_spec, np.zeros((2, 1, 12), np.float32),
+                   surrogates=lif_surrogate, deadline_ms=-5)
+
+
+# --- serve retries + quarantine -----------------------------------------------
+
+def test_lane_step_fault_retries_and_recovers(lif_surrogate, shared_spec):
+    """One injected lane-step failure: the request is requeued with
+    backoff, replays on a fresh lane (no recompile — programs are cached
+    on the engine), and its record still matches the solo run."""
+    rng = np.random.default_rng(8)
+    x = _stim(rng, 12, 2)
+    solo = lasana.simulate(shared_spec, x, surrogates=lif_surrogate,
+                           record_hidden=False)
+    plan = FaultPlan(0, {"lane.step": {"at": [0]}})
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK,
+                                max_retries=2, retry_backoff_ms=1.0))
+    with faults.use_plan(plan):
+        h = srv.submit(shared_spec, x, surrogates=lif_surrogate)
+        srv.run_until_idle()
+    assert plan.fired["lane.step"] == 1
+    _assert_runs_equal(solo, h.result())
+    stats = srv.stats()
+    assert stats["requests_retried"] == 1
+    assert stats["requests_completed"] == 1
+    assert stats["requests_failed"] == 0
+    assert stats["requests_in_flight"] == 0
+    assert h.attempts == 2
+
+
+def test_lane_step_fault_without_retries_fails_request(lif_surrogate,
+                                                       shared_spec):
+    plan = FaultPlan(0, {"lane.step": {"at": [0]}})
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK,
+                                max_retries=0))
+    with faults.use_plan(plan):
+        h = srv.submit(shared_spec,
+                       _stim(np.random.default_rng(9), 8, 1),
+                       surrogates=lif_surrogate)
+        srv.run_until_idle()
+    with pytest.raises(FaultInjected):
+        h.result(timeout=5)
+    assert srv.stats()["requests_in_flight"] == 0
+
+
+def test_nan_quarantine_spares_cotenants(lif_surrogate, shared_spec):
+    """A NaN/Inf burst in one request's head outputs quarantines ONLY
+    that request; its co-tenant's merged record is bitwise identical to
+    running alone, and the victim's retry (full replay) is exact too."""
+    rng = np.random.default_rng(10)
+    xa, xb = _stim(rng, 20, 2), _stim(rng, 20, 2)
+    solo_a = lasana.simulate(shared_spec, xa, surrogates=lif_surrogate,
+                             record_hidden=False)
+    solo_b = lasana.simulate(shared_spec, xb, surrogates=lif_surrogate,
+                             record_hidden=False)
+    plan = FaultPlan(0, {"surrogate.nan": {"at": [0]}})
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK,
+                                max_retries=2, retry_backoff_ms=1.0))
+    with faults.use_plan(plan):
+        ha = srv.submit(shared_spec, xa, surrogates=lif_surrogate)
+        hb = srv.submit(shared_spec, xb, surrogates=lif_surrogate)
+        srv.run_until_idle()
+    assert plan.fired["surrogate.nan"] == 1
+    _assert_runs_equal(solo_a, ha.result())
+    _assert_runs_equal(solo_b, hb.result())
+    stats = srv.stats()
+    assert stats["numerical_faults"] == 1
+    assert stats["requests_retried"] == 1
+    assert stats["requests_completed"] == 2
+    assert stats["requests_in_flight"] == 0
+    assert {ha.attempts, hb.attempts} == {1, 2}   # exactly one victim
+
+
+# --- graceful degradation -----------------------------------------------------
+
+def test_degrades_to_behavioral_after_fault_budget(lif_surrogate,
+                                                   shared_spec):
+    """After ``degrade_after`` surrogate faults on a spec, NEW requests
+    for it serve on the behavioral backend — completed, flagged, and
+    matching a solo behavioral run bitwise."""
+    rng = np.random.default_rng(11)
+    x1, x2 = _stim(rng, 12, 1), _stim(rng, 12, 1)
+    plan = FaultPlan(0, {"surrogate.nan": {"at": [0]}})
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK,
+                                max_retries=0, degrade_after=1))
+    with faults.use_plan(plan):
+        h1 = srv.submit(shared_spec, x1, surrogates=lif_surrogate)
+        srv.run_until_idle()
+        with pytest.raises(RuntimeError, match="quarantined"):
+            h1.result(timeout=5)
+        h2 = srv.submit(shared_spec, x2, surrogates=lif_surrogate)
+        srv.run_until_idle()
+    assert h2.degraded and not h1.degraded
+    solo = lasana.simulate(shared_spec, x2, backend="behavioral",
+                           record_hidden=False)
+    _assert_runs_equal(solo, h2.result(), energy_rtol=1e-5)
+    stats = srv.stats()
+    assert stats["requests_degraded"] == 1
+    assert stats["degraded_specs"]          # spec key is published
+    assert any(l["degraded"] for l in stats["lanes"])
+    wire_degraded = [l["degraded"] for l in stats["lanes"]]
+    assert True in wire_degraded
+
+
+# --- watchdog -----------------------------------------------------------------
+
+def test_watchdog_fails_hung_lane_only(lif_surrogate, shared_spec):
+    """A lane step stalled past ``hang_timeout_s`` is detected by the
+    watchdog: its requests fail NOW (no request blocks forever) and the
+    server keeps serving subsequent work."""
+    rng = np.random.default_rng(12)
+    plan = FaultPlan(0, {"chunk.stall": {"at": [0], "max_fires": 1}},
+                     stall_seconds=0.6)
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK,
+                                hang_timeout_s=0.05))
+    with faults.use_plan(plan):
+        h1 = srv.submit(shared_spec, _stim(rng, 8, 1),
+                        surrogates=lif_surrogate)
+        srv.run_until_idle()
+        with pytest.raises(RuntimeError, match="watchdog"):
+            h1.result(timeout=5)
+        h2 = srv.submit(shared_spec, _stim(rng, 8, 1),
+                        surrogates=lif_surrogate)
+        srv.run_until_idle()
+    h2.result(timeout=5)                    # server survived the hang
+    stats = srv.stats()
+    assert stats["lane_hangs"] == 1
+    assert stats["requests_failed"] == 1
+    assert stats["requests_completed"] == 1
+    assert stats["requests_in_flight"] == 0
+
+
+# --- artifact quarantine (satellite: serve/store) -----------------------------
+
+def test_corrupt_artifact_fails_only_requester(lif_surrogate, tmp_path,
+                                               shared_spec):
+    corrupt = tmp_path / "bad.npz"
+    corrupt.write_bytes(b"PK\x03\x04 truncated garbage")
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK))
+    srv.register_surrogate("good", lif_surrogate)
+    assert srv.register_surrogate_path("bad", str(corrupt)) == 1
+    with pytest.raises(ArtifactError, match="bad@1") as exc:
+        srv.submit(shared_spec, np.zeros((2, 1, 12), np.float32),
+                   surrogates="bad")
+    assert "bad.npz" in str(exc.value)      # names the on-disk path
+    # only the requesting caller failed: the store, the server, and
+    # other artifacts are untouched
+    h = srv.submit(shared_spec,
+                   _stim(np.random.default_rng(13), 8, 1),
+                   surrogates="good")
+    srv.run_until_idle()
+    h.result(timeout=5)
+
+
+def test_valid_artifact_roundtrips_through_path_registration(
+        lif_surrogate, shared_spec, tmp_path):
+    path = str(tmp_path / "lif.npz")
+    lasana.save(lif_surrogate, path)
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK))
+    srv.register_surrogate_path("lif", path)
+    x = _stim(np.random.default_rng(14), 12, 2)
+    h = srv.submit(shared_spec, x, surrogates="lif")
+    srv.run_until_idle()
+    solo = lasana.simulate(shared_spec, x, surrogates=lif_surrogate,
+                           record_hidden=False)
+    _assert_runs_equal(solo, h.result())
+    assert h.surrogate_ref == ("lif", 1)
+
+
+def test_artifact_load_fault_site_wrapped(lif_surrogate, tmp_path):
+    from repro.serve.store import load_artifact
+    path = str(tmp_path / "ok.npz")
+    lasana.save(lif_surrogate, path)
+    plan = FaultPlan(0, {"artifact.load": {"at": [0]}})
+    with faults.use_plan(plan):
+        with pytest.raises(ArtifactError):
+            load_artifact(path, name="ok", version=1)
+        load_artifact(path, name="ok", version=1)   # next call is clean
+    assert plan.fired["artifact.load"] == 1
+
+
+def test_missing_artifact_keeps_raw_file_not_found(tmp_path):
+    from repro.serve.store import load_artifact
+    with pytest.raises(FileNotFoundError):
+        load_artifact(str(tmp_path / "never_saved"))
+
+
+# --- callback explosion -------------------------------------------------------
+
+def test_callback_explosion_fails_only_its_request(lif_surrogate,
+                                                   shared_spec):
+    rng = np.random.default_rng(15)
+    xa, xb = _stim(rng, 12, 1), _stim(rng, 12, 1)
+    solo_b = lasana.simulate(shared_spec, xb, surrogates=lif_surrogate,
+                             record_hidden=False)
+    plan = FaultPlan(0, {"callback.explode": {"at": [0]}})
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK))
+    with faults.use_plan(plan):
+        ha = srv.submit(shared_spec, xa, surrogates=lif_surrogate,
+                        on_chunk=lambda c: None)
+        hb = srv.submit(shared_spec, xb, surrogates=lif_surrogate)
+        srv.run_until_idle()
+    with pytest.raises(FaultInjected):
+        ha.result(timeout=5)
+    _assert_runs_equal(solo_b, hb.result())
+
+
+# --- metrics accounting (satellite: serve/metrics) ----------------------------
+
+def test_in_flight_never_negative_across_outcomes(lif_surrogate,
+                                                  shared_spec):
+    """requests_in_flight = submitted - completed - failed must hold (and
+    stay >= 0) across completion, rejection, deadline expiry, injected
+    faults with retries, and quarantine."""
+    import time
+    from repro.serve import ServerBusy
+    rng = np.random.default_rng(16)
+    plan = FaultPlan(0, {"lane.step": {"at": [0]},
+                         "surrogate.nan": {"at": [1]}})
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK,
+                                max_queue=2, max_retries=3,
+                                retry_backoff_ms=1.0))
+
+    def check():
+        s = srv.stats()
+        assert s["requests_in_flight"] >= 0
+        assert s["requests_in_flight"] == (s["requests_submitted"]
+                                           - s["requests_completed"]
+                                           - s["requests_failed"])
+        return s
+
+    with faults.use_plan(plan):
+        handles = [srv.submit(shared_spec, _stim(rng, 10, 1),
+                              surrogates=lif_surrogate,
+                              max_retries=3)
+                   for _ in range(2)]
+        with pytest.raises(ServerBusy):     # rejection: never in flight
+            srv.submit(shared_spec, _stim(rng, 10, 1),
+                       surrogates=lif_surrogate)
+        check()
+        srv.run_until_idle()
+        s = check()
+        assert s["requests_completed"] == 2
+        h = srv.submit(shared_spec, _stim(rng, 10, 1),
+                       surrogates=lif_surrogate, deadline_ms=1.0)
+        time.sleep(0.02)
+        srv.run_until_idle()
+        s = check()
+        assert s["requests_deadline_exceeded"] == 1
+    for hd in handles:
+        hd.result(timeout=5)
+    with pytest.raises(DeadlineExceeded):
+        h.result(timeout=5)
+    s = check()
+    assert s["requests_retried"] >= 1
+    assert s["requests_rejected"] == 1
+
+
+def test_metrics_snapshot_has_resilience_counters():
+    snap = SimServer().stats()
+    for key in ("requests_retried", "requests_deadline_exceeded",
+                "requests_degraded", "numerical_faults", "lane_hangs",
+                "degraded_specs"):
+        assert key in snap
+
+
+# --- the CI sentinel: every site fires ----------------------------------------
+
+def test_canned_plan_fires_every_site(lif_surrogate, shared_spec,
+                                      tmp_path):
+    """The faults CI leg's acceptance: driving a small workload under
+    the canned plan (or the ambient ``REPRO_FAULT_PLAN`` when one is
+    set) fires EVERY injection site at least once, no request leaks or
+    blocks forever, and every completed record is exact."""
+    with faults.use_plan(None):
+        env = None
+        from repro.kernels import ops
+        if ops.fault_plan_path():
+            env = FaultPlan.load(ops.fault_plan_path())
+    plan = env if env is not None else FaultPlan.load(_CI_PLAN)
+    rng = np.random.default_rng(17)
+    xs = [_stim(rng, 20, 1) for _ in range(3)]
+    solos = [lasana.simulate(shared_spec, x, surrogates=lif_surrogate,
+                             record_hidden=False) for x in xs]
+    art = str(tmp_path / "lif.npz")
+    lasana.save(lif_surrogate, art)
+    srv = SimServer(ServeConfig(slot_widths=(4,), chunk_ticks=CHUNK,
+                                max_retries=4, retry_backoff_ms=1.0))
+    srv.register_surrogate_path("lif", art)
+    with faults.use_plan(plan):
+        # artifact.load: first resolve fires -> ArtifactError; the next
+        # resolve loads clean (the store entry stays registered)
+        with pytest.raises(ArtifactError):
+            srv.submit(shared_spec, xs[0], surrogates="lif")
+        boom = srv.submit(shared_spec, xs[0], surrogates="lif",
+                          on_chunk=lambda c: None)   # callback.explode
+        handles = [srv.submit(shared_spec, x, surrogates="lif")
+                   for x in xs[1:]]
+        srv.run_until_idle()
+        # streaming consumes chunk.stall sites too
+        lasana.simulate_stream(shared_spec, xs[0],
+                               surrogates=lif_surrogate,
+                               chunk_ticks=CHUNK)
+    for site in FAULT_SITES:
+        assert plan.fired[site] >= 1, (site, plan.fired)
+    with pytest.raises(FaultInjected):      # the exploded callback
+        boom.result(timeout=5)
+    for x, h, solo in zip(xs[1:], handles, solos[1:]):
+        assert h.done                       # nothing leaked or hung
+        _assert_runs_equal(solo, h.result())
+    stats = srv.stats()
+    assert stats["requests_in_flight"] == 0
